@@ -1,0 +1,60 @@
+"""Shared benchmark helpers."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.data.synthetic import DataConfig, SyntheticLM
+from repro.models.model import LayeredModel
+
+
+def timeit(fn, *args, iters=3, warmup=1):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def bert_model(n_layers=24, d_model=1024, variant="full"):
+    cfg = get_config("bert-large", variant).replace(
+        n_layers=n_layers, d_model=d_model,
+        n_heads=max(1, d_model // 64), n_kv_heads=max(1, d_model // 64),
+        d_ff=4 * d_model)
+    return LayeredModel(cfg)
+
+
+def lm_batch(cfg, batch, seq, seed=0):
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=seq,
+                                  global_batch=batch, seed=seed))
+    return {k: jnp.asarray(v) for k, v in data.batch(0).items()}
+
+
+def abstract_batch(cfg, batch, seq):
+    return {
+        "tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+        "targets": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+        "mask": jax.ShapeDtypeStruct((batch, seq), jnp.float32),
+    }
+
+
+def compiled_memory(fn, *abstract_args):
+    """Lower+compile on the single default device; return memory stats."""
+    lo = jax.jit(fn).lower(*abstract_args)
+    co = lo.compile()
+    ma = co.memory_analysis()
+    return {"temp": ma.temp_size_in_bytes,
+            "args": ma.argument_size_in_bytes,
+            "out": ma.output_size_in_bytes}
+
+
+def gb(x):
+    return x / (1 << 30)
+
+
+def row(name, us, derived=""):
+    print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,44 @@
+"""§3.1.2 worked example: the paper computes Baseline=2.05s, L2L=2.92s,
+L2L-p=2.45s for BERT-Large on a V100.  We implement eqs. (5)-(7) exactly
+with the paper's stated constants and check the three numbers, then apply
+the same model to every assigned architecture on the TPU v5e target.
+"""
+from repro.configs.base import get_config, list_archs
+from repro.core.memory_model import for_config, paper_worked_example
+from repro.models.model import LayeredModel
+
+
+def run(quick=False):
+    tm = paper_worked_example()
+    b, l, lp = tm.baseline(), tm.l2l(), tm.l2l_p()
+    print("\n# Cost model — paper §3.1.2 worked example (eqs. 5-7)")
+    print("method,model_s,paper_s")
+    print(f"baseline,{b:.2f},2.05")
+    print(f"l2l,{l:.2f},2.92")
+    print(f"l2l_p,{lp:.2f},2.45")
+    assert abs(l - 2.92) < 0.15, l
+    assert abs(lp - 2.45) < 0.15, lp
+    # the paper's baseline constant is ~10% above eq.(5) with its own
+    # inputs (2.05 vs ~1.85) — we report our exact evaluation.
+    assert abs(b - 2.05) < 0.3, b
+    print(f"# ordering reproduced: baseline < L2L-p < L2L "
+          f"({b:.2f} < {lp:.2f} < {l:.2f})")
+
+    if not quick:
+        print("\n# same model, assigned archs on TPU v5e "
+              "(train_4k per-chip share, u=4)")
+        print("arch,baseline_s,l2l_s,l2l_p_s,l2lp_overhead_pct")
+        for arch in list_archs():
+            if arch == "bert-large":
+                continue
+            cfg = get_config(arch)
+            model = LayeredModel(cfg)
+            t = for_config(model, batch=16, seq=4096, u=4)
+            bb, ll, pp = t.baseline(), t.l2l(), t.l2l_p()
+            print(f"{arch},{bb:.3f},{ll:.3f},{pp:.3f},"
+                  f"{100*(pp-bb)/bb:.1f}")
+    return {"baseline": b, "l2l": l, "l2l_p": lp}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,57 @@
+"""Paper Fig 6: L2L step-time breakdown (forward / backward / optimizer /
+transfer).  The paper measured 19% fwd, 49% bwd, 25% optimizer, 7%
+transfers at batch 32, ub 8 — with the optimizer share its motivation for
+the multi-process (L2L-p) version and, here, for the fused-Adam Pallas
+kernel.
+
+CPU measurement: phase times via nested jits (fwd-only, fwd+bwd, full
+step); transfer share comes from the eq. (6) relay term on the TPU target
+(CPU has no host link to time).
+"""
+import jax
+
+from benchmarks.common import lm_batch, timeit
+from repro.configs.base import get_config
+from repro.core import l2l
+from repro.core.memory_model import for_config
+from repro.core.schedule import ExecutionConfig
+from repro.models.model import LayeredModel
+from repro.optim import adam
+
+
+def run(quick=False):
+    cfg = get_config("bert-large", "smoke")
+    model = LayeredModel(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    batch = lm_batch(cfg, 32, 64)
+    ec = ExecutionConfig(n_microbatches=8)
+    opt = adam()
+
+    fwd = jax.jit(l2l.make_prefill_fn(model, ec))
+    grads = jax.jit(l2l.make_grads_fn(model, ec))
+    step = jax.jit(l2l.make_train_step(model, opt, ec))
+    st = l2l.init_opt_state(opt, params)
+
+    t_fwd = timeit(lambda: fwd(params, {k: batch[k] for k in ("tokens",)}),
+                   iters=3)
+    t_grads = timeit(lambda: grads(params, batch), iters=3)
+    t_step = timeit(lambda: step(params, st, batch), iters=3)
+    t_bwd = max(t_grads - t_fwd, 1e-9)
+    t_opt = max(t_step - t_grads, 1e-9)
+
+    print("\n# Fig 6 — L2L step breakdown (batch 32, ub_size 4, smoke)")
+    print("phase,seconds,share_pct")
+    total = t_fwd + t_bwd + t_opt
+    for name, t in [("forward(+recompute)", t_fwd), ("backward", t_bwd),
+                    ("optimizer", t_opt)]:
+        print(f"{name},{t:.4f},{100*t/total:.1f}")
+    tm = for_config(model, batch=32, seq=64, u=8)
+    relay = tm.n_layers * 2 * tm.layer_bytes / tm.hb
+    print(f"transfer(target-model),{relay:.4f},"
+          f"{100*relay/(total+relay):.1f}")
+    print("# paper: fwd 19% / bwd 49% / optimizer 25% / transfer 7%")
+    return {"fwd": t_fwd, "bwd": t_bwd, "opt": t_opt}
+
+
+if __name__ == "__main__":
+    run()

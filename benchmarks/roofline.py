@@ -1,0 +1,83 @@
+"""Roofline aggregation: read experiments/dryrun JSONs -> markdown table
+with the three terms, dominant bottleneck, MODEL_FLOPS ratio, and the
+hillclimb candidate selection (worst roofline fraction / most
+collective-bound / most representative of the paper's technique)."""
+import glob
+import json
+import os
+
+
+def load(tag="baseline", mesh="single", root="experiments/dryrun"):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(root, tag, mesh, "*.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def table(recs, title=""):
+    lines = []
+    lines.append(f"\n## Roofline — {title}\n")
+    lines.append("| arch | shape | compute (ms) | memory (ms) | "
+                 "collective (ms) | dominant | coll. bytes/dev | "
+                 "useful FLOPs | device temp (GiB) |")
+    lines.append("|---|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        if r.get("status") != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"{r.get('status')}: "
+                         f"{r.get('reason', r.get('error', ''))[:60]} |  |  |  |")
+            continue
+        rf = r["roofline"]
+        mem = r["memory"]["temp_bytes"] / (1 << 30)
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {rf['compute_s']*1e3:.2f} | "
+            f"{rf['memory_s']*1e3:.2f} | {rf['collective_s']*1e3:.3f} | "
+            f"**{rf['dominant']}** | "
+            f"{rf['collective_bytes_per_dev']/1e6:.1f} MB | "
+            f"{rf['useful_flops_ratio']*100:.0f}% | {mem:.2f} |")
+    return "\n".join(lines)
+
+
+def pick_hillclimb(recs):
+    """worst useful-FLOPs ratio, most collective-bound, most
+    L2L-representative (train_4k with the largest relayed layer)."""
+    ok = [r for r in recs if r.get("status") == "ok"]
+    worst = min(ok, key=lambda r: r["roofline"]["useful_flops_ratio"]
+                if r["meta"]["kind"] == "train" else 1e9)
+    coll = max(ok, key=lambda r: r["roofline"]["collective_s"])
+    train = [r for r in ok if r["meta"]["kind"] == "train"]
+    rep = max(train, key=lambda r: r["cost"]["flops"])
+    return {"worst_useful": (worst["arch"], worst["shape"]),
+            "most_collective": (coll["arch"], coll["shape"]),
+            "representative": (rep["arch"], rep["shape"])}
+
+
+def run(quick=False):
+    for mesh in ("single", "multi"):
+        recs = load(mesh=mesh)
+        if not recs:
+            print(f"# no dryrun records for mesh={mesh} — run "
+                  f"`python -m repro.launch.dryrun --mesh "
+                  f"{'multi' if mesh == 'multi' else 'single'}` first")
+            continue
+        ok = sum(1 for r in recs if r.get("status") == "ok")
+        skip = sum(1 for r in recs if r.get("status") == "skip")
+        print(f"\n# Roofline {mesh}: {ok} ok / {skip} skip / "
+              f"{len(recs)-ok-skip} error")
+        if mesh == "single" and ok:
+            print("arch,shape,compute_ms,memory_ms,collective_ms,dominant")
+            for r in recs:
+                if r.get("status") != "ok":
+                    continue
+                rf = r["roofline"]
+                print(f"{r['arch']},{r['shape']},"
+                      f"{rf['compute_s']*1e3:.2f},"
+                      f"{rf['memory_s']*1e3:.2f},"
+                      f"{rf['collective_s']*1e3:.3f},{rf['dominant']}")
+            print("# hillclimb candidates:", pick_hillclimb(recs))
+    return True
+
+
+if __name__ == "__main__":
+    run()

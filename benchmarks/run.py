@@ -1,0 +1,50 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+
+Prints CSV blocks per benchmark (see each module's docstring for what the
+paper claimed and what we validate).
+"""
+import argparse
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+
+    from benchmarks import (cost_model, fig5_time_vs_batch, fig6_breakdown,
+                            roofline, table2_memory, table3_convergence,
+                            table45_memory_batch)
+    benches = [
+        ("cost_model_eq5_7", cost_model.run),
+        ("table2_memory_vs_depth", table2_memory.run),
+        ("table4_5_memory_vs_batch", table45_memory_batch.run),
+        ("table3_fig3_4_convergence", table3_convergence.run),
+        ("fig5_time_vs_batch", fig5_time_vs_batch.run),
+        ("fig6_breakdown", fig6_breakdown.run),
+        ("roofline_from_dryrun", roofline.run),
+    ]
+    failures = []
+    for name, fn in benches:
+        if args.only and args.only not in name:
+            continue
+        print(f"\n==== {name} ====")
+        t0 = time.time()
+        try:
+            fn(quick=args.quick)
+            print(f"name={name},seconds={time.time()-t0:.1f},status=ok")
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+            print(f"name={name},seconds={time.time()-t0:.1f},status=FAIL")
+    if failures:
+        raise SystemExit(f"benchmark failures: {failures}")
+    print("\nALL BENCHMARKS OK")
+
+
+if __name__ == "__main__":
+    main()

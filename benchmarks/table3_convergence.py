@@ -1,0 +1,69 @@
+"""Paper Table 3 / Figs 3-4: convergence of L2L vs baseline.
+
+The paper's finding: (a) L2L at batch 32 matches baseline-with-AG at
+batch 32 (same math — the curves coincide), and (b) both beat the
+baseline that can only fit device batch 2.  Reproduced at smoke scale on
+the synthetic GLUE-stand-in task.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.core import baseline as base_mod, l2l
+from repro.core.schedule import ExecutionConfig
+from repro.data.synthetic import DataConfig, SyntheticLM
+from repro.models.model import LayeredModel
+from repro.optim import adam, make_schedule
+
+
+def train(engine, batch, ub, steps, seed=0):
+    cfg = get_config("bert-large", "smoke")
+    model = LayeredModel(cfg)
+    params = model.init_params(jax.random.PRNGKey(seed))
+    opt = adam(lr=2e-3, schedule=make_schedule(2e-3, warmup=10))
+    ec = ExecutionConfig(n_microbatches=ub)
+    if engine == "l2l":
+        step = jax.jit(l2l.make_train_step(model, opt, ec))
+        st = l2l.init_opt_state(opt, params)
+    else:
+        step = jax.jit(base_mod.make_train_step(model, opt, ec))
+        st = base_mod.init_opt_state(opt, params)
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=64,
+                                  global_batch=batch, seed=seed))
+    losses = []
+    for i in range(steps):
+        b = {k: jnp.asarray(v) for k, v in data.batch(i).items()}
+        params, st, m = step(params, st, b)
+        losses.append(float(m["loss"]))
+    return np.asarray(losses)
+
+
+def run(quick=False):
+    steps = 30 if quick else 80
+    l2l_32 = train("l2l", batch=32, ub=16, steps=steps)
+    ag_32 = train("baseline", batch=32, ub=16, steps=steps)
+    base_2 = train("baseline", batch=2, ub=1, steps=steps)
+    print("\n# Table 3 / Fig 3-4 — convergence (synthetic task, smoke BERT)")
+    print("method,batch,final_loss,mean_last10")
+    for name, l in [("l2l", l2l_32), ("baseline_ag", ag_32),
+                    ("baseline_bs2", base_2)]:
+        print(f"{name},{32 if name != 'baseline_bs2' else 2},"
+              f"{l[-1]:.4f},{l[-10:].mean():.4f}")
+    k = min(25, steps)   # beyond ~50 steps fp-reassociation noise is
+    # amplified chaotically by the optimizer; exact step-level equivalence
+    # is asserted separately (tests/test_equivalence.py)
+    dev = float(np.max(np.abs(l2l_32[:k] - ag_32[:k])))
+    dev_full = float(np.max(np.abs(l2l_32 - ag_32)))
+    print(f"# |L2L - baseline_AG| gap: first {k} steps {dev:.2e}, "
+          f"full run {dev_full:.2e} (paper: curves coincide)")
+    print(f"# large-batch final {l2l_32[-10:].mean():.3f} vs bs2 "
+          f"{base_2[-10:].mean():.3f} (paper: batch 32 converges better)")
+    assert dev < 5e-2, "L2L and baseline-AG curves must coincide"
+    assert l2l_32[-10:].mean() < base_2[-10:].mean(), \
+        "batch-32 L2L should beat the batch-2 baseline"
+    return {"gap": dev}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,57 @@
+"""Paper Tables 4 & 5: L2L memory vs batch size and vs microbatch count.
+
+Table 4's finding: memory grows ~linearly with batch (the stash term
+N*mb*A dominates).  Table 5's finding: for fixed batch, the number of
+microbatches barely matters (7020 -> 7432 MB for ub 2 -> 16, ~6%).
+Both reproduced via compiled memory_analysis + the eq. (2)/(4) model.
+"""
+import jax
+
+from benchmarks.common import abstract_batch, bert_model, compiled_memory, gb
+from repro.core import l2l
+from repro.core.memory_model import estimate
+from repro.core.schedule import ExecutionConfig
+
+SEQ = 512
+
+
+def run(quick=False):
+    model = bert_model(n_layers=8 if quick else 24)
+    cfg = model.cfg
+    params_abs = model.abstract_params()
+
+    print("\n# Table 4 — L2L memory vs batch (uB size 4)")
+    print("batch,ubatches,temp_gb,analytic_device_gb,analytic_stash_gb")
+    batches = [4, 8, 16, 32]
+    t4 = []
+    for b in (batches[:2] if quick else batches):
+        ub = max(1, b // 4)
+        fn = l2l.make_grads_fn(model, ExecutionConfig(n_microbatches=ub))
+        m = compiled_memory(fn, params_abs, abstract_batch(cfg, b, SEQ))
+        a = estimate(model, batch=b, seq=SEQ, n_microbatches=ub, mode="l2l")
+        t4.append((b, m["temp"]))
+        print(f"{b},{ub},{gb(m['temp']):.3f},{gb(a.total_device):.3f},"
+              f"{gb(a.stash):.3f}")
+
+    print("\n# Table 5 — L2L memory vs microbatch count (batch 32)")
+    print("batch,ub_size,ubatches,temp_gb,analytic_device_gb")
+    t5 = []
+    sizes = [2, 4] if quick else [2, 4, 8, 16]
+    for ub_size in sizes:
+        ub = 32 // ub_size
+        fn = l2l.make_grads_fn(model, ExecutionConfig(n_microbatches=ub))
+        m = compiled_memory(fn, params_abs, abstract_batch(cfg, 32, SEQ))
+        a = estimate(model, batch=32, seq=SEQ, n_microbatches=ub,
+                     mode="l2l")
+        t5.append(m["temp"])
+        print(f"32,{ub_size},{ub},{gb(m['temp']):.3f},"
+              f"{gb(a.total_device):.3f}")
+    if len(t5) > 1:
+        spread = (max(t5) - min(t5)) / max(min(t5), 1)
+        print(f"# ub-count sensitivity: {spread*100:.1f}% "
+              f"(paper Table 5: ~6%)")
+    return {"t4": t4, "t5": t5}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,54 @@
+"""Quickstart: the L2L execution schedule in ~60 lines.
+
+Builds a small dense LM, runs ONE training step three ways and shows they
+are numerically identical — the paper's core claim — then prints the
+analytic two-tier memory split (eqs. 1-4) for the full-size model.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config
+from repro.core import baseline, l2l
+from repro.core.memory_model import estimate
+from repro.core.schedule import ExecutionConfig
+from repro.data.synthetic import DataConfig, SyntheticLM
+from repro.models.model import LayeredModel
+
+
+def main():
+    cfg = get_config("bert-large", "smoke").replace(dtype="float32")
+    model = LayeredModel(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=64,
+                                  global_batch=8))
+    batch = {k: jnp.asarray(v) for k, v in data.batch(0).items()}
+
+    # Algorithm 1/2: conventional execution (microbatch loop inner)
+    loss_a2, g_a2 = jax.jit(baseline.make_grads_fn(
+        model, ExecutionConfig(n_microbatches=2)))(params, batch)
+    # Algorithm 3: L2L — LAYER loop outer, microbatch loop inner,
+    # per-layer recompute from the boundary stash
+    loss_l2l, g_l2l = jax.jit(l2l.make_grads_fn(
+        model, ExecutionConfig(n_microbatches=2)))(params, batch)
+
+    err = max(jax.tree.leaves(jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a - b))), g_a2, g_l2l)))
+    print(f"loss baseline-AG = {float(loss_a2):.6f}")
+    print(f"loss L2L         = {float(loss_l2l):.6f}")
+    print(f"max |grad diff|  = {err:.2e}   (identical math, inverted loops)")
+
+    # Where the memory went: full-size BERT-large, batch 32, seq 512
+    full = LayeredModel(get_config("bert-large", "full"))
+    for mode in ("baseline", "l2l", "l2l_p"):
+        r = estimate(full, batch=32, seq=512, n_microbatches=8, mode=mode,
+                     offload_stash=(mode == "l2l_p"))
+        print(f"{mode:9s} device={r.total_device/2**30:6.2f} GiB   "
+              f"host(EPS)={r.total_host/2**30:6.2f} GiB")
+    print("-> the paper's Table 2 story: the device footprint stops "
+          "depending on depth.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""End-to-end driver: train a ~100M-param BERT-family model with the full
+L2L-p engine (eager per-layer Adam, microbatched, per-layer clip) on the
+synthetic LM task for a few hundred steps.
+
+    PYTHONPATH=src python examples/train_bert_l2l.py [--steps 300]
+
+This is the deliverable-(b) end-to-end example; it reuses the production
+driver (repro.launch.train) with a width override that lands at ~100M
+parameters, and saves a checkpoint at the end.
+"""
+import argparse
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt-dir", default="/tmp/l2l_bert_100m")
+    args = ap.parse_args()
+
+    from repro.launch.train import main as train_main
+    # bert-large at d_model=576, 24 layers, vocab 30522:
+    # ~ 2*30522*576 + 24*(4*576^2 + 2*576*2304) ≈ 107M params
+    losses = train_main([
+        "--arch", "bert-large", "--variant", "full",
+        "--d-model", "576", "--n-layers", "24",
+        "--engine", "l2l",
+        "--steps", str(args.steps),
+        "--batch", "32", "--seq", "128", "--ub", "4",
+        "--lr", "3e-4", "--warmup", "50",
+        "--clip", "1.0",
+        "--ckpt-dir", args.ckpt_dir,
+        "--log-every", "20",
+    ])
+    drop = losses[0] - sum(losses[-10:]) / 10
+    print(f"loss drop over {args.steps} steps: {drop:.3f}")
+    assert drop > 0.3, "expected the 100M model to learn the motifs"
+    print(f"checkpoint in {args.ckpt_dir}")
+
+
+if __name__ == "__main__":
+    main()

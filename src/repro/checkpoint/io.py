@@ -1,0 +1,111 @@
+"""Checkpointing: pytree <-> .npz with structure manifest.
+
+No orbax in this container, so this is a small but complete implementation:
+flattens any params/opt pytree with ``jax.tree_util.tree_flatten_with_path``,
+saves leaves into one compressed npz plus a JSON manifest of key-paths and
+dtypes, and restores into the exact structure (verifying shapes/dtypes).
+Device arrays are gathered to host before save; restore optionally
+device_puts onto provided shardings (so a multi-pod job can restore straight
+into its EPS placement).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+_WIDE = {2: np.uint16, 1: np.uint8, 4: np.uint32}
+
+
+def save(path: str, tree: Any, step: Optional[int] = None) -> None:
+    leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    arrays = {}
+    manifest = {"keys": [], "dtypes": [], "step": step}
+    for i, (kp, leaf) in enumerate(leaves_with_paths):
+        key = f"a{i}"
+        arr = np.asarray(jax.device_get(leaf))
+        manifest["dtypes"].append(str(arr.dtype))
+        if arr.dtype.kind == "V" or str(arr.dtype) == "bfloat16":
+            # numpy can't round-trip ml_dtypes (bfloat16 etc): store raw bits
+            arr = arr.view(_WIDE[arr.dtype.itemsize])
+        arrays[key] = arr
+        manifest["keys"].append(_path_str(kp))
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez_compressed(path + ".npz", **arrays)
+    with open(path + ".json", "w") as f:
+        json.dump(manifest, f)
+
+
+def restore(path: str, like: Any, shardings: Any = None) -> Any:
+    """Restore into the structure of ``like`` (arrays or ShapeDtypeStructs).
+    If ``shardings`` is given (same structure), device_put accordingly."""
+    with open(path + ".json") as f:
+        manifest = json.load(f)
+    data = np.load(path + ".npz")
+    leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    assert len(leaves_with_paths) == len(manifest["keys"]), \
+        f"checkpoint has {len(manifest['keys'])} leaves, " \
+        f"structure needs {len(leaves_with_paths)}"
+    out = []
+    for i, (kp, ref) in enumerate(leaves_with_paths):
+        key = _path_str(kp)
+        assert manifest["keys"][i] == key, \
+            f"leaf order mismatch: {manifest['keys'][i]} vs {key}"
+        arr = data[f"a{i}"]
+        saved_dt = manifest.get("dtypes", [None] * len(manifest["keys"]))[i]
+        if saved_dt and arr.dtype.kind == "u" and saved_dt not in (
+                "uint8", "uint16", "uint32", "uint64"):
+            import ml_dtypes
+            arr = arr.view(np.dtype(getattr(ml_dtypes, saved_dt, saved_dt)))
+        assert tuple(arr.shape) == tuple(ref.shape), \
+            f"{key}: shape {arr.shape} vs {ref.shape}"
+        out.append(arr.astype(ref.dtype))
+    restored = jax.tree_util.tree_unflatten(treedef, out)
+    if shardings is not None:
+        restored = jax.tree.map(jax.device_put, restored, shardings)
+    return restored
+
+
+def latest_step(directory: str, prefix: str = "ckpt") -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for f in os.listdir(directory):
+        if f.startswith(prefix + "_") and f.endswith(".json"):
+            try:
+                steps.append(int(f[len(prefix) + 1:-5]))
+            except ValueError:
+                pass
+    return max(steps) if steps else None
+
+
+def save_train_state(directory: str, params, opt_state, step: int,
+                     prefix: str = "ckpt") -> str:
+    path = os.path.join(directory, f"{prefix}_{step}")
+    save(path, {"params": params, "opt": opt_state}, step=step)
+    return path
+
+
+def restore_train_state(directory: str, params_like, opt_like,
+                        step: Optional[int] = None, prefix: str = "ckpt"):
+    step = step if step is not None else latest_step(directory, prefix)
+    assert step is not None, f"no checkpoint in {directory}"
+    path = os.path.join(directory, f"{prefix}_{step}")
+    tree = restore(path, {"params": params_like, "opt": opt_like})
+    return tree["params"], tree["opt"], step

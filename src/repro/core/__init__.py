@@ -1,0 +1,4 @@
+from repro.core.schedule import ExecutionConfig
+from repro.core import l2l, baseline, decode, eps
+
+__all__ = ["ExecutionConfig", "l2l", "baseline", "decode", "eps"]

@@ -1,0 +1,164 @@
+"""Serving engine: one-token decode steps against per-layer caches.
+
+The L2L idea applies to inference too: with ``weight_stream`` the model
+lives in pinned_host and the decode scan relays one layer's weights at a
+time — a 314B Grok fits a 16GB device the same way a 96-layer BERT did in
+the paper's Table 2.
+
+``serve_step`` lowers for the decode input shapes (decode_32k, long_500k).
+For long-context decode the cache is a ring buffer of ``window`` slots
+(sliding-window attention); SSM/hybrid archs carry their O(1) recurrent
+state instead.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.eps import EPSPlacements, make_placements
+from repro.core.schedule import ExecutionConfig
+from repro.models.common import materialize, abstract
+
+
+def make_serve_step(model, exec_cfg: ExecutionConfig,
+                    placements: Optional[EPSPlacements] = None) -> Callable:
+    """Returns serve_step(params, caches, token, cur_pos) ->
+    (logits, new_caches).
+
+    ``caches``: tuple over decode groups of stacked per-layer cache trees.
+    ``token``: (B, 1) int32;  ``cur_pos``: scalar int32 absolute position.
+    """
+    if placements is None:
+        placements = make_placements(exec_cfg, len(model.groups))
+
+    dgroups = model.decode_groups()
+    # map decode-group index -> model group index (for placements)
+    gidx = [i for i, g in enumerate(model.groups) if not g.is_encoder]
+
+    def serve_step(params, caches, token, cur_pos):
+        static = {"embed": params["embed"], "head": params["head"]}
+        x = model.decode_embed(static, token, cur_pos)
+        ctx = model.decode_ctx(cur_pos, window=exec_cfg.decode_window)
+        new_caches = []
+        for di, group in enumerate(dgroups):
+            wp = placements.weights[gidx[di]]
+
+            def body(x_c, wc, _g=group, _wp=wp):
+                w, cache_l = wc
+                w = _wp.dev(w)
+                x2, cache2 = _g.decode(w, x_c, cache_l, None, ctx)
+                return x2, cache2
+
+            x, nc = jax.lax.scan(body, x,
+                                 (params["groups"][gidx[di]], caches[di]),
+                                 unroll=exec_cfg.unroll_layers)
+            new_caches.append(nc)
+        logits = model.decode_logits(static, x)
+        return logits, tuple(new_caches)
+
+    return serve_step
+
+
+def init_caches(model, batch: int, live_seq: int, rng=None,
+                abstract_only: bool = False, dtype=None):
+    """Build (or abstractly describe) the stacked decode caches."""
+    dtype = dtype or jnp.dtype(model.cfg.dtype)
+    specs = model.cache_specs(batch, live_seq)
+
+    def conv(spec):
+        if abstract_only:
+            return abstract(spec, dtype)
+        return materialize(spec, rng or jax.random.PRNGKey(0), dtype)
+
+    out = []
+    for spec in specs:
+        tree = conv(spec)
+        # position slots must be int32 and start invalid (-1)
+        def fix(path_leaf, leaf):
+            return leaf
+        tree = _fix_pos(tree, abstract_only)
+        out.append(tree)
+    return tuple(out)
+
+
+def _fix_pos(tree, abstract_only):
+    """Replace 'pos' leaves with int32 arrays initialized to -1 (invalid)."""
+    def walk(t):
+        if isinstance(t, dict):
+            out = {}
+            for k, v in t.items():
+                if k == "pos":
+                    if abstract_only:
+                        out[k] = jax.ShapeDtypeStruct(v.shape, jnp.int32)
+                    else:
+                        out[k] = -jnp.ones(v.shape, jnp.int32)
+                else:
+                    out[k] = walk(v)
+            return out
+        return t
+    return walk(tree)
+
+
+def prefill(model, params, tokens, live_seq: int,
+            exec_cfg: Optional[ExecutionConfig] = None,
+            frames=None):
+    """Build caches by feeding the prompt one token at a time through
+    ``serve_step`` (works uniformly for every family: KV, ring-buffer,
+    MLA-compressed, SSM state).  Returns (caches, last_logits).
+
+    For whisper, pass ``frames`` — the encoder runs once and its projected
+    cross-attention K/V are written into the decoder caches first.
+    """
+    exec_cfg = exec_cfg or ExecutionConfig()
+    B, S = tokens.shape
+    caches = init_caches(model, B, live_seq)
+    if model.cfg.family == "audio":
+        assert frames is not None
+        caches = encode_cross_kv(model, params, frames, caches)
+    serve = make_serve_step(model, exec_cfg)
+
+    def body(carry, i):
+        caches = carry
+        tok = jax.lax.dynamic_slice_in_dim(tokens, i, 1, axis=1)
+        logits, caches = serve(params, caches, tok, i)
+        return caches, logits[:, 0]
+
+    caches, logits = jax.lax.scan(body, caches, jnp.arange(S, dtype=jnp.int32))
+    return caches, logits[-1]
+
+
+def encode_cross_kv(model, params, frames, caches):
+    """Run the whisper encoder once and fill the decoder caches' xk/xv."""
+    from repro.models.common import apply_norm
+    cfg = model.cfg
+    static = {"embed": params["embed"], "head": params["head"]}
+    batch = {"frames": frames}
+    x, _ = model.prepare(static, batch)
+    enc = model.groups[0]
+    ctx = model.train_ctx(batch, enc)
+
+    def body(h, w):
+        h2, _ = enc.apply(w, h, None, ctx)
+        return h2, None
+
+    x, _ = jax.lax.scan(body, x, params["groups"][0])
+    mem = apply_norm(static["embed"]["enc_ln_post"], x, cfg.norm_eps)
+
+    def layer_kv(w):
+        dt = mem.dtype
+        k = jnp.einsum("bsd,dke->bske", mem, w["xattn"]["wk"].astype(dt))
+        v = jnp.einsum("bsd,dke->bske", mem, w["xattn"]["wv"].astype(dt))
+        if "bk" in w["xattn"]:
+            k = k + w["xattn"]["bk"].astype(dt)
+            v = v + w["xattn"]["bv"].astype(dt)
+        return k, v
+
+    # decoder is the last group / only decode group
+    dec_idx = len(caches) - 1
+    xk, xv = jax.vmap(layer_kv)(params["groups"][-1])
+    new_dec = dict(caches[dec_idx])
+    new_dec["xk"] = xk.astype(caches[dec_idx]["xk"].dtype)
+    new_dec["xv"] = xv.astype(caches[dec_idx]["xv"].dtype)
+    return tuple(list(caches[:dec_idx]) + [new_dec])

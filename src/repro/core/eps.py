@@ -1,0 +1,122 @@
+"""Eager Param-Server (EPS): two-tier memory placement.
+
+The paper's EPS is a host process owning the model + optimizer state,
+relaying layers to the device and eagerly reducing/optimizing.  On TPU the
+two tiers are XLA memory spaces: ``pinned_host`` (host DRAM behind the
+chip's DMA engines) and ``device`` (HBM).  A ``Placement`` bundles the
+device_put helpers the L2L scans use:
+
+* ``host(tree)``   — put a pytree into pinned_host, preserving sharding
+* ``dev(tree)``    — fetch into device HBM (the per-layer "relay")
+
+Shardings are explicit NamedShardings derived from the param/activation
+PartitionSpecs because ``jax.device_put`` inside jit needs a concrete
+sharding (memory-kind-only transfers still re-state the spec).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P, SingleDeviceSharding
+
+
+class Placement(NamedTuple):
+    host: Callable   # tree -> tree (pinned_host)
+    dev: Callable    # tree -> tree (device HBM)
+    enabled: bool = True
+
+
+def noop_placement() -> Placement:
+    ident = lambda t: t
+    return Placement(ident, ident, enabled=False)
+
+
+def memories_supported() -> bool:
+    """True when the backend honors memory-space transfers inside jit.
+
+    Verified empirically: the CPU backend silently DROPS
+    ``jax.device_put(x, <memory_kind>)`` during lowering (zero
+    pinned_host/annotate ops in the StableHLO) and its SPMD partitioner
+    rejects memory-kind output annotations.  On TPU the same program text
+    lowers to host-offload annotate custom calls.  All placements degrade
+    to no-ops on unsupported backends — the L2L schedule (loop inversion,
+    recompute, eager updates) is unchanged; only the physical two-tier
+    residency needs TPU.  See DESIGN.md and EXPERIMENTS.md §Dry-run.
+    """
+    return jax.default_backend() == "tpu"
+
+
+def single_device_placement(device=None) -> Placement:
+    """For single-host tests/benchmarks: one device, two memory spaces."""
+    dev = device or jax.devices()[0]
+    h = SingleDeviceSharding(dev, memory_kind="pinned_host")
+    d = SingleDeviceSharding(dev, memory_kind="device")
+
+    def to(tree, sh):
+        return jax.tree.map(lambda a: jax.device_put(a, sh), tree)
+
+    return Placement(lambda t: to(t, h), lambda t: to(t, d))
+
+
+def mesh_placement(mesh, pspec_tree) -> Placement:
+    """Sharded placement: pspec_tree mirrors the trees that will be moved
+    (or is a single P applied to every leaf)."""
+
+    def build(tree, kind):
+        def one(a, spec):
+            sh = NamedSharding(mesh, spec, memory_kind=kind)
+            return jax.device_put(a, sh)
+        if isinstance(pspec_tree, P):
+            return jax.tree.map(lambda a: one(a, pspec_tree), tree)
+        return jax.tree.map(one, tree, pspec_tree)
+
+    return Placement(lambda t: build(t, "pinned_host"),
+                     lambda t: build(t, "device"))
+
+
+class EPSPlacements(NamedTuple):
+    """Per-use-site placements for one training/serving setup.
+
+    ``weights[g]`` / ``opts[g]`` move one *layer slice* of group g (trees
+    without the stacked leading axis); ``stash`` moves boundary-activation
+    trees (a single P is broadcast to every leaf)."""
+    weights: tuple           # tuple[Placement], one per layer group
+    opts: tuple              # tuple[Placement], one per layer group
+    stash: Placement
+
+
+def pspecs_like(pspec_tree, target_tree):
+    """Broadcast a param-shaped pspec tree onto a state tree whose leaves
+    replace each param leaf with a subtree of same-shaped arrays (adam m/v)."""
+    is_p = lambda x: isinstance(x, P)
+    flat_p, treedef = jax.tree.flatten(pspec_tree, is_leaf=is_p)
+    flat_t = treedef.flatten_up_to(target_tree)
+    out = [jax.tree.map(lambda _, _p=p: _p, t) for p, t in zip(flat_p, flat_t)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def make_placements(exec_cfg, n_groups: int, mesh=None,
+                    weight_pspecs=None, opt_pspecs=None,
+                    stash_pspec=None) -> EPSPlacements:
+    """Single-device (tests/benchmarks) or mesh-sharded placements.
+
+    ``weight_pspecs``/``opt_pspecs``: per-group pspec trees for one layer
+    slice; required when mesh is given and streaming is on."""
+    noop = noop_placement()
+    if not memories_supported():
+        # backend drops memory-space transfers inside jit (CPU): placement
+        # becomes logical-only; the L2L schedule itself is unchanged.
+        return EPSPlacements((noop,) * n_groups, (noop,) * n_groups, noop)
+    if mesh is None:
+        single = single_device_placement()
+        w = single if exec_cfg.weight_stream else noop
+        s = single if exec_cfg.offload_stash else noop
+        return EPSPlacements((w,) * n_groups, (w,) * n_groups, s)
+    ws = tuple(mesh_placement(mesh, weight_pspecs[g]) for g in range(n_groups)) \
+        if exec_cfg.weight_stream else (noop,) * n_groups
+    os_ = tuple(mesh_placement(mesh, opt_pspecs[g]) for g in range(n_groups)) \
+        if exec_cfg.weight_stream else (noop,) * n_groups
+    st = mesh_placement(mesh, stash_pspec if stash_pspec is not None else P()) \
+        if exec_cfg.offload_stash else noop
+    return EPSPlacements(ws, os_, st)

@@ -1,0 +1,494 @@
+"""L2L (layer-to-layer) execution engine — Algorithms 3 and 4 of the paper.
+
+The loop inversion is the whole trick: the LAYER loop is outer, the
+MICROBATCH loop is inner.  In JAX the outer loop is a ``lax.scan`` over the
+group's stacked ``(N_layers, ...)`` parameters — when those live in
+``pinned_host`` (ExecutionConfig.weight_stream) each iteration's slice is a
+host->HBM relay, i.e. the EPS feeding the device one layer at a time.
+
+Forward (Alg 3 lines 2-6):   for l in layers: for u in microbatches:
+    run layer l on microbatch u; stash ONLY the layer-boundary activation
+    (optionally offloaded to pinned_host — eq. (4) constant memory).
+
+Backward (Alg 3 lines 7-11 / Alg 4): reverse scan over layers; per
+microbatch, RECOMPUTE the layer forward via ``jax.vjp`` from the stashed
+boundary input (the paper's rematerialization), accumulate (dw, dx, dmem).
+With ``eager_optimizer`` (Alg 4 / L2L-p) the optimizer for layer l runs
+inside the same reverse-scan step, overlapping the backward of layer l-1 —
+and because the scan body's dw is produced under pjit, the per-layer
+gradient all-reduce is issued layer-by-layer too ("parallel reduce").
+
+Gradient identity: this computes exactly the gradients of
+baseline-with-accumulated-gradients (Algorithm 2) — asserted by tests.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.eps import EPSPlacements, make_placements, noop_placement
+from repro.core.schedule import ExecutionConfig
+from repro.optim import Optimizer, clip_by_norm, tree_global_norm
+
+
+def _reshape_ub(tree, ub: int):
+    def one(a):
+        assert a.shape[0] % ub == 0, \
+            f"batch {a.shape[0]} not divisible by n_microbatches {ub}"
+        return a.reshape(ub, a.shape[0] // ub, *a.shape[1:])
+    return jax.tree.map(one, tree)
+
+
+def _tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def _tree_zeros_f32(tree):
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), tree)
+
+
+# ===========================================================================
+# Training step factory
+# ===========================================================================
+def make_train_step(model, optimizer: Optimizer, exec_cfg: ExecutionConfig,
+                    placements: Optional[EPSPlacements] = None) -> Callable:
+    """Returns step(params, opt_state, batch) -> (params', opt_state',
+    metrics).  ``opt_state`` = {"step": i32, "embed":..., "head":...,
+    "groups": (stacked per group,)} — build with ``init_opt_state``."""
+    if placements is None:
+        placements = make_placements(exec_cfg, len(model.groups))
+    UB = exec_cfg.n_microbatches
+
+    def run_opt(grads, opt_l, w, step_i):
+        """Apply the optimizer — on the EPS host when host_optimizer (the
+        paper's CPU optimizer, eq. (6) O_tc; L2L-p overlaps it)."""
+        if exec_cfg.host_optimizer:
+            from jax.experimental.compute_on import compute_on
+            with compute_on("device_host"):
+                return optimizer.update(grads, opt_l, w, step_i)
+        return optimizer.update(grads, opt_l, w, step_i)
+
+    def step(params, opt_state, batch):
+        cfg = model.cfg
+        static = {"embed": params["embed"], "head": params["head"]}
+        batch_ub = _reshape_ub(batch, UB)
+        W_total = jnp.maximum(batch["mask"].sum(), 1.0)
+        amp = exec_cfg.loss_scale_init > 0
+        S_loss = (opt_state["loss_scale"]["scale"] if amp
+                  else jnp.float32(1.0))
+
+        # ------------------------------------------------------------
+        # FORWARD: layer-major relay through the groups
+        # ------------------------------------------------------------
+        def prep_one(b):
+            x, _ = model.prepare(static, b)
+            return x
+        x_ub = jax.lax.map(prep_one, batch_ub)            # (UB, Bub, S, d)
+
+        ub_slice = jax.tree.map(lambda a: a[0], batch_ub)
+        stashes = []          # per group: (N, UB, Bub, S, d) boundary inputs
+        group_inputs = []     # x_ub at entry of each group (== stash[:,0])
+        mems = []             # per group: mem_ub or None
+        aux_total = jnp.float32(0.0)
+
+        for gi, group in enumerate(model.groups):
+            if gi > 0:
+                x_prev = x_ub
+                x_ub = jax.lax.map(
+                    lambda b_x: model.transition_x(gi, static, b_x[1], b_x[0]),
+                    (batch_ub, x_prev))
+                mem_ub = (jax.lax.map(
+                    lambda b_x: model.transition_mem(gi, static, b_x[1],
+                                                     b_x[0]),
+                    (batch_ub, x_prev)) if group.has_mem else None)
+                group_inputs.append(x_prev)   # saved for transition vjp
+            else:
+                mem_ub = None
+                group_inputs.append(None)
+            mems.append(mem_ub)
+            ctx = model.train_ctx(ub_slice, group)
+            wp = placements.weights[gi]
+
+            def fwd_layer(x_c, w, _g=group, _ctx=ctx, _mem=mem_ub, _wp=wp):
+                w = _wp.dev(w)
+                def ub_body(aux_c, args):
+                    if _mem is None:
+                        x_i = args
+                        y, aux = _g.apply(w, x_i, None, _ctx)
+                    else:
+                        x_i, m_i = args
+                        y, aux = _g.apply(w, x_i, m_i, _ctx)
+                    return aux_c + aux.astype(jnp.float32), y
+                xs = x_c if _mem is None else (x_c, _mem)
+                aux_g, y_ub = jax.lax.scan(ub_body, jnp.float32(0.0), xs)
+                return y_ub, (placements.stash.host(x_c), aux_g)
+
+            x_ub, (stash_g, aux_per_layer) = jax.lax.scan(
+                fwd_layer, x_ub, params["groups"][gi],
+                unroll=exec_cfg.unroll_layers)
+            stashes.append(stash_g)
+            aux_total = aux_total + aux_per_layer.sum() / UB
+
+        # ------------------------------------------------------------
+        # HEAD: loss + dL/dx per microbatch (also d_static from the head)
+        # ------------------------------------------------------------
+        def head_ub(carry, args):
+            d_static_acc, loss_acc = carry
+            x_i, b_i = args
+            def f(s, xx):
+                ls, ws = model.head_loss(s, xx, b_i)
+                return ls
+            loss_i, vjp = jax.vjp(f, static, x_i)
+            ds_i, dx_i = vjp(S_loss / W_total)
+            return (_tree_add(d_static_acc, jax.tree.map(
+                lambda a: a.astype(jnp.float32), ds_i)),
+                loss_acc + loss_i), dx_i
+
+        (d_static, loss_sum), dx_ub = jax.lax.scan(
+            head_ub, (_tree_zeros_f32(static), jnp.float32(0.0)),
+            (x_ub, batch_ub))
+        loss = loss_sum / W_total + aux_total
+
+        # ------------------------------------------------------------
+        # BACKWARD: reverse relay; recompute-vjp per layer; eager opt
+        # ------------------------------------------------------------
+        new_group_params = [None] * len(model.groups)
+        new_group_opt = [None] * len(model.groups)
+        group_grads = [None] * len(model.groups)  # only if not eager
+        gnorm_sq = jnp.float32(0.0)
+        nonfinite = jnp.int32(0)
+        opt_step = opt_state["step"]
+
+        for gi in reversed(range(len(model.groups))):
+            group = model.groups[gi]
+            ctx = model.train_ctx(ub_slice, group)
+            mem_ub = mems[gi]
+            has_mem = mem_ub is not None
+            wp, op = placements.weights[gi], placements.opts[gi]
+
+            dmem_ub = (jax.tree.map(
+                lambda a: jnp.zeros(a.shape, a.dtype), mem_ub)
+                if has_mem else None)
+
+            def bwd_layer(carry, xs, _g=group, _ctx=ctx, _mem=mem_ub,
+                          _wp=wp, _op=op, _has_mem=has_mem):
+                dx_c, dmem_c, gn_c, nf_c = carry
+                w, stash_l, opt_l = xs
+                w_dev = _wp.dev(w)
+                stash_dev = placements.stash.dev(stash_l)
+
+                def ub_body(dw_acc, args):
+                    if _has_mem:
+                        x_in, dx_i, m_i = args
+                        def f(ww, xx, mm):
+                            return _g.apply(ww, xx, mm, _ctx)
+                        _, vjp = jax.vjp(f, w_dev, x_in, m_i)
+                        dw_i, dxin_i, dmem_i = vjp(
+                            (dx_i, S_loss / UB))
+                    else:
+                        x_in, dx_i = args
+                        def f(ww, xx):
+                            return _g.apply(ww, xx, None, _ctx)
+                        _, vjp = jax.vjp(f, w_dev, x_in)
+                        dw_i, dxin_i = vjp((dx_i, S_loss / UB))
+                        dmem_i = None
+                    dw_acc = _tree_add(dw_acc, jax.tree.map(
+                        lambda a: a.astype(jnp.float32), dw_i))
+                    ys = (dxin_i, dmem_i) if _has_mem else dxin_i
+                    return dw_acc, ys
+
+                args = (stash_dev, dx_c, _mem) if _has_mem \
+                    else (stash_dev, dx_c)
+                dw, ys = jax.lax.scan(
+                    ub_body, _tree_zeros_f32(w_dev), args)
+                if _has_mem:
+                    dxin_ub, dmem_ub_l = ys
+                    dmem_c = _tree_add(dmem_c, dmem_ub_l)
+                else:
+                    dxin_ub = ys
+                dw = jax.tree.map(lambda g: g / S_loss, dw)
+                finite_l = jnp.all(jnp.stack([
+                    jnp.all(jnp.isfinite(g)) for g in jax.tree.leaves(dw)]))
+                if exec_cfg.clip_mode == "per_layer":
+                    dw, _ = clip_by_norm(dw, exec_cfg.clip_norm)
+                gn_c = gn_c + jnp.where(finite_l,
+                                        tree_global_norm(dw) ** 2, 0.0)
+                if exec_cfg.eager_optimizer:
+                    new_w, new_opt = run_opt(dw, opt_l, w_dev, opt_step)
+                    if amp:
+                        # L2L-adapted AMP: a non-finite layer skips ITS
+                        # update (eager updates can't await a global check)
+                        new_w = jax.tree.map(
+                            lambda n, o: jnp.where(finite_l, n, o),
+                            new_w, w_dev)
+                        new_opt = jax.tree.map(
+                            lambda n, o: jnp.where(finite_l, n, o),
+                            new_opt, opt_l)
+                    out = (_wp.host(new_w), _op.host(new_opt))
+                else:
+                    # Alg 3: gradients are shipped to the EPS (host) and the
+                    # update happens in a trailing layer loop.
+                    out = _wp.host(dw)
+                nf_c = nf_c + jnp.where(finite_l, 0, 1)
+                return (dxin_ub, dmem_c, gn_c, nf_c), out
+
+            (dx_ub, dmem_ub, gnorm_sq, nonfinite), outs = jax.lax.scan(
+                bwd_layer, (dx_ub, dmem_ub, gnorm_sq, nonfinite),
+                (params["groups"][gi], stashes[gi], opt_state["groups"][gi]),
+                reverse=True, unroll=exec_cfg.unroll_layers)
+            if exec_cfg.eager_optimizer:
+                new_group_params[gi], new_group_opt[gi] = outs
+            else:
+                group_grads[gi] = outs
+
+            # ---- transition vjp back to the previous group -----------
+            if gi > 0:
+                x_prev_ub = group_inputs[gi]
+
+                def trans_ub(d_static_acc, args):
+                    b_i, xp_i, dxin_i, dmem_i = args
+                    def fx(s, xp):
+                        return model.transition_x(gi, s, xp, b_i)
+                    _, vjp_x = jax.vjp(fx, static, xp_i)
+                    ds_x, dxp_x = vjp_x(dxin_i)
+                    if dmem_i is not None:
+                        def fm(s, xp):
+                            return model.transition_mem(gi, s, xp, b_i)
+                        _, vjp_m = jax.vjp(fm, static, xp_i)
+                        ds_m, dxp_m = vjp_m(dmem_i)
+                        ds_x = _tree_add(ds_x, ds_m)
+                        dxp_x = dxp_x + dxp_m
+                    return _tree_add(d_static_acc, jax.tree.map(
+                        lambda a: a.astype(jnp.float32), ds_x)), dxp_x
+
+                if has_mem:
+                    d_static, dx_ub = jax.lax.scan(
+                        trans_ub, d_static,
+                        (batch_ub, x_prev_ub, dx_ub, dmem_ub))
+                else:
+                    def trans_ub_nomem(d_static_acc, args):
+                        b_i, xp_i, dxin_i = args
+                        def fx(s, xp):
+                            return model.transition_x(gi, s, xp, b_i)
+                        _, vjp_x = jax.vjp(fx, static, xp_i)
+                        ds_x, dxp_x = vjp_x(dxin_i)
+                        return _tree_add(d_static_acc, jax.tree.map(
+                            lambda a: a.astype(jnp.float32), ds_x)), dxp_x
+                    d_static, dx_ub = jax.lax.scan(
+                        trans_ub_nomem, d_static,
+                        (batch_ub, x_prev_ub, dx_ub))
+
+        # ---- prepare (embedding) vjp ---------------------------------
+        def prep_ub(d_static_acc, args):
+            b_i, dx_i = args
+            def f(s):
+                x, _ = model.prepare(s, b_i)
+                return x
+            _, vjp = jax.vjp(f, static)
+            (ds_i,) = vjp(dx_i)
+            return _tree_add(d_static_acc, jax.tree.map(
+                lambda a: a.astype(jnp.float32), ds_i)), None
+
+        d_static, _ = jax.lax.scan(prep_ub, d_static, (batch_ub, dx_ub))
+        gnorm_sq = gnorm_sq + tree_global_norm(d_static) ** 2
+
+        # ------------------------------------------------------------
+        # UPDATES (trailing update: static params; layer params if not eager)
+        # ------------------------------------------------------------
+        d_static = jax.tree.map(lambda g: g / S_loss, d_static)
+        finite_s = jnp.all(jnp.stack([
+            jnp.all(jnp.isfinite(g)) for g in jax.tree.leaves(d_static)]))
+        nonfinite = nonfinite + jnp.where(finite_s, 0, 1)
+        if exec_cfg.clip_mode == "per_layer":
+            d_static, _ = clip_by_norm(d_static, exec_cfg.clip_norm)
+        new_static, new_static_opt = optimizer.update(
+            d_static, {"embed": opt_state["embed"], "head": opt_state["head"]},
+            static, opt_step)
+        if amp:
+            new_static = jax.tree.map(
+                lambda n, o: jnp.where(finite_s, n, o), new_static, static)
+            new_static_opt = jax.tree.map(
+                lambda n, o: jnp.where(finite_s, n, o), new_static_opt,
+                {"embed": opt_state["embed"], "head": opt_state["head"]})
+
+        if not exec_cfg.eager_optimizer:
+            # Alg 3: separate trailing loop over layers (still layer-major)
+            for gi, group in enumerate(model.groups):
+                wp, op = placements.weights[gi], placements.opts[gi]
+                def upd_layer(_, xs, _wp=wp, _op=op):
+                    w, g, o = xs
+                    nw, no = run_opt(_wp.dev(g), _op.dev(o), _wp.dev(w),
+                                     opt_step)
+                    return None, (_wp.host(nw), _op.host(no))
+                _, (nw_g, no_g) = jax.lax.scan(
+                    upd_layer, None,
+                    (params["groups"][gi], group_grads[gi],
+                     opt_state["groups"][gi]),
+                    unroll=exec_cfg.unroll_layers)
+                new_group_params[gi] = nw_g
+                new_group_opt[gi] = no_g
+
+        new_params = {"embed": new_static["embed"],
+                      "head": new_static["head"],
+                      "groups": tuple(new_group_params)}
+        new_opt = {"step": opt_step + 1,
+                   "embed": new_static_opt["embed"],
+                   "head": new_static_opt["head"],
+                   "groups": tuple(new_group_opt)}
+        metrics = {"loss": loss, "aux": aux_total,
+                   "grad_norm": jnp.sqrt(gnorm_sq),
+                   "weight_sum": W_total}
+        if amp:
+            ls = opt_state["loss_scale"]
+            any_bad = nonfinite > 0
+            good = jnp.where(any_bad, 0, ls["good_steps"] + 1)
+            scale = jnp.where(any_bad,
+                              jnp.maximum(ls["scale"] * 0.5, 1.0),
+                              ls["scale"])
+            grow = good >= exec_cfg.loss_scale_growth
+            scale = jnp.where(grow, scale * 2.0, scale)
+            good = jnp.where(grow, 0, good)
+            new_opt["loss_scale"] = {"scale": scale, "good_steps": good}
+            metrics["loss_scale"] = scale
+            metrics["nonfinite_layers"] = nonfinite
+        return new_params, new_opt, metrics
+
+    return step
+
+
+# ===========================================================================
+# Prefill (inference forward): layer-major relay, no stash, no backward
+# ===========================================================================
+def make_prefill_fn(model, exec_cfg: ExecutionConfig,
+                    placements: Optional[EPSPlacements] = None) -> Callable:
+    """Returns prefill(params, batch) -> last-token logits (B, vocab).
+    Exercises the full prefill compute with the L2L weight relay."""
+    if placements is None:
+        placements = make_placements(exec_cfg, len(model.groups))
+    UB = exec_cfg.n_microbatches
+
+    def prefill(params, batch):
+        static = {"embed": params["embed"], "head": params["head"]}
+        batch_ub = _reshape_ub(batch, UB)
+        ub_slice = jax.tree.map(lambda a: a[0], batch_ub)
+
+        def prep_one(b):
+            x, _ = model.prepare(static, b)
+            return x
+        x_ub = jax.lax.map(prep_one, batch_ub)
+
+        for gi, group in enumerate(model.groups):
+            if gi > 0:
+                x_prev = x_ub
+                x_ub = jax.lax.map(
+                    lambda b_x: model.transition_x(gi, static, b_x[1], b_x[0]),
+                    (batch_ub, x_prev))
+                mem_ub = (jax.lax.map(
+                    lambda b_x: model.transition_mem(gi, static, b_x[1],
+                                                     b_x[0]),
+                    (batch_ub, x_prev)) if group.has_mem else None)
+            else:
+                mem_ub = None
+            ctx = model.train_ctx(ub_slice, group)
+            wp = placements.weights[gi]
+
+            def fwd_layer(x_c, w, _g=group, _ctx=ctx, _mem=mem_ub, _wp=wp):
+                w = _wp.dev(w)
+                def ub_body(_, args):
+                    if _mem is None:
+                        y, _aux = _g.apply(w, args, None, _ctx)
+                    else:
+                        x_i, m_i = args
+                        y, _aux = _g.apply(w, x_i, m_i, _ctx)
+                    return None, y
+                xs = x_c if _mem is None else (x_c, _mem)
+                _, y_ub = jax.lax.scan(ub_body, None, xs)
+                return y_ub, None
+
+            x_ub, _ = jax.lax.scan(fwd_layer, x_ub, params["groups"][gi],
+                                   unroll=exec_cfg.unroll_layers)
+
+        # last-position logits per microbatch
+        def head_one(x_i):
+            return model.decode_logits(static, x_i[:, -1:, :])[:, 0]
+        logits_ub = jax.lax.map(head_one, x_ub)
+        return logits_ub.reshape(-1, logits_ub.shape[-1])
+
+    return prefill
+
+
+# ===========================================================================
+# Loss+grads only (no optimizer) — for equivalence tests & benchmarks
+# ===========================================================================
+def make_grads_fn(model, exec_cfg: ExecutionConfig,
+                  placements: Optional[EPSPlacements] = None) -> Callable:
+    """Returns grads(params, batch) -> (loss, grads) computed with the L2L
+    schedule (layer-major, recompute).  Used to assert gradient identity
+    with Algorithm 2 and by the Alg-3 benchmarks."""
+    cfg_noeager = ExecutionConfig(
+        n_microbatches=exec_cfg.n_microbatches,
+        offload_stash=exec_cfg.offload_stash,
+        weight_stream=exec_cfg.weight_stream,
+        eager_optimizer=False, clip_mode="none")
+    return _make_loss_and_grads(model, cfg_noeager, placements)
+
+
+def _make_loss_and_grads(model, exec_cfg, placements=None):
+    """L2L forward+backward that RETURNS grads (Alg 3 without the update)."""
+    if placements is None:
+        placements = make_placements(exec_cfg, len(model.groups))
+
+    base_step = make_train_step(
+        model, _grad_collector(), exec_cfg, placements)
+
+    def fn(params, batch):
+        opt = init_opt_state(_grad_collector(), params)
+        new_params, new_opt, metrics = base_step(params, opt, batch)
+        # _grad_collector stores grads in the "m" slot of the opt state
+        is_slot = lambda x: isinstance(x, dict) and set(x.keys()) == {"m"}
+        unwrap = lambda t: jax.tree.map(lambda s: s["m"], t, is_leaf=is_slot)
+        grads = {
+            "embed": unwrap(new_opt["embed"]),
+            "head": unwrap(new_opt["head"]),
+            "groups": tuple(unwrap(g) for g in new_opt["groups"]),
+        }
+        return metrics["loss"], grads
+
+    return fn
+
+
+def _grad_collector() -> Optimizer:
+    """An 'optimizer' that stores the gradient into its state and leaves
+    params untouched — lets tests extract L2L grads through the normal
+    step machinery."""
+    def init(params):
+        return jax.tree.map(
+            lambda p: {"m": jnp.zeros(p.shape, jnp.float32)}, params)
+
+    def update(grads, state, params, step):
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_s = [{"m": g.astype(jnp.float32)} for g in flat_g]
+        return params, jax.tree.unflatten(treedef, flat_s)
+
+    return Optimizer("collect", init, update)
+
+
+# ===========================================================================
+# Optimizer state init
+# ===========================================================================
+def init_opt_state(optimizer: Optimizer, params,
+                   exec_cfg: Optional[ExecutionConfig] = None) -> dict:
+    state = {
+        "step": jnp.zeros((), jnp.int32),
+        "embed": optimizer.init(params["embed"]),
+        "head": optimizer.init(params["head"]),
+        "groups": tuple(optimizer.init(g) for g in params["groups"]),
+    }
+    if exec_cfg is not None and exec_cfg.loss_scale_init > 0:
+        state["loss_scale"] = {
+            "scale": jnp.float32(exec_cfg.loss_scale_init),
+            "good_steps": jnp.zeros((), jnp.int32)}
+    return state

@@ -1,0 +1,162 @@
+"""Analytic memory/time model — equations (1)-(7) of the paper,
+parameterized by a ModelConfig and an ExecutionConfig.
+
+This is the quantitative form of the paper's §3.1, used by the Table-2/4/5
+benchmarks (alongside compiled memory_analysis) and by EXPERIMENTS.md's
+constant-memory validation: on this CPU container the two-tier placement is
+logical-only (see eps.memories_supported), so the byte accounting of what
+lives in device HBM vs EPS host DRAM on the TPU target comes from here —
+computed from exact layer/activation shapes, not hand-waving.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+from repro.models.common import param_bytes
+from repro.models.model import LayeredModel
+
+
+def bytes_per(dtype: str) -> int:
+    return {"float32": 4, "bfloat16": 2, "float16": 2}[dtype]
+
+
+@dataclass
+class MemoryReport:
+    # bytes
+    params_device: int          # weights resident in HBM
+    params_host: int            # weights resident in EPS (host DRAM)
+    opt_state: int              # wherever the optimizer lives (4x rule)
+    activations: int            # intermediate activations at peak
+    stash: int                  # layer-boundary stash (device or host)
+    stash_on_host: bool
+    total_device: int = 0
+    total_host: int = 0
+
+    def finalize(self):
+        self.total_device = (self.params_device + self.activations
+                             + (0 if self.stash_on_host else self.stash))
+        self.total_host = (self.params_host + self.opt_state
+                           + (self.stash if self.stash_on_host else 0))
+        return self
+
+
+def _layer_bytes(model: LayeredModel, dtype_bytes: int):
+    """(max single-layer bytes, total stacked-layer bytes)."""
+    per_layer = [param_bytes(g.spec, dtype_bytes) for g in model.groups]
+    totals = [p * g.n_layers for p, g in zip(per_layer, model.groups)]
+    return max(per_layer), sum(totals)
+
+
+def estimate(model: LayeredModel, *, batch: int, seq: int,
+             n_microbatches: int = 1, mode: str = "l2l",
+             offload_stash: bool = False, opt_slots: int = 2,
+             act_dtype_bytes: int = 2, param_dtype_bytes: int = 4
+             ) -> MemoryReport:
+    """Modes:
+      baseline      eq. (1): everything device-resident
+      baseline_remat eq. (1) with the N*L*mb*X term reduced to boundaries
+      l2l           eq. (2): one layer (+1 transit buffer) on device,
+                    stash of N*mb*A boundaries on device
+      l2l_p         eq. (3)/(4): + weight/grad transit buffers; stash to
+                    host when offload_stash (the constant-memory variant)
+    """
+    cfg = model.cfg
+    d = cfg.d_model
+    L_max, L_total = _layer_bytes(model, param_dtype_bytes)
+    n_layers = sum(g.n_layers for g in model.groups)
+    # A: boundary activation bytes per sample; X: intra-layer activation
+    # bytes per sample (attention scores excluded — flash/chunked streaming)
+    A = seq * d * act_dtype_bytes
+    ff = max(cfg.d_ff, cfg.d_ff_expert * max(cfg.experts_per_token, 1)
+             if cfg.n_experts else cfg.d_ff)
+    X = seq * (2 * d + 2 * ff) * act_dtype_bytes
+    ub = max(1, batch // max(n_microbatches, 1))
+
+    if mode.startswith("baseline"):
+        act = batch * X * (1 if mode.endswith("remat") else n_layers)
+        stash = n_layers * batch * A if mode.endswith("remat") else 0
+        return MemoryReport(
+            params_device=L_total,
+            params_host=0,
+            opt_state=(1 + opt_slots) * L_total,   # grads + adam m,v
+            activations=act,
+            stash=stash, stash_on_host=False).finalize()
+
+    transit = 2 if mode == "l2l" else 4            # eq.(2) vs eq.(3)
+    return MemoryReport(
+        params_device=transit * L_max,
+        params_host=L_total,
+        opt_state=(1 + opt_slots) * L_total,       # EPS-resident
+        activations=ub * X,                        # recompute working set
+        stash=n_layers * batch * A,
+        stash_on_host=offload_stash).finalize()
+
+
+# ---------------------------------------------------------------------------
+# Time model — equations (5)-(7)
+# ---------------------------------------------------------------------------
+@dataclass
+class TimeModel:
+    n_layers: int
+    layer_bytes: float          # L in bytes
+    f_t: float                  # forward time per microbatch (s)
+    b_t: float                  # backward time per microbatch (s)
+    o_t: float                  # optimizer time on device (s)
+    o_tc: float                 # optimizer time on EPS/CPU (s)
+    hb: float                   # host->device bandwidth bytes/s
+    u: int                      # microbatches per minibatch
+
+    def baseline(self) -> float:                       # eq. (5)
+        return self.n_layers * self.u * (self.f_t + self.b_t) + self.o_t
+
+    def l2l(self) -> float:                            # eq. (6)
+        relay = self.n_layers * 2 * self.layer_bytes / self.hb
+        compute = self.n_layers * self.u * (2 * self.f_t + self.b_t)
+        return relay + compute + self.o_tc
+
+    def l2l_p(self) -> float:                          # eq. (7)
+        compute = self.n_layers * self.u * (2 * self.f_t + self.b_t)
+        opt_exposed = max(0.0, self.o_tc
+                          - self.n_layers * self.u * self.b_t)
+        relay_exposed = max(0.0, self.n_layers * (
+            self.layer_bytes / self.hb - self.u * self.f_t))
+        return compute + opt_exposed + relay_exposed
+
+
+def paper_worked_example() -> TimeModel:
+    """§3.1.2: BERT-Large, V100 @30 TFLOPs effective, mb=64, u=16 (ub=4),
+    fwd 12 GFLOP/layer/sample, bwd 24, optimizer 100 GFLOP, EPS 300 GFLOPs,
+    PCIe 16 GB/s, L = 350M params / 24 layers * 4B."""
+    tf = 30e12
+    return TimeModel(
+        n_layers=24,
+        layer_bytes=350e6 / 24 * 4,
+        f_t=12e9 * 4 / tf,
+        b_t=24e9 * 4 / tf,
+        o_t=100e9 / tf,
+        o_tc=100e9 / 300e9,
+        hb=16e9,
+        u=16)
+
+
+def for_config(model: LayeredModel, *, batch: int, seq: int, u: int,
+               flops_per_s: float = 197e12, eps_flops: float = 2e12,
+               hb: float = 100e9) -> TimeModel:
+    """Time model for an assigned arch on the TPU v5e target (hb = host DMA
+    estimate, eps_flops = host optimizer throughput)."""
+    cfg = model.cfg
+    n_active = cfg.param_count(active_only=True)
+    L_max, L_total = _layer_bytes(model, 4)
+    n_layers = sum(g.n_layers for g in model.groups)
+    ub = max(1, batch // u)
+    tokens = ub * seq
+    f = 2 * n_active / n_layers * tokens / flops_per_s
+    return TimeModel(
+        n_layers=n_layers, layer_bytes=L_max,
+        f_t=f, b_t=2 * f,
+        o_t=10 * cfg.param_count() / flops_per_s,
+        o_tc=10 * cfg.param_count() / eps_flops,
+        hb=hb, u=u)

@@ -1,0 +1,56 @@
+"""Execution schedule configuration.
+
+Maps the paper's knobs onto one frozen config:
+
+* Algorithm 1  -> ``baseline.make_train_step(..., n_microbatches=1)``
+* Algorithm 2  -> ``baseline.make_train_step(..., n_microbatches=u)``
+* Algorithm 3  -> ``l2l.make_train_step(ExecutionConfig(eager_optimizer=False))``
+* Algorithm 4  -> ``l2l.make_train_step(ExecutionConfig(eager_optimizer=True))``
+  (L2L-p: per-layer optimize inside the reverse scan, per-layer eager
+  gradient reduction via the sharded scan body)
+
+``offload_stash`` is eq. (4): boundary activations live in pinned_host
+between forward and backward.  ``weight_stream`` is the EPS proper: the
+stacked layer params (and optimizer state) are resident in pinned_host and
+relayed to device memory one layer at a time by the scan.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ExecutionConfig:
+    n_microbatches: int = 1
+    # --- L2L memory policies -------------------------------------------
+    offload_stash: bool = False     # eq.(4): stash -> pinned_host
+    weight_stream: bool = False     # EPS: params/opt live in pinned_host
+    # --- L2L-p ----------------------------------------------------------
+    eager_optimizer: bool = True    # Alg 4 (False = Alg 3)
+    host_optimizer: bool = False    # run the optimizer on the EPS host
+    #   (jax.experimental.compute_on("device_host") — the paper's CPU
+    #   optimizer / eq. (6)'s O_tc, overlapped by the scheduler in L2L-p)
+    # --- gradient clipping ----------------------------------------------
+    clip_mode: str = "none"         # none | per_layer
+    clip_norm: float = 1.0
+    # --- mixed precision (the paper's named future work: "automatic
+    # mixed precision (FP16/FP32)") -----------------------------------------
+    # 0 = disabled.  With a scale, the head cotangent is multiplied by it,
+    # per-layer grads are unscaled before clip/update, and non-finite
+    # layers SKIP their update (the L2L-adapted skip: eager per-layer
+    # updates can't wait for a global finiteness verdict).
+    loss_scale_init: float = 0.0
+    loss_scale_growth: int = 200    # good steps before doubling
+    # --- baseline-only ----------------------------------------------------
+    remat: bool = False             # gradient checkpointing per layer
+    # --- serving ---------------------------------------------------------
+    decode_window: int = 0          # ring-buffer window (0 = full cache)
+    # --- analysis ---------------------------------------------------------
+    # fully unroll the layer scans: XLA's cost_analysis counts while-loop
+    # bodies ONCE, so the dry-run's cost probes compile small unrolled
+    # depths and extrapolate (see launch/dryrun.py).
+    unroll_layers: bool = False
+
+    def __post_init__(self):
+        assert self.n_microbatches >= 1
+        assert self.clip_mode in ("none", "per_layer")

@@ -1,0 +1,171 @@
+"""Logical-axis -> mesh-axis sharding rules.
+
+Params/activations/caches declare logical axes (see models/common.py);
+this module maps them onto the production mesh ("pod", "data", "model")
+GSPMD-style, with divisibility-aware fallbacks (e.g. hymba's 25 heads or
+whisper's 51865 vocab can't split 16 ways -> replicate that dim and rely on
+the ffn/vocab dims that do divide).
+
+Key placements:
+  batch       -> ("pod","data")       (data parallel)
+  heads/kv    -> "model"              (tensor parallel attention)
+  ffn/expert_ffn -> "model"           (tensor parallel mlp)
+  experts     -> "model"              (expert parallel, deepseek)
+  vocab       -> "model"              (sharded embedding/logits)
+  cache seq   -> "model"              (decode: distributed KV slots)
+  layers      -> None                 (the L2L relay axis: never sharded)
+
+``zero_shard_data`` additionally shards the stacked layer params over the
+``data`` axis when the leading dims divide (beyond-paper, ZeRO-style EPS
+partitioning — the paper's §2 notes L2L composes with ZeRO).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import ParamSpec, is_spec
+
+
+def _axis_size(mesh: Mesh, name) -> int:
+    if name is None:
+        return 1
+    if isinstance(name, tuple):
+        return int(np.prod([mesh.shape[n] for n in name]))
+    return mesh.shape[name]
+
+
+def _data_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.shape) or None
+
+
+def make_rules(cfg, mesh: Mesh, *, kind: str = "train",
+               batch_size: Optional[int] = None) -> dict:
+    """Logical axis -> mesh axis (or tuple / None)."""
+    model_ax = "model" if "model" in mesh.shape else None
+    m = _axis_size(mesh, model_ax)
+    data_ax = _data_axes(mesh)
+    d = _axis_size(mesh, data_ax)
+
+    def fits(n):
+        return model_ax if (m > 1 and n % m == 0) else None
+
+    rules = {
+        "batch": data_ax if (batch_size is None or batch_size % d == 0)
+        else None,
+        "layers": None,
+        "d_model": None,
+        "heads": fits(cfg.n_heads),
+        "kv": fits(cfg.n_kv_heads),
+        "head_dim": None,
+        "ffn": fits(cfg.d_ff),
+        "expert_ffn": None,
+        "experts": None,
+        "vocab": fits(cfg.vocab_size),
+        "heads_x_dim": fits(cfg.d_model),
+        "lora": None,
+        "state": None,
+        "conv": None,
+        "seq": None,
+    }
+    if cfg.n_experts:
+        if m > 1 and cfg.n_experts % m == 0:
+            rules["experts"] = model_ax          # expert parallel (deepseek)
+            rules["expert_ffn"] = None
+        else:
+            rules["experts"] = None
+            rules["expert_ffn"] = fits(cfg.d_ff_expert)  # TP inside experts
+    if kind == "decode":
+        # distributed KV cache: shard the seq slots over "model"; the kv
+        # head dim stays replicated (can't double-use the axis).
+        rules = dict(rules, seq=model_ax, kv=None, heads=rules["heads"])
+    if kind == "hybrid_state":
+        rules = dict(rules, ffn=fits(cfg.d_model))
+    return rules
+
+
+def spec_to_pspec(axes: tuple, rules: dict, shape: tuple = None,
+                  mesh: Mesh = None) -> P:
+    """axes: tuple of logical names (or None) per dim -> PartitionSpec.
+    Ensures no mesh axis is used twice (later dims lose) and — when shape
+    and mesh are given — drops assignments whose dim isn't divisible by
+    the axis size (jax requires divisible input shardings)."""
+    used = set()
+    entries = []
+    for i, ax in enumerate(axes):
+        mesh_ax = rules.get(ax) if ax is not None else None
+        flat = (mesh_ax if isinstance(mesh_ax, tuple)
+                else (mesh_ax,) if mesh_ax else ())
+        if mesh_ax is None or any(f in used for f in flat):
+            entries.append(None)
+            continue
+        if shape is not None and mesh is not None:
+            if shape[i] % _axis_size(mesh, mesh_ax) != 0:
+                entries.append(None)
+                continue
+        used.update(flat)
+        entries.append(mesh_ax)
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def pspec_tree(spec_tree, rules: dict, mesh: Mesh = None):
+    """ParamSpec tree -> PartitionSpec tree."""
+    return jax.tree.map(
+        lambda s: spec_to_pspec(s.axes, rules, s.shape, mesh),
+        spec_tree, is_leaf=is_spec)
+
+
+def shardings(spec_tree, rules: dict, mesh: Mesh, memory_kind=None):
+    # memory_kind=None (default space) for device residency: an explicit
+    # "device" kind makes jax emit annotate_device_placement custom calls
+    # on outputs, which the SPMD partitioner rejects when unsharded.
+    mk = None if memory_kind == "device" else memory_kind
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, spec_to_pspec(s.axes, rules, s.shape,
+                                                    mesh),
+                                memory_kind=mk),
+        spec_tree, is_leaf=is_spec)
+
+
+def activation_pspec(rules: dict, with_ub: bool = False) -> P:
+    """(B,S,d) or (UB,B,S,d) activations: batch data-parallel."""
+    b = rules.get("batch")
+    return P(None, b) if with_ub else P(b)
+
+
+def batch_pspecs(cfg, shape, mesh, rules) -> dict:
+    """PartitionSpecs for the input batch dict."""
+    from repro.models.model import batch_spec
+    return pspec_tree(batch_spec(cfg, shape), rules)
+
+
+def param_shardings(model, mesh, rules, *, weight_stream=False,
+                    zero_shard_data=False):
+    """NamedShardings for the full param tree {"embed","head","groups"}.
+    Groups go to pinned_host when weight_stream (the EPS residency)."""
+    from repro.core.eps import memories_supported
+    specs = model.param_specs()
+    kind_groups = ("pinned_host" if (weight_stream and memories_supported())
+                   else "device")
+    emb = shardings(specs["embed"], rules, mesh)
+    head = shardings(specs["head"], rules, mesh)
+    g_rules = dict(rules)
+    if zero_shard_data:
+        g_rules["layers"] = _data_axes(mesh)
+    groups = tuple(shardings(g, g_rules, mesh, memory_kind=kind_groups)
+                   for g in specs["groups"])
+    return {"embed": emb, "head": head, "groups": groups}
+
+
+def layer_slice_pspecs(model, mesh, rules):
+    """Per-group pspec tree for ONE layer (no stacked axis) — used by the
+    EPS relay device_put inside the scans."""
+    out = []
+    for g in model.groups:
+        out.append(pspec_tree(g.spec, rules))
+    return tuple(out)

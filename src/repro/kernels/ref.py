@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for every Pallas kernel (the tests' ground truth)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1.0e30
+
+
+def ref_attention(q, k, v, *, causal=True, window=0, soft_cap=0.0):
+    """q,k,v: (B,H,S,D) — naive full-materialization attention."""
+    B, H, Sq, D = q.shape
+    Sk = k.shape[2]
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(D)
+    if soft_cap > 0:
+        s = soft_cap * jnp.tanh(s / soft_cap)
+    qp = jnp.arange(Sq)[:, None]
+    kp = jnp.arange(Sk)[None, :]
+    allow = jnp.ones((Sq, Sk), bool)
+    if causal:
+        allow &= kp <= qp
+    if window > 0:
+        allow &= (qp - kp) < window
+    s = jnp.where(allow, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def ref_adam(p, g, m, v, a, clip_scale, *, b1=0.9, b2=0.999, eps=1e-8,
+             wd=0.0):
+    gf = g.astype(jnp.float32) * clip_scale
+    m2 = b1 * m + (1 - b1) * gf
+    v2 = b2 * v + (1 - b2) * gf * gf
+    upd = m2 / (jnp.sqrt(v2) + eps) + wd * p.astype(jnp.float32)
+    return (p.astype(jnp.float32) - a * upd).astype(p.dtype), m2, v2
+
+
+def ref_rmsnorm(x, scale, *, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps)
+            * scale.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,227 @@
+"""Assemble (step_fn, abstract inputs, shardings) for every
+(architecture x input shape x mesh) combination — the single source used by
+the dry-run, the roofline, and the perf iterations.
+
+Shape -> program mapping (see DESIGN.md §5 for the skips):
+
+* train_4k    -> L2L-p train_step (weight relay + stash offload + eager opt)
+* prefill_32k -> L2L prefill (layer-major forward relay)
+* decode_32k  -> serve_step against a full-context KV cache / SSM state
+* long_500k   -> serve_step with ring-buffer window (dense) or O(1) state
+                 (ssm/hybrid); whisper: skipped
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (INPUT_SHAPES, InputShape, ModelConfig,
+                                get_config)
+from repro.core import baseline, decode, l2l
+from repro.core.eps import EPSPlacements, mesh_placement, noop_placement, \
+    pspecs_like
+from repro.core.schedule import ExecutionConfig
+from repro.distributed import sharding as shd
+from repro.models.model import LayeredModel, batch_spec, batch_dtypes
+from repro.models.common import abstract, is_spec, ParamSpec
+from repro.optim import adam
+
+
+class BuiltStep(NamedTuple):
+    fn: Any                      # callable to jit
+    args: tuple                  # abstract (ShapeDtypeStruct) args
+    in_shardings: tuple
+    out_shardings: Any           # or None for auto
+    meta: dict                   # arch/shape/notes for reporting
+
+
+SKIPS = {("whisper-base", "long_500k"):
+         "enc-dec speech model: bounded source (1500 frames) and target "
+         "positions; 524k-token decode is not meaningful for the family "
+         "(DESIGN.md §5)"}
+
+
+def microbatches_for(shape: InputShape, mesh) -> int:
+    if shape.kind != "train":
+        return 1
+    dp = int(np.prod([mesh.shape[a] for a in ("pod", "data")
+                      if a in mesh.shape]))
+    ub = 4
+    while ub > 1 and (shape.global_batch // ub) % dp != 0:
+        ub //= 2
+    return ub
+
+
+def live_cache_len(cfg: ModelConfig, shape: InputShape) -> int:
+    """Ring-buffer size for decode shapes."""
+    if cfg.family == "ssm":
+        return 1                                  # state only, no KV slots
+    if shape.name == "long_500k":
+        w = cfg.sliding_window or cfg.long_context_window
+        return min(w, shape.seq_len)
+    if cfg.sliding_window:
+        return min(cfg.sliding_window, shape.seq_len)
+    return shape.seq_len
+
+
+def decode_window(cfg: ModelConfig, shape: InputShape) -> int:
+    if shape.name == "long_500k" and not cfg.sliding_window \
+            and cfg.family != "ssm":
+        return cfg.long_context_window
+    return 0   # model default (cfg.sliding_window applies inside decode_ctx)
+
+
+def _batch_abstract(cfg, shape):
+    spec = batch_spec(cfg, shape)
+    dts = batch_dtypes(cfg, shape)
+    return {k: jax.ShapeDtypeStruct(s.shape, dts[k])
+            for k, s in spec.items()}
+
+
+def _batch_shardings(cfg, shape, mesh, rules):
+    spec = batch_spec(cfg, shape)
+    return {k: NamedSharding(mesh, shd.spec_to_pspec(s.axes, rules,
+                                                     s.shape, mesh))
+            for k, s in spec.items()}
+
+
+def _opt_abstract(optimizer, params_abs):
+    def init_like(p):
+        return jax.eval_shape(optimizer.init, p)
+    return {
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+        "embed": init_like(params_abs["embed"]),
+        "head": init_like(params_abs["head"]),
+        "groups": tuple(init_like(g) for g in params_abs["groups"]),
+    }
+
+
+def _opt_shardings(param_sh, opt_abs, mesh):
+    def like(sh_tree, state_tree):
+        pspecs = jax.tree.map(lambda s: s.spec, sh_tree)
+        kinds = jax.tree.leaves(sh_tree)[0].memory_kind if jax.tree.leaves(
+            sh_tree) else "device"
+        ps = pspecs_like(pspecs, state_tree)
+        return jax.tree.map(
+            lambda p: NamedSharding(mesh, p, memory_kind=kinds), ps,
+            is_leaf=lambda x: isinstance(x, P))
+    return {
+        "step": NamedSharding(mesh, P()),
+        "embed": like(param_sh["embed"], opt_abs["embed"]),
+        "head": like(param_sh["head"], opt_abs["head"]),
+        "groups": tuple(like(param_sh["groups"][i], opt_abs["groups"][i])
+                        for i in range(len(opt_abs["groups"]))),
+    }
+
+
+def make_exec_cfg(shape: InputShape, cfg: ModelConfig, mesh,
+                  overrides: Optional[dict] = None) -> ExecutionConfig:
+    base = dict(
+        n_microbatches=microbatches_for(shape, mesh),
+        offload_stash=(shape.kind == "train"),
+        weight_stream=True,
+        eager_optimizer=True,
+        decode_window=decode_window(cfg, shape),
+    )
+    if overrides:
+        base.update(overrides)
+    return ExecutionConfig(**base)
+
+
+def make_placements_for(model, exec_cfg, mesh, rules) -> EPSPlacements:
+    from repro.core.eps import memories_supported
+    noop = noop_placement()
+    n = len(model.groups)
+    if not memories_supported():
+        # backend strips memory-space transfers (see eps.memories_supported):
+        # the L2L schedule runs unchanged, placement becomes logical-only.
+        return EPSPlacements((noop,) * n, (noop,) * n, noop)
+    optimizer = adam()
+    slice_pspecs = shd.layer_slice_pspecs(model, mesh, rules)
+    opt_slice_pspecs = []
+    for gi, g in enumerate(model.groups):
+        layer_abs = abstract(g.spec)
+        opt_abs = jax.eval_shape(optimizer.init, layer_abs)
+        opt_slice_pspecs.append(pspecs_like(slice_pspecs[gi], opt_abs))
+    stash_pspec = P(None, rules.get("batch"))
+    ws = tuple(mesh_placement(mesh, sp) for sp in slice_pspecs) \
+        if exec_cfg.weight_stream else (noop,) * n
+    ops_ = tuple(mesh_placement(mesh, sp) for sp in opt_slice_pspecs) \
+        if exec_cfg.weight_stream else (noop,) * n
+    st = mesh_placement(mesh, stash_pspec) if exec_cfg.offload_stash else noop
+    return EPSPlacements(ws, ops_, st)
+
+
+# ===========================================================================
+# Builders
+# ===========================================================================
+def build(arch: str, shape_name: str, mesh, *, variant: str = "full",
+          exec_overrides: Optional[dict] = None,
+          rule_overrides: Optional[dict] = None,
+          cfg_override: Optional[ModelConfig] = None) -> BuiltStep:
+    shape = INPUT_SHAPES[shape_name]
+    if (arch, shape_name) in SKIPS:
+        raise SkipCombo(SKIPS[(arch, shape_name)])
+    cfg = cfg_override or get_config(arch, variant)
+    model = LayeredModel(cfg)
+    kind = "decode" if shape.kind == "decode" else "train"
+    rules = shd.make_rules(cfg, mesh, kind=kind,
+                           batch_size=shape.global_batch)
+    if rule_overrides:
+        rules.update(rule_overrides)
+    exec_cfg = make_exec_cfg(shape, cfg, mesh, exec_overrides)
+    placements = make_placements_for(model, exec_cfg, mesh, rules)
+
+    params_abs = model.abstract_params()
+    param_sh = shd.param_shardings(model, mesh, rules,
+                                   weight_stream=exec_cfg.weight_stream)
+    meta = {"arch": arch, "shape": shape_name, "kind": shape.kind,
+            "exec": dataclasses.asdict(exec_cfg),
+            "mesh": dict(mesh.shape)}
+
+    if shape.kind == "train":
+        optimizer = adam()
+        step = l2l.make_train_step(model, optimizer, exec_cfg, placements)
+        opt_abs = _opt_abstract(optimizer, params_abs)
+        opt_sh = _opt_shardings(param_sh, opt_abs, mesh)
+        batch_abs = _batch_abstract(cfg, shape)
+        batch_sh = _batch_shardings(cfg, shape, mesh, rules)
+        return BuiltStep(step, (params_abs, opt_abs, batch_abs),
+                         (param_sh, opt_sh, batch_sh),
+                         (param_sh, opt_sh, None), meta)
+
+    if shape.kind == "prefill":
+        fn = l2l.make_prefill_fn(model, exec_cfg, placements)
+        batch_abs = _batch_abstract(cfg, shape)
+        batch_sh = _batch_shardings(cfg, shape, mesh, rules)
+        return BuiltStep(fn, (params_abs, batch_abs),
+                         (param_sh, batch_sh), None, meta)
+
+    # decode
+    live = live_cache_len(cfg, shape)
+    meta["live_cache"] = live
+    fn = decode.make_serve_step(model, exec_cfg, placements)
+    caches_abs = decode.init_caches(model, shape.global_batch, live,
+                                    abstract_only=True)
+    cache_specs = model.cache_specs(shape.global_batch, live)
+    cache_sh = tuple(
+        jax.tree.map(lambda s: NamedSharding(
+            mesh, shd.spec_to_pspec(s.axes, rules, s.shape, mesh)),
+            spec, is_leaf=is_spec)
+        for spec in cache_specs)
+    token_abs = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    pos_abs = jax.ShapeDtypeStruct((), jnp.int32)
+    token_sh = NamedSharding(mesh, P(rules.get("batch")))
+    pos_sh = NamedSharding(mesh, P())
+    return BuiltStep(fn, (params_abs, caches_abs, token_abs, pos_abs),
+                     (param_sh, cache_sh, token_sh, pos_sh),
+                     (None, cache_sh), meta)
+
+
+class SkipCombo(Exception):
+    pass

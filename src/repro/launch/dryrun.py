@@ -1,0 +1,319 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+on the production meshes and extract the roofline terms.
+
+The two lines above MUST stay the first statements in this module (before
+any jax import) — jax locks the device count on first init.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+        --mesh single            # 16x16 (256 chips) + roofline terms
+    PYTHONPATH=src python -m repro.launch.dryrun --mesh multi  # 2x16x16
+
+Results land in experiments/dryrun/<mesh>/<arch>__<shape>.json and feed
+EXPERIMENTS.md §Dry-run and §Roofline.
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from repro.configs.base import INPUT_SHAPES, get_config, list_archs
+from repro.launch import mesh as mesh_mod
+from repro.launch.build import SKIPS, SkipCombo, build
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8": 1,
+                "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+                "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1}
+
+_SHAPE_RE = re.compile(r"=\s*(?:\()?\s*(\w+)\[([\d,]*)\]")
+
+
+def parse_collective_bytes(hlo_text: str) -> dict:
+    """Per-device bytes moved by collectives, by op kind (result-shape
+    convention: the bytes that land on each device)."""
+    out = {c: {"count": 0, "bytes": 0} for c in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        for c in COLLECTIVES:
+            # match the op name after '=' e.g. '%x = bf16[..] all-reduce('
+            if f" {c}(" in stripped or f" {c}-start(" in stripped:
+                m = _SHAPE_RE.search(stripped)
+                if not m:
+                    continue
+                dt, dims = m.group(1), m.group(2)
+                nbytes = _DTYPE_BYTES.get(dt, 4)
+                n = 1
+                if dims:
+                    for d in dims.split(","):
+                        n *= int(d)
+                out[c]["count"] += 1
+                out[c]["bytes"] += n * nbytes
+                break
+    return out
+
+
+def cost_get(ca: dict, key: str) -> float:
+    return float(ca.get(key, 0.0)) if ca else 0.0
+
+
+# ---------------------------------------------------------------------------
+# Depth probes: XLA's cost_analysis counts while-loop bodies ONCE, so the
+# scanned (depth-N) program under-reports FLOPs/bytes/collectives by the
+# trip count.  We compile small UNROLLED depths (all-groups-1, then 2 for
+# one group at a time) and extrapolate exactly linearly to the full depth.
+# ---------------------------------------------------------------------------
+def group_depths(cfg):
+    if cfg.family == "audio":
+        return (cfg.n_encoder_layers, cfg.n_layers)
+    if cfg.family == "moe" and cfg.first_dense_layers:
+        return (cfg.first_dense_layers,
+                cfg.n_layers - cfg.first_dense_layers)
+    return (cfg.n_layers,)
+
+
+def with_depths(cfg, depths):
+    if cfg.family == "audio":
+        enc, dec = depths
+        return cfg.replace(n_encoder_layers=enc, n_layers=dec)
+    if cfg.family == "moe" and cfg.first_dense_layers:
+        d0, d1 = depths
+        return cfg.replace(first_dense_layers=d0, n_layers=d0 + d1)
+    (d,) = depths
+    return cfg.replace(n_layers=d)
+
+
+def _cost_vector(built, mesh):
+    with mesh:
+        compiled = jax.jit(built.fn, in_shardings=built.in_shardings,
+                           out_shardings=built.out_shardings
+                           ).lower(*built.args).compile()
+        ca = compiled.cost_analysis()
+        hlo = compiled.as_text()
+    coll = parse_collective_bytes(hlo)
+    vec = {"flops": cost_get(ca, "flops"),
+           "bytes_accessed": cost_get(ca, "bytes accessed")}
+    for c, v in coll.items():
+        vec[f"coll_bytes::{c}"] = float(v["bytes"])
+        vec[f"coll_count::{c}"] = float(v["count"])
+    return vec
+
+
+def probe_costs(arch, shape_name, mesh, variant, exec_overrides,
+                rule_overrides, cfg_patch=None):
+    """Unrolled reduced-depth compiles + exact linear extrapolation."""
+    cfg = get_config(arch, variant)
+    if cfg_patch:
+        cfg = cfg.replace(**cfg_patch)
+    full = group_depths(cfg)
+    G = len(full)
+    probe_exec = dict(exec_overrides or {})
+    probe_exec.update(n_microbatches=1, unroll_layers=True)
+    base_depths = tuple(1 for _ in full)
+    probes = [base_depths] + [
+        tuple(2 if j == i else 1 for j in range(G)) for i in range(G)]
+    vecs = []
+    for d in probes:
+        built = build(arch, shape_name, mesh, variant=variant,
+                      exec_overrides=probe_exec,
+                      rule_overrides=rule_overrides,
+                      cfg_override=with_depths(cfg, d))
+        vecs.append(_cost_vector(built, mesh))
+    keys = vecs[0].keys()
+    total = {}
+    for k in keys:
+        t = vecs[0][k]
+        for i in range(G):
+            delta = max(vecs[1 + i][k] - vecs[0][k], 0.0)
+            t += (full[i] - 1) * delta
+        total[k] = t
+    # analytic correction: rwkv's wkv recurrence is a while loop over seq
+    # even when layers are unrolled — its flops are added from the closed
+    # form (6 * d * head_dim flops per token per layer, x4 for fwd+bwd+
+    # recompute in training, x1 in inference).
+    if cfg.family == "ssm":
+        shape = INPUT_SHAPES[shape_name]
+        dp = max(1, int(np.prod([mesh.shape[a] for a in ("pod", "data")
+                                 if a in mesh.shape])))
+        if shape.kind == "decode":
+            toks_per_dev = shape.global_batch / min(dp, shape.global_batch)
+        else:
+            toks_per_dev = shape.global_batch * shape.seq_len / dp
+        factor = 4.0 if shape.kind == "train" else 1.0
+        wkv = (6.0 * cfg.d_model * cfg.rwkv_head_dim * toks_per_dev
+               * cfg.n_layers * factor)
+        total["flops"] += wkv
+        total["wkv_analytic_flops"] = wkv
+    return total, [dict(v) for v in vecs]
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool,
+            exec_overrides=None, rule_overrides=None, variant="full",
+            probes: bool = True, cfg_patch=None) -> dict:
+    t0 = time.time()
+    mesh = mesh_mod.make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16", "chips": n_chips,
+           "status": "ok", "cfg_patch": cfg_patch or {}}
+    cfg_override = None
+    if cfg_patch:
+        cfg_override = get_config(arch, variant).replace(**cfg_patch)
+    try:
+        built = build(arch, shape_name, mesh, variant=variant,
+                      exec_overrides=exec_overrides,
+                      rule_overrides=rule_overrides,
+                      cfg_override=cfg_override)
+    except SkipCombo as e:
+        rec.update(status="skip", reason=str(e))
+        return rec
+    with mesh:
+        jitted = jax.jit(built.fn, in_shardings=built.in_shardings,
+                         out_shardings=built.out_shardings)
+        lowered = jitted.lower(*built.args)
+        compiled = lowered.compile()
+        ma = compiled.memory_analysis()
+        hlo = compiled.as_text()
+    rec.update(
+        meta=built.meta,
+        memory={
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "host_argument_bytes": ma.host_argument_size_in_bytes,
+            "host_temp_bytes": ma.host_temp_size_in_bytes,
+            "host_output_bytes": ma.host_output_size_in_bytes,
+        },
+        collectives_scanned=parse_collective_bytes(hlo),
+        hlo_bytes=len(hlo),
+    )
+    if probes:
+        total, probe_vecs = probe_costs(arch, shape_name, mesh, variant,
+                                        exec_overrides, rule_overrides,
+                                        cfg_patch=cfg_patch)
+        coll = {c: {"count": int(total.get(f"coll_count::{c}", 0)),
+                    "bytes": int(total.get(f"coll_bytes::{c}", 0))}
+                for c in COLLECTIVES}
+        rec.update(
+            cost={"flops": total["flops"],
+                  "bytes_accessed": total["bytes_accessed"]},
+            collectives=coll,
+            probe_vectors=probe_vecs,
+        )
+    rec["compile_s"] = round(time.time() - t0, 1)
+    return rec
+
+
+def roofline_terms(rec: dict, cfg, shape) -> dict:
+    """Per-device cost_analysis numbers -> the three roofline terms (s).
+
+    Convention: compiled per-device HLO FLOPs/bytes ARE already the
+    per-chip share, so term = per_device_quantity / per_chip_rate (equal to
+    the spec's total/(chips*rate))."""
+    peak = mesh_mod.PEAK_FLOPS_BF16
+    hbm = mesh_mod.HBM_BW
+    ici = mesh_mod.ICI_BW
+    flops = rec["cost"]["flops"]
+    byts = rec["cost"]["bytes_accessed"]
+    cbytes = sum(v["bytes"] for v in rec["collectives"].values())
+    compute_t = flops / peak
+    memory_t = byts / hbm
+    coll_t = cbytes / ici
+    dom = max(("compute", compute_t), ("memory", memory_t),
+              ("collective", coll_t), key=lambda kv: kv[1])[0]
+    # model flops (useful work)
+    n_active = cfg.param_count(active_only=True)
+    chips = rec["chips"]
+    if shape.kind == "train":
+        D = shape.seq_len * shape.global_batch
+        model_flops = 6 * n_active * D
+    elif shape.kind == "prefill":
+        D = shape.seq_len * shape.global_batch
+        model_flops = 2 * n_active * D
+    else:
+        model_flops = 2 * n_active * shape.global_batch
+    useful = model_flops / chips / max(flops, 1.0)
+    return {"compute_s": compute_t, "memory_s": memory_t,
+            "collective_s": coll_t, "collective_bytes_per_dev": cbytes,
+            "dominant": dom, "model_flops_total": model_flops,
+            "useful_flops_ratio": useful}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi",
+                                                         "both"])
+    ap.add_argument("--variant", default="full")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--optimized", action="store_true",
+                    help="apply the §Perf beyond-paper fixes (grouped GQA "
+                         "decode + local MoE dispatch) on top of the "
+                         "paper-faithful schedule")
+    args = ap.parse_args()
+    cfg_patch = ({"grouped_decode_attn": True, "moe_ep_constraint": True}
+                 if args.optimized else None)
+    if args.optimized and args.tag == "baseline":
+        args.tag = "optimized"
+
+    archs = list_archs() if args.arch == "all" else args.arch.split(",")
+    archs = [a for a in archs if a != "bert-large"]
+    shapes = (list(INPUT_SHAPES) if args.shape == "all"
+              else args.shape.split(","))
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    failures = []
+    for multi in meshes:
+        mdir = os.path.join(args.out, args.tag,
+                            "multi" if multi else "single")
+        os.makedirs(mdir, exist_ok=True)
+        for arch in archs:
+            for shape_name in shapes:
+                out_path = os.path.join(mdir, f"{arch}__{shape_name}.json")
+                try:
+                    rec = run_one(arch, shape_name, multi,
+                                  variant=args.variant,
+                                  cfg_patch=cfg_patch)
+                    if rec["status"] == "ok":
+                        cfg = get_config(arch, args.variant)
+                        rec["roofline"] = roofline_terms(
+                            rec, cfg, INPUT_SHAPES[shape_name])
+                except Exception as e:   # noqa: BLE001 — report, keep going
+                    rec = {"arch": arch, "shape": shape_name,
+                           "status": "error", "error": repr(e),
+                           "trace": traceback.format_exc()[-2000:]}
+                    failures.append((arch, shape_name, repr(e)))
+                with open(out_path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    r = rec.get("roofline", {})
+                    extra = (f" compile={rec['compile_s']}s "
+                             f"dom={r.get('dominant','?')}")
+                print(f"[{'multi' if multi else 'single'}] "
+                      f"{arch} x {shape_name}: {status}{extra}", flush=True)
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for a, s, e in failures:
+            print(f"  {a} x {s}: {e}")
+        raise SystemExit(1)
+    print("\nALL DRY-RUNS OK")
+
+
+if __name__ == "__main__":
+    main()

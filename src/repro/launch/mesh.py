@@ -1,0 +1,35 @@
+"""Production mesh construction.
+
+Functions only — importing this module never touches jax device state.
+Target: TPU v5e, 256 chips/pod (16x16), 2 pods for the multi-pod dry-run.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 512 if multi_pod else 256
+    devices = jax.devices()[:n]
+    assert len(devices) == n, \
+        (f"need {n} devices (set XLA_FLAGS=--xla_force_host_platform_"
+         f"device_count=512 BEFORE importing jax); have {len(devices)}")
+    import numpy as np
+    dev_array = np.asarray(devices).reshape(shape)
+    return jax.sharding.Mesh(dev_array, axes)
+
+
+def make_debug_mesh(data: int = 2, model: int = 4):
+    """Small mesh for tests (8 forced host devices)."""
+    devices = jax.devices()[:data * model]
+    import numpy as np
+    return jax.sharding.Mesh(np.asarray(devices).reshape(data, model),
+                             ("data", "model"))
+
+
+# Hardware constants for the roofline (TPU v5e)
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_BW = 50e9                     # bytes/s per link

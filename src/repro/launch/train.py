@@ -1,0 +1,139 @@
+"""Training driver.
+
+End-to-end single-host training with the L2L engine (or the baseline
+engines for comparison) on the synthetic LM pipeline::
+
+    PYTHONPATH=src python -m repro.launch.train --arch bert-large \
+        --engine l2l --steps 300 --batch 32 --seq 128 --ub 4
+
+On a real TPU pod this same driver runs under the production mesh with
+``--mesh single|multi`` (sharded params, per-layer eager reduction); on CPU
+it runs unsharded.  Checkpoints via repro.checkpoint.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import io as ckpt_io
+from repro.configs.base import get_config
+from repro.core import baseline, l2l
+from repro.core.schedule import ExecutionConfig
+from repro.data.synthetic import DataConfig, SyntheticLM, add_modality_stubs
+from repro.models.model import LayeredModel
+from repro.optim.optimizers import get_optimizer, make_schedule
+
+
+def build_step(model, args):
+    opt = get_optimizer(
+        args.optimizer,
+        schedule=make_schedule(args.lr, warmup=args.warmup,
+                               total=args.steps, kind=args.lr_schedule))
+    exec_cfg = ExecutionConfig(
+        n_microbatches=args.ub,
+        offload_stash=args.offload_stash,
+        weight_stream=args.weight_stream,
+        eager_optimizer=(args.engine == "l2l" and not args.no_eager),
+        host_optimizer=getattr(args, "host_optimizer", False),
+        clip_mode="per_layer" if args.clip > 0 else "none",
+        clip_norm=args.clip)
+    if args.engine == "l2l":
+        step = l2l.make_train_step(model, opt, exec_cfg)
+        init_opt = l2l.init_opt_state
+    else:
+        step = baseline.make_train_step(model, opt, exec_cfg)
+        init_opt = baseline.init_opt_state
+    return step, (lambda params: init_opt(opt, params))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="bert-large")
+    ap.add_argument("--variant", default="smoke",
+                    choices=["smoke", "full"])
+    ap.add_argument("--engine", default="l2l",
+                    choices=["l2l", "baseline"])
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ub", type=int, default=4)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--warmup", type=int, default=20)
+    ap.add_argument("--lr-schedule", default="cosine")
+    ap.add_argument("--optimizer", default="adam",
+                    choices=["adam", "adamw", "lamb", "sgd"])
+    ap.add_argument("--clip", type=float, default=1.0)
+    ap.add_argument("--no-eager", action="store_true")
+    ap.add_argument("--offload-stash", action="store_true")
+    ap.add_argument("--weight-stream", action="store_true")
+    ap.add_argument("--host-optimizer", action="store_true",
+                    help="run the optimizer on the EPS host "
+                         "(compute_on 'device_host')")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--d-model", type=int, default=0,
+                    help="override width (e.g. ~100M model)")
+    ap.add_argument("--n-layers", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, args.variant)
+    over = {"max_seq_len": max(cfg.max_seq_len, args.seq)}
+    if args.d_model:
+        over.update(d_model=args.d_model,
+                    d_ff=args.d_model * 4,
+                    n_heads=max(1, args.d_model // 64),
+                    n_kv_heads=max(1, min(cfg.n_kv_heads,
+                                          args.d_model // 64)))
+    if args.n_layers:
+        over["n_layers"] = args.n_layers
+    cfg = cfg.replace(**over)
+    model = LayeredModel(cfg)
+    print(f"arch={cfg.name} engine={args.engine} params="
+          f"{cfg.param_count()/1e6:.1f}M layers={cfg.n_layers} "
+          f"d={cfg.d_model}")
+
+    params = model.init_params(jax.random.PRNGKey(args.seed))
+    step_fn, init_opt = build_step(model, args)
+    opt_state = init_opt(params)
+    step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
+
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size,
+                                  seq_len=args.seq,
+                                  global_batch=args.batch,
+                                  seed=args.seed))
+    rng = np.random.default_rng(args.seed)
+    losses = []
+    t0 = time.time()
+    for i in range(args.steps):
+        batch_np = add_modality_stubs(data.batch(i), cfg, rng)
+        batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        if i % args.log_every == 0 or i == args.steps - 1:
+            dt = time.time() - t0
+            print(f"step {i:5d}  loss {loss:8.4f}  gnorm "
+                  f"{float(metrics['grad_norm']):8.3f}  "
+                  f"{dt/max(i,1):.2f}s/step", flush=True)
+        if args.ckpt_dir and args.ckpt_every and \
+                (i + 1) % args.ckpt_every == 0:
+            ckpt_io.save_train_state(args.ckpt_dir, params, opt_state, i + 1)
+    if args.ckpt_dir:
+        ckpt_io.save_train_state(args.ckpt_dir, params, opt_state,
+                                 args.steps)
+    print(json.dumps({"final_loss": losses[-1],
+                      "mean_last10": float(np.mean(losses[-10:])),
+                      "initial_loss": losses[0],
+                      "steps": args.steps}))
+    return losses
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,354 @@
+"""Attention: GQA / MHA, MLA (DeepSeek-V2), sliding-window, cross-attention,
+memory-efficient chunked softmax, and decode paths against KV caches
+(full, ring-buffer windowed, and MLA-compressed with the absorbed-matmul
+trick).
+
+All functions are pure; parameters come in as pytrees built from the
+``ParamSpec`` trees declared here.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec, apply_rope, apply_norm, rmsnorm_spec
+
+NEG_INF = -1.0e30
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+def gqa_spec(cfg, cross: bool = False) -> dict:
+    d, H, KV, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    spec = {
+        "wq": ParamSpec((d, H, Dh), ("d_model", "heads", "head_dim")),
+        "wk": ParamSpec((d, KV, Dh), ("d_model", "kv", "head_dim")),
+        "wv": ParamSpec((d, KV, Dh), ("d_model", "kv", "head_dim")),
+        "wo": ParamSpec((H, Dh, d), ("heads", "head_dim", "d_model")),
+    }
+    if cfg.qkv_bias:
+        spec["bq"] = ParamSpec((H, Dh), ("heads", "head_dim"), "zeros")
+        spec["bk"] = ParamSpec((KV, Dh), ("kv", "head_dim"), "zeros")
+        spec["bv"] = ParamSpec((KV, Dh), ("kv", "head_dim"), "zeros")
+    if cfg.o_bias:
+        spec["bo"] = ParamSpec((d,), ("d_model",), "zeros")
+    return spec
+
+
+def mla_spec(cfg) -> dict:
+    d, H = cfg.d_model, cfg.n_heads
+    r, nd, rd, vd = (cfg.kv_lora_rank, cfg.qk_nope_dim, cfg.qk_rope_dim,
+                     cfg.v_head_dim)
+    return {
+        "wq": ParamSpec((d, H, nd + rd), ("d_model", "heads", "head_dim")),
+        "w_dkv": ParamSpec((d, r), ("d_model", "lora")),
+        "w_kr": ParamSpec((d, rd), ("d_model", "head_dim")),
+        "kv_norm": rmsnorm_spec(r)["scale"]._replace(axes=("lora",)),
+        "w_uk": ParamSpec((r, H, nd), ("lora", "heads", "head_dim")),
+        "w_uv": ParamSpec((r, H, vd), ("lora", "heads", "head_dim")),
+        "wo": ParamSpec((H, vd, d), ("heads", "head_dim", "d_model")),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Core softmax attention (chunked, online-softmax — the jnp analogue of the
+# Pallas flash kernel in repro/kernels/flash_attention.py)
+# ---------------------------------------------------------------------------
+def _mask(q_pos, k_pos, causal: bool, window: int):
+    """q_pos: (B,Sq), k_pos: (B,Sk) -> allow (B,1,Sq,Sk).  Slots with
+    k_pos < 0 are invalid (ring-buffer holes)."""
+    qp = q_pos[:, None, :, None]
+    kp = k_pos[:, None, None, :]
+    allow = kp >= 0
+    if causal:
+        allow &= kp <= qp
+    if window > 0:
+        allow &= qp - kp < window
+    return allow
+
+
+def attend(q, k, v, q_pos, k_pos, *, causal: bool, window: int = 0,
+           chunk: int = 0, soft_cap: float = 0.0):
+    """q: (B,Sq,H,D); k,v: (B,Sk,H,D) (kv heads already expanded to H).
+
+    Returns (B,Sq,H,D).  ``chunk``>0 streams over KV chunks with an online
+    softmax so the (Sq,Sk) score matrix is never fully materialized.
+    """
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    scale = 1.0 / math.sqrt(D)
+    qf = (q * scale).astype(jnp.float32)
+
+    def scores_of(k_c, kpos_c):
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, k_c.astype(jnp.float32))
+        if soft_cap > 0:
+            s = soft_cap * jnp.tanh(s / soft_cap)
+        allow = _mask(q_pos, kpos_c, causal, window)
+        return jnp.where(allow, s, NEG_INF)
+
+    if chunk <= 0 or Sk <= chunk:
+        s = scores_of(k, k_pos)
+        m = s.max(-1, keepdims=True)
+        p = jnp.exp(s - m)
+        l = p.sum(-1, keepdims=True)
+        o = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+        o = o / jnp.maximum(l, 1e-30).transpose(0, 2, 1, 3)
+        return o.astype(q.dtype)
+
+    if Sk % chunk:
+        # pad KV to a chunk multiple; padded slots get k_pos = -1 (masked)
+        pad = (-Sk) % chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=-1)
+        Sk += pad
+    n_chunks = Sk // chunk
+    k_cs = k.reshape(B, n_chunks, chunk, H, D).transpose(1, 0, 2, 3, 4)
+    v_cs = v.reshape(B, n_chunks, chunk, H, D).transpose(1, 0, 2, 3, 4)
+    kp_cs = k_pos.reshape(B, n_chunks, chunk).transpose(1, 0, 2)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        k_c, v_c, kp_c = xs
+        s = scores_of(k_c, kp_c)                         # (B,H,Sq,C) fp32
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + p.sum(-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p, v_c.astype(jnp.float32))
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, H, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    a0 = jnp.zeros((B, H, Sq, D), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (k_cs, v_cs, kp_cs))
+    o = acc / jnp.maximum(l, 1e-30)[..., None]
+    return o.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def attend_grouped_decode(q, k, v, q_pos, k_pos, *, causal: bool,
+                          window: int = 0, soft_cap: float = 0.0):
+    """Decode attention WITHOUT materializing expanded KV heads.
+
+    Beyond-paper optimization (§Perf): `expand_kv` under pjit broadcasts
+    the (B,S,KV,D) cache into a head-sharded (B,S,H,D) layout — the SPMD
+    partitioner can't reshard that efficiently and falls back to full
+    rematerialization (~GBs of all-gather per layer per step).  Keeping the
+    KV head dim grouped makes every einsum a plain batch contraction over
+    the seq-sharded cache: softmax partials + one psum, no broadcast.
+
+    q: (B,1,H,D); k,v: (B,S,KV,D) -> (B,1,H,D)
+    """
+    B, Sq, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = 1.0 / math.sqrt(D)
+    q5 = (q * scale).reshape(B, Sq, KV, G, D).astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", q5, k.astype(jnp.float32))
+    if soft_cap > 0:
+        s = soft_cap * jnp.tanh(s / soft_cap)
+    allow = _mask(q_pos, k_pos, causal, window)          # (B,1,Sq,S)
+    s = jnp.where(allow[:, :, None, :, :], s, NEG_INF)
+    m = s.max(-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", (p / l), v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def expand_kv(k, n_q_per_kv):
+    """(B,S,KV,D) -> (B,S,KV*n,D) by repeating each kv head."""
+    if n_q_per_kv == 1:
+        return k
+    B, S, KV, D = k.shape
+    k = jnp.broadcast_to(k[:, :, :, None, :], (B, S, KV, n_q_per_kv, D))
+    return k.reshape(B, S, KV * n_q_per_kv, D)
+
+
+# ---------------------------------------------------------------------------
+# GQA self / cross attention (training & prefill: full sequence)
+# ---------------------------------------------------------------------------
+def qkv_project(w, x, cfg, positions, *, rope: bool = True):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhe->bshe", x, w["wq"].astype(dt))
+    k = jnp.einsum("bsd,dke->bske", x, w["wk"].astype(dt))
+    v = jnp.einsum("bsd,dke->bske", x, w["wv"].astype(dt))
+    if "bq" in w:
+        q = q + w["bq"].astype(dt)
+        k = k + w["bk"].astype(dt)
+        v = v + w["bv"].astype(dt)
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta, cfg.rope_fraction)
+        k = apply_rope(k, positions, cfg.rope_theta, cfg.rope_fraction)
+    return q, k, v
+
+
+def out_project(w, o):
+    dt = o.dtype
+    y = jnp.einsum("bshe,hed->bsd", o, w["wo"].astype(dt))
+    if "bo" in w:
+        y = y + w["bo"].astype(dt)
+    return y
+
+
+def self_attention(w, x, cfg, positions, *, causal: bool = True,
+                   window: int = 0, rope: bool = True):
+    """Full-sequence self attention (train / prefill)."""
+    q, k, v = qkv_project(w, x, cfg, positions, rope=rope)
+    if cfg.use_pallas:
+        from repro.kernels import ops as kops
+        o = kops.flash_attention(q, expand_kv(k, cfg.n_q_per_kv),
+                                 expand_kv(v, cfg.n_q_per_kv),
+                                 causal=causal, window=window,
+                                 soft_cap=0.0)
+    else:
+        o = attend(q, expand_kv(k, cfg.n_q_per_kv),
+                   expand_kv(v, cfg.n_q_per_kv), positions, positions,
+                   causal=causal, window=window, chunk=cfg.attn_chunk)
+    return out_project(w, o)
+
+
+def cross_attention(w, x, mem, cfg, positions, mem_positions):
+    """x attends to mem (whisper decoder -> encoder)."""
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhe->bshe", x, w["wq"].astype(dt))
+    if "bq" in w:
+        q = q + w["bq"].astype(dt)
+    k = jnp.einsum("bsd,dke->bske", mem, w["wk"].astype(dt))
+    v = jnp.einsum("bsd,dke->bske", mem, w["wv"].astype(dt))
+    if "bk" in w:
+        k = k + w["bk"].astype(dt)
+        v = v + w["bv"].astype(dt)
+    o = attend(q, expand_kv(k, cfg.n_q_per_kv),
+               expand_kv(v, cfg.n_q_per_kv), positions, mem_positions,
+               causal=False, chunk=0)
+    return out_project(w, o)
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2) — train/prefill
+# ---------------------------------------------------------------------------
+def mla_attention(w, x, cfg, positions, *, causal: bool = True,
+                  window: int = 0):
+    dt = x.dtype
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    nd, rd = cfg.qk_nope_dim, cfg.qk_rope_dim
+    q = jnp.einsum("bsd,dhe->bshe", x, w["wq"].astype(dt))   # (B,S,H,nd+rd)
+    q_nope, q_rope = q[..., :nd], q[..., nd:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    c = x @ w["w_dkv"].astype(dt)                            # (B,S,r)
+    c = apply_norm({"scale": w["kv_norm"]}, c, cfg.norm_eps)
+    k_rope = (x @ w["w_kr"].astype(dt))[:, :, None, :]       # (B,S,1,rd)
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)
+    k_nope = jnp.einsum("bsr,rhe->bshe", c, w["w_uk"].astype(dt))
+    v = jnp.einsum("bsr,rhe->bshe", c, w["w_uv"].astype(dt))
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (B, S, H, rd))], axis=-1)
+    qq = jnp.concatenate([q_nope, q_rope], axis=-1)
+    # pad v up to qk dim for the shared attend() then slice back
+    o = attend(qq, k, jnp.pad(v, ((0, 0), (0, 0), (0, 0),
+                                  (0, qq.shape[-1] - v.shape[-1]))),
+               positions, positions, causal=causal, window=window,
+               chunk=cfg.attn_chunk)[..., :cfg.v_head_dim]
+    return jnp.einsum("bshe,hed->bsd", o, w["wo"].astype(dt))
+
+
+# ---------------------------------------------------------------------------
+# KV caches
+# ---------------------------------------------------------------------------
+def kv_cache_spec(cfg, batch: int, seq: int) -> dict:
+    """Per-layer cache spec (the layer stack dim is prepended by the model).
+
+    ``seq`` here is the *live* cache length: the full context for ordinary
+    decode, or the ring-buffer window for long-context decode."""
+    if cfg.use_mla:
+        r, rd = cfg.kv_lora_rank, cfg.qk_rope_dim
+        return {
+            "c": ParamSpec((batch, seq, r), ("batch", "seq", "lora"), "zeros"),
+            "kr": ParamSpec((batch, seq, rd), ("batch", "seq", "head_dim"),
+                            "zeros"),
+            "pos": ParamSpec((batch, seq), ("batch", "seq"), "zeros"),
+        }
+    KV, Dh = cfg.n_kv_heads, cfg.d_head
+    return {
+        "k": ParamSpec((batch, seq, KV, Dh), ("batch", "seq", "kv", "head_dim"),
+                       "zeros"),
+        "v": ParamSpec((batch, seq, KV, Dh), ("batch", "seq", "kv", "head_dim"),
+                       "zeros"),
+        "pos": ParamSpec((batch, seq), ("batch", "seq"), "zeros"),
+    }
+
+
+def _ring_index(cur_pos, cache_len):
+    return jnp.mod(cur_pos, cache_len)
+
+
+def decode_self_attention(w, x, cache, cfg, cur_pos, *, window: int = 0,
+                          rope: bool = True):
+    """One decode step.  x: (B,1,d); cache: dict from kv_cache_spec;
+    cur_pos: scalar int32 — current absolute position (same for the batch).
+
+    The new k/v is written at ``cur_pos % cache_len`` (ring buffer: for
+    full-context decode cache_len == seq so this is just cur_pos)."""
+    dt = x.dtype
+    B = x.shape[0]
+    pos = jnp.full((B, 1), cur_pos, jnp.int32)
+    q, k_new, v_new = qkv_project(w, x, cfg, pos, rope=rope)
+    slot = _ring_index(cur_pos, cache["pos"].shape[1])
+    k = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k_new.astype(cache["k"].dtype), slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v_new.astype(cache["v"].dtype), slot, axis=1)
+    cpos = jax.lax.dynamic_update_slice_in_dim(cache["pos"], pos, slot, axis=1)
+    if cfg.grouped_decode_attn:
+        o = attend_grouped_decode(q, k.astype(dt), v.astype(dt), pos, cpos,
+                                  causal=True, window=window)
+    else:
+        o = attend(q, expand_kv(k.astype(dt), cfg.n_q_per_kv),
+                   expand_kv(v.astype(dt), cfg.n_q_per_kv), pos, cpos,
+                   causal=True, window=window, chunk=0)
+    new_cache = {"k": k, "v": v, "pos": cpos}
+    return out_project(w, o), new_cache
+
+
+def decode_mla_attention(w, x, cache, cfg, cur_pos, *, window: int = 0):
+    """Absorbed-matmul MLA decode: scores against the *compressed* cache.
+
+    q_nope (B,1,H,nd) is absorbed through w_uk into the lora space, so the
+    per-step cost is O(S * (r + rd) * H) instead of O(S * H * (nd+rd))."""
+    dt = x.dtype
+    B = x.shape[0]
+    H, nd, rd, r = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.kv_lora_rank
+    pos = jnp.full((B, 1), cur_pos, jnp.int32)
+    q = jnp.einsum("bsd,dhe->bshe", x, w["wq"].astype(dt))
+    q_nope, q_rope = q[..., :nd], q[..., nd:]
+    q_rope = apply_rope(q_rope, pos, cfg.rope_theta)
+    c_new = x @ w["w_dkv"].astype(dt)
+    c_new = apply_norm({"scale": w["kv_norm"]}, c_new, cfg.norm_eps)
+    kr_new = (x @ w["w_kr"].astype(dt))[:, :, None, :]
+    kr_new = apply_rope(kr_new, pos, cfg.rope_theta)[:, :, 0, :]
+    slot = _ring_index(cur_pos, cache["pos"].shape[1])
+    c = jax.lax.dynamic_update_slice_in_dim(
+        cache["c"], c_new.astype(cache["c"].dtype), slot, axis=1)
+    kr = jax.lax.dynamic_update_slice_in_dim(
+        cache["kr"], kr_new.astype(cache["kr"].dtype), slot, axis=1)
+    cpos = jax.lax.dynamic_update_slice_in_dim(cache["pos"], pos, slot, axis=1)
+    # absorb: q_abs = q_nope @ w_uk  -> (B,1,H,r)
+    q_abs = jnp.einsum("bshe,rhe->bshr", q_nope, w["w_uk"].astype(dt))
+    scale = 1.0 / math.sqrt(nd + rd)
+    s = (jnp.einsum("bshr,btr->bhst", q_abs, c.astype(dt)) +
+         jnp.einsum("bshe,bte->bhst", q_rope, kr.astype(dt))).astype(jnp.float32)
+    s = s * scale
+    allow = _mask(pos, cpos, True, window)
+    s = jnp.where(allow, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    ctx_c = jnp.einsum("bhst,btr->bshr", p.astype(dt), c.astype(dt))
+    o = jnp.einsum("bshr,rhe->bshe", ctx_c, w["w_uv"].astype(dt))
+    y = jnp.einsum("bshe,hed->bsd", o, w["wo"].astype(dt))
+    return y, {"c": c, "kr": kr, "pos": cpos}

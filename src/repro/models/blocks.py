@@ -1,0 +1,270 @@
+"""Per-family transformer/SSM layer blocks with a uniform interface.
+
+Every block family provides:
+
+* ``spec(cfg)``                      — ParamSpec tree for ONE layer
+* ``apply(w, x, mem, ctx, cfg)``     — full-seq forward -> (x', aux_scalar)
+* ``decode(w, x, cache, mem, ctx, cfg)`` — one-token step -> (x', cache')
+* ``cache_spec(cfg, batch, live)``   — per-layer decode cache ParamSpecs
+
+``mem`` is the (differentiable) cross-attention memory (None except for
+encoder-decoder stacks).  ``ctx`` carries non-differentiable context:
+``positions`` (B,S) int32, ``mem_positions``, ``cur_pos`` (decode), and
+``window`` (already baked as int).  The L2L engine computes per-layer VJPs
+of ``apply`` w.r.t. (w, x, mem).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import ssm as ssm_mod
+from repro.models.common import ParamSpec, apply_norm, norm_spec
+from repro.models.mlp import mlp_spec, mlp_apply
+from repro.models.moe import moe_spec, moe_apply
+
+
+class Ctx(NamedTuple):
+    positions: Optional[jnp.ndarray] = None       # (B,S) int32
+    mem_positions: Optional[jnp.ndarray] = None   # (B,Sm) int32
+    cur_pos: Optional[jnp.ndarray] = None         # scalar int32 (decode)
+    window: int = 0                               # sliding window (0 = full)
+    causal: bool = True
+
+
+def _norm(w, x, cfg):
+    return apply_norm(w, x, cfg.norm_eps)
+
+
+# ===========================================================================
+# Dense decoder block (command-r / qwen / chatglm / granite / internvl-LM)
+# ===========================================================================
+def dense_spec(cfg) -> dict:
+    spec = {"ln1": norm_spec(cfg), "attn": attn.gqa_spec(cfg),
+            "mlp": mlp_spec(cfg)}
+    if not cfg.parallel_block:
+        spec["ln2"] = norm_spec(cfg)
+    return spec
+
+
+def dense_apply(w, x, mem, ctx: Ctx, cfg):
+    if cfg.parallel_block:      # command-r: attn ∥ mlp off one norm
+        h = _norm(w["ln1"], x, cfg)
+        a = attn.self_attention(w["attn"], h, cfg, ctx.positions,
+                                causal=ctx.causal, window=ctx.window)
+        m = mlp_apply(w["mlp"], h, cfg)
+        return x + a + m, jnp.float32(0.0)
+    h = _norm(w["ln1"], x, cfg)
+    x = x + attn.self_attention(w["attn"], h, cfg, ctx.positions,
+                                causal=ctx.causal, window=ctx.window)
+    x = x + mlp_apply(w["mlp"], _norm(w["ln2"], x, cfg), cfg)
+    return x, jnp.float32(0.0)
+
+
+def dense_decode(w, x, cache, mem, ctx: Ctx, cfg):
+    if cfg.parallel_block:
+        h = _norm(w["ln1"], x, cfg)
+        a, cache = attn.decode_self_attention(w["attn"], h, cache, cfg,
+                                              ctx.cur_pos, window=ctx.window)
+        m = mlp_apply(w["mlp"], h, cfg)
+        return x + a + m, cache
+    h = _norm(w["ln1"], x, cfg)
+    a, cache = attn.decode_self_attention(w["attn"], h, cache, cfg,
+                                          ctx.cur_pos, window=ctx.window)
+    x = x + a
+    x = x + mlp_apply(w["mlp"], _norm(w["ln2"], x, cfg), cfg)
+    return x, cache
+
+
+def dense_cache_spec(cfg, batch, live):
+    return attn.kv_cache_spec(cfg, batch, live)
+
+
+# ===========================================================================
+# MoE block (grok) and MLA+MoE block (deepseek-v2)
+# ===========================================================================
+def moe_block_spec(cfg, dense_ffn: bool = False) -> dict:
+    a_spec = attn.mla_spec(cfg) if cfg.use_mla else attn.gqa_spec(cfg)
+    ffn = (mlp_spec(cfg, cfg.d_ff_dense or cfg.d_ff) if dense_ffn
+           else moe_spec(cfg))
+    return {"ln1": norm_spec(cfg), "attn": a_spec, "ln2": norm_spec(cfg),
+            "ffn": ffn}
+
+
+def moe_block_apply(w, x, mem, ctx: Ctx, cfg):
+    h = _norm(w["ln1"], x, cfg)
+    if cfg.use_mla:
+        a = attn.mla_attention(w["attn"], h, cfg, ctx.positions,
+                               causal=ctx.causal, window=ctx.window)
+    else:
+        a = attn.self_attention(w["attn"], h, cfg, ctx.positions,
+                                causal=ctx.causal, window=ctx.window)
+    x = x + a
+    h2 = _norm(w["ln2"], x, cfg)
+    if "router" in w["ffn"]:
+        y, aux = moe_apply(w["ffn"], h2, cfg)
+    else:
+        y, aux = mlp_apply(w["ffn"], h2, cfg), jnp.float32(0.0)
+    return x + y, aux
+
+
+def moe_block_decode(w, x, cache, mem, ctx: Ctx, cfg):
+    h = _norm(w["ln1"], x, cfg)
+    if cfg.use_mla:
+        a, cache = attn.decode_mla_attention(w["attn"], h, cache, cfg,
+                                             ctx.cur_pos, window=ctx.window)
+    else:
+        a, cache = attn.decode_self_attention(w["attn"], h, cache, cfg,
+                                              ctx.cur_pos, window=ctx.window)
+    x = x + a
+    h2 = _norm(w["ln2"], x, cfg)
+    if "router" in w["ffn"]:
+        y, _ = moe_apply(w["ffn"], h2, cfg)
+    else:
+        y = mlp_apply(w["ffn"], h2, cfg)
+    return x + y, cache
+
+
+# ===========================================================================
+# Hybrid block (hymba: parallel attention + mamba heads)
+# ===========================================================================
+def hybrid_spec(cfg) -> dict:
+    return {"ln1": norm_spec(cfg), "attn": attn.gqa_spec(cfg),
+            "mamba": ssm_mod.mamba_spec(cfg),
+            "beta_a": ParamSpec((cfg.d_model,), ("d_model",), "ones"),
+            "beta_s": ParamSpec((cfg.d_model,), ("d_model",), "ones"),
+            "ln2": norm_spec(cfg), "mlp": mlp_spec(cfg)}
+
+
+def hybrid_apply(w, x, mem, ctx: Ctx, cfg):
+    h = _norm(w["ln1"], x, cfg)
+    a = attn.self_attention(w["attn"], h, cfg, ctx.positions,
+                            causal=ctx.causal, window=ctx.window)
+    s = ssm_mod.mamba_apply(w["mamba"], h, cfg)
+    fused = 0.5 * (a * w["beta_a"].astype(x.dtype)
+                   + s * w["beta_s"].astype(x.dtype))
+    x = x + fused
+    x = x + mlp_apply(w["mlp"], _norm(w["ln2"], x, cfg), cfg)
+    return x, jnp.float32(0.0)
+
+
+def hybrid_decode(w, x, cache, mem, ctx: Ctx, cfg):
+    h = _norm(w["ln1"], x, cfg)
+    a, kv = attn.decode_self_attention(w["attn"], h, cache["kv"], cfg,
+                                       ctx.cur_pos, window=ctx.window)
+    s, st = ssm_mod.mamba_decode(w["mamba"], h, cache["ssm"], cfg)
+    fused = 0.5 * (a * w["beta_a"].astype(x.dtype)
+                   + s * w["beta_s"].astype(x.dtype))
+    x = x + fused
+    x = x + mlp_apply(w["mlp"], _norm(w["ln2"], x, cfg), cfg)
+    return x, {"kv": kv, "ssm": st}
+
+
+def hybrid_cache_spec(cfg, batch, live):
+    return {"kv": attn.kv_cache_spec(cfg, batch, live),
+            "ssm": ssm_mod.mamba_state_spec(cfg, batch)}
+
+
+# ===========================================================================
+# RWKV6 block (attention-free)
+# ===========================================================================
+def rwkv_spec(cfg) -> dict:
+    return {"ln1": norm_spec(cfg), **ssm_mod.rwkv6_spec(cfg),
+            "ln2": norm_spec(cfg)}
+
+
+def rwkv_apply(w, x, mem, ctx: Ctx, cfg):
+    y, _ = ssm_mod.rwkv6_time_mix(w["tm"], _norm(w["ln1"], x, cfg), cfg)
+    x = x + y
+    y, _ = ssm_mod.rwkv6_channel_mix(w["cm"], _norm(w["ln2"], x, cfg))
+    return x + y, jnp.float32(0.0)
+
+
+def rwkv_decode(w, x, cache, mem, ctx: Ctx, cfg):
+    tm_state = {"wkv": cache["wkv"], "shift": cache["tm_shift"]}
+    y, tm_new = ssm_mod.rwkv6_time_mix(w["tm"], _norm(w["ln1"], x, cfg),
+                                       cfg, state=tm_state)
+    x = x + y
+    y, cm_new = ssm_mod.rwkv6_channel_mix(
+        w["cm"], _norm(w["ln2"], x, cfg), state={"shift": cache["cm_shift"]})
+    x = x + y
+    new_cache = {"wkv": tm_new["wkv"].astype(cache["wkv"].dtype),
+                 "tm_shift": tm_new["shift"].astype(cache["tm_shift"].dtype),
+                 "cm_shift": cm_new["shift"].astype(cache["cm_shift"].dtype)}
+    return x, new_cache
+
+
+def rwkv_cache_spec(cfg, batch, live):
+    return ssm_mod.rwkv6_state_spec(cfg, batch)
+
+
+# ===========================================================================
+# Whisper encoder / decoder blocks (layernorm + biased projections + gelu)
+# ===========================================================================
+def whisper_enc_spec(cfg) -> dict:
+    return {"ln1": norm_spec(cfg), "attn": attn.gqa_spec(cfg),
+            "ln2": norm_spec(cfg), "mlp": mlp_spec(cfg)}
+
+
+def whisper_enc_apply(w, x, mem, ctx: Ctx, cfg):
+    h = _norm(w["ln1"], x, cfg)
+    x = x + attn.self_attention(w["attn"], h, cfg, ctx.positions,
+                                causal=False, rope=False)
+    x = x + mlp_apply(w["mlp"], _norm(w["ln2"], x, cfg), cfg)
+    return x, jnp.float32(0.0)
+
+
+def whisper_dec_spec(cfg) -> dict:
+    return {"ln1": norm_spec(cfg), "attn": attn.gqa_spec(cfg),
+            "ln_x": norm_spec(cfg), "xattn": attn.gqa_spec(cfg, cross=True),
+            "ln2": norm_spec(cfg), "mlp": mlp_spec(cfg)}
+
+
+def whisper_dec_apply(w, x, mem, ctx: Ctx, cfg):
+    h = _norm(w["ln1"], x, cfg)
+    x = x + attn.self_attention(w["attn"], h, cfg, ctx.positions,
+                                causal=True, rope=False)
+    h = _norm(w["ln_x"], x, cfg)
+    x = x + attn.cross_attention(w["xattn"], h, mem, cfg, ctx.positions,
+                                 ctx.mem_positions)
+    x = x + mlp_apply(w["mlp"], _norm(w["ln2"], x, cfg), cfg)
+    return x, jnp.float32(0.0)
+
+
+def whisper_dec_decode(w, x, cache, mem, ctx: Ctx, cfg):
+    """Self-attn against the ring cache; cross-attn against precomputed
+    encoder K/V stored in the cache (computed once at prefill)."""
+    dt = x.dtype
+    h = _norm(w["ln1"], x, cfg)
+    a, kv = attn.decode_self_attention(w["attn"], h, cache["kv"], cfg,
+                                       ctx.cur_pos, window=ctx.window,
+                                       rope=False)
+    x = x + a
+    h = _norm(w["ln_x"], x, cfg)
+    q = jnp.einsum("bsd,dhe->bshe", h, w["xattn"]["wq"].astype(dt))
+    if "bq" in w["xattn"]:
+        q = q + w["xattn"]["bq"].astype(dt)
+    B = x.shape[0]
+    pos = jnp.full((B, 1), ctx.cur_pos, jnp.int32)
+    mpos = jnp.broadcast_to(jnp.arange(cache["xk"].shape[1], dtype=jnp.int32),
+                            (B, cache["xk"].shape[1]))
+    o = attn.attend(q, attn.expand_kv(cache["xk"].astype(dt), cfg.n_q_per_kv),
+                    attn.expand_kv(cache["xv"].astype(dt), cfg.n_q_per_kv),
+                    pos, mpos, causal=False, chunk=0)
+    x = x + attn.out_project(w["xattn"], o)
+    x = x + mlp_apply(w["mlp"], _norm(w["ln2"], x, cfg), cfg)
+    return x, {**cache, "kv": kv}
+
+
+def whisper_dec_cache_spec(cfg, batch, live):
+    KV, Dh = cfg.n_kv_heads, cfg.d_head
+    return {
+        "kv": attn.kv_cache_spec(cfg, batch, live),
+        "xk": ParamSpec((batch, cfg.n_frames, KV, Dh),
+                        ("batch", "seq", "kv", "head_dim"), "zeros"),
+        "xv": ParamSpec((batch, cfg.n_frames, KV, Dh),
+                        ("batch", "seq", "kv", "head_dim"), "zeros"),
+    }

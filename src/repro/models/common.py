@@ -1,0 +1,198 @@
+"""Shared model building blocks.
+
+Parameters are declared as ``ParamSpec`` trees (single source of truth for
+shape, logical sharding axes and initializer).  From one spec tree we derive:
+
+* ``materialize(spec, rng)``  -> real arrays (smoke tests, examples)
+* ``abstract(spec)``          -> ShapeDtypeStructs (dry-run, no allocation)
+* ``axes(spec)``              -> logical-axis tuples (sharding rules)
+
+Logical axis names used across the repo::
+
+    layers   stacking axis of a layer group        (never sharded)
+    d_model  embedding dim                          (usually replicated)
+    heads    query heads          -> "model"
+    kv       kv heads             -> "model" when divisible
+    head_dim per-head dim
+    ffn      mlp intermediate     -> "model"
+    experts  routed experts       -> "model" when divisible
+    vocab    vocabulary           -> "model"
+    state    ssm/rwkv state dims
+    lora     mla/rwkv low-rank dims
+    conv     conv kernel taps
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class ParamSpec(NamedTuple):
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"          # normal | zeros | ones | embed | scaled
+    scale: float = 1.0
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _init_leaf(spec: ParamSpec, rng, dtype):
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    fan_in = spec.shape[0] if len(spec.shape) >= 2 else max(spec.shape[0], 1)
+    if spec.init == "embed":
+        std = 0.02
+    elif spec.init == "scaled":
+        std = spec.scale / math.sqrt(fan_in)
+    else:
+        std = 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(rng, spec.shape) * std).astype(dtype)
+
+
+def materialize(spec_tree, rng, dtype=jnp.float32):
+    leaves, treedef = jax.tree.flatten(spec_tree, is_leaf=is_spec)
+    rngs = jax.random.split(rng, len(leaves))
+    vals = [_init_leaf(l, r, dtype) for l, r in zip(leaves, rngs)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract(spec_tree, dtype=jnp.float32):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype), spec_tree,
+        is_leaf=is_spec)
+
+
+def axes(spec_tree):
+    return jax.tree.map(lambda s: s.axes, spec_tree, is_leaf=is_spec)
+
+
+def stack_specs(spec_tree, n: int, axis_name: str = "layers"):
+    """Prepend a stacking dim of size ``n`` to every spec in the tree."""
+    return jax.tree.map(
+        lambda s: ParamSpec((n,) + s.shape, (axis_name,) + s.axes, s.init,
+                            s.scale),
+        spec_tree, is_leaf=is_spec)
+
+
+def param_bytes(spec_tree, bytes_per_el: int = 4) -> int:
+    leaves = jax.tree.leaves(spec_tree, is_leaf=is_spec)
+    return sum(int(np.prod(s.shape)) * bytes_per_el for s in leaves)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def rmsnorm_spec(d: int) -> dict:
+    return {"scale": ParamSpec((d,), ("d_model",), "ones")}
+
+
+def layernorm_spec(d: int) -> dict:
+    return {"scale": ParamSpec((d,), ("d_model",), "ones"),
+            "bias": ParamSpec((d,), ("d_model",), "zeros")}
+
+
+def norm_spec(cfg) -> dict:
+    return (layernorm_spec(cfg.d_model) if cfg.norm_type == "layernorm"
+            else rmsnorm_spec(cfg.d_model))
+
+
+def apply_norm(w, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if "bias" in w:  # layernorm
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps)
+        out = out * w["scale"].astype(jnp.float32) + w["bias"].astype(jnp.float32)
+    else:            # rmsnorm
+        ms = (xf * xf).mean(-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(ms + eps) * w["scale"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Activations
+# ---------------------------------------------------------------------------
+def act_fn(name: str) -> Callable:
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+            "relu": jax.nn.relu}[name]
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_freqs(dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+               fraction: float = 1.0) -> jnp.ndarray:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    rd = int(d * fraction)
+    rd -= rd % 2
+    if rd == 0:
+        return x
+    xr, xp = x[..., :rd], x[..., rd:]
+    freqs = rope_freqs(rd, theta)                     # (rd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, rd/2)
+    ang = ang[..., None, :]                           # broadcast over heads
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = xr[..., 0::2].astype(jnp.float32), xr[..., 1::2].astype(jnp.float32)
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    out = jnp.stack([o1, o2], axis=-1).reshape(xr.shape).astype(x.dtype)
+    return jnp.concatenate([out, xp], axis=-1) if rd < d else out
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+def embed_spec(cfg) -> dict:
+    spec = {"tok": ParamSpec((cfg.vocab_size, cfg.d_model),
+                             ("vocab", "d_model"), "embed")}
+    return spec
+
+
+def head_spec(cfg) -> dict:
+    if cfg.tie_embeddings:
+        return {}
+    return {"out": ParamSpec((cfg.d_model, cfg.vocab_size),
+                             ("d_model", "vocab"))}
+
+
+def embed_tokens(w, tokens, cfg, dtype):
+    x = jnp.take(w["tok"], tokens, axis=0).astype(dtype)
+    return x * (1.0 if cfg.norm_type == "rmsnorm" else 1.0)
+
+
+def logits_fn(head_w, embed_w, x, cfg):
+    if cfg.tie_embeddings:
+        w = embed_w["tok"].astype(x.dtype).T
+    else:
+        w = head_w["out"].astype(x.dtype)
+    logits = x @ w
+    if cfg.logit_soft_cap > 0:
+        c = cfg.logit_soft_cap
+        logits = c * jnp.tanh(logits / c)
+    return logits
+
+
+def softmax_xent(logits, targets, mask):
+    """Cross-entropy, fp32 reduction.  mask: (B,S) weights."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = (lse - gold) * mask
+    return nll.sum(), mask.sum()
+
+
+def compute_dtype(cfg):
+    return jnp.dtype(cfg.dtype)

@@ -1,0 +1,348 @@
+"""LayeredModel: the layer-granular model API that the L2L engine executes.
+
+A model is: ``prepare`` (embeddings / modality stubs) -> a sequence of
+homogeneous **layer groups** (each scanned over a stacked ``(N, ...)`` param
+tree) -> ``head_loss``.  Encoder-decoder models are two groups connected by a
+``transition`` that turns the encoder output into the decoder's cross-
+attention memory.
+
+This factoring is exactly what L2L needs: the engine can relay weights
+layer-by-layer (scan over the stacked axis), stash only group-boundary
+activations, and recompute per-layer VJPs in the reverse scan.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, InputShape
+from repro.models import blocks
+from repro.models.blocks import Ctx
+from repro.models.common import (ParamSpec, abstract, apply_norm, axes,
+                                 materialize, norm_spec, softmax_xent,
+                                 stack_specs)
+
+
+class Group(NamedTuple):
+    name: str
+    n_layers: int
+    spec: dict                       # one layer's ParamSpec tree
+    apply: Callable                  # (w, x, mem, ctx) -> (x, aux)
+    decode: Callable                 # (w, x, cache, mem, ctx) -> (x, cache)
+    cache_spec: Callable             # (batch, live_seq) -> per-layer spec
+    has_mem: bool = False
+    is_encoder: bool = False         # not run during decode
+
+
+def sinusoidal(positions, d, dtype):
+    """positions: (B,S) -> (B,S,d) classic sin/cos embedding."""
+    half = d // 2
+    freq = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32)
+                   / max(half - 1, 1))
+    ang = positions[..., None].astype(jnp.float32) * freq
+    emb = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+    if d % 2:
+        emb = jnp.pad(emb, ((0, 0),) * (emb.ndim - 1) + ((0, 1),))
+    return emb.astype(dtype)
+
+
+class LayeredModel:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.groups = self._build_groups(cfg)
+
+    # ------------------------------------------------------------------
+    # group construction
+    # ------------------------------------------------------------------
+    def _build_groups(self, cfg) -> Tuple[Group, ...]:
+        def G(name, n, spec, apply_fn, decode_fn, cache_fn, **kw):
+            ap = lambda w, x, mem, ctx: apply_fn(w, x, mem, ctx, cfg)
+            de = lambda w, x, c, mem, ctx: decode_fn(w, x, c, mem, ctx, cfg)
+            cs = lambda b, live: cache_fn(cfg, b, live)
+            return Group(name, n, spec, ap, de, cs, **kw)
+
+        if cfg.family in ("dense", "vlm"):
+            return (G("layers", cfg.n_layers, blocks.dense_spec(cfg),
+                      blocks.dense_apply, blocks.dense_decode,
+                      blocks.dense_cache_spec),)
+        if cfg.family == "moe":
+            gs = []
+            if cfg.first_dense_layers:
+                # deepseek-v2: layer 0 keeps MLA attention but a dense FFN;
+                # dense_cache_spec -> kv_cache_spec branches on cfg.use_mla.
+                gs.append(G("dense_layers", cfg.first_dense_layers,
+                            blocks.moe_block_spec(cfg, dense_ffn=True),
+                            blocks.moe_block_apply, blocks.moe_block_decode,
+                            blocks.dense_cache_spec))
+            gs.append(G("moe_layers", cfg.n_layers - cfg.first_dense_layers,
+                        blocks.moe_block_spec(cfg),
+                        blocks.moe_block_apply, blocks.moe_block_decode,
+                        blocks.dense_cache_spec))
+            return tuple(gs)
+        if cfg.family == "hybrid":
+            return (G("layers", cfg.n_layers, blocks.hybrid_spec(cfg),
+                      blocks.hybrid_apply, blocks.hybrid_decode,
+                      blocks.hybrid_cache_spec),)
+        if cfg.family == "ssm":
+            return (G("layers", cfg.n_layers, blocks.rwkv_spec(cfg),
+                      blocks.rwkv_apply, blocks.rwkv_decode,
+                      blocks.rwkv_cache_spec),)
+        if cfg.family == "audio":
+            enc = G("encoder", cfg.n_encoder_layers,
+                    blocks.whisper_enc_spec(cfg), blocks.whisper_enc_apply,
+                    blocks.whisper_dec_decode, blocks.whisper_dec_cache_spec,
+                    is_encoder=True)
+            dec = G("decoder", cfg.n_layers, blocks.whisper_dec_spec(cfg),
+                    blocks.whisper_dec_apply, blocks.whisper_dec_decode,
+                    blocks.whisper_dec_cache_spec, has_mem=True)
+            return (enc, dec)
+        raise ValueError(f"unknown family {cfg.family}")
+
+    # ------------------------------------------------------------------
+    # parameters
+    # ------------------------------------------------------------------
+    def param_specs(self) -> dict:
+        cfg = self.cfg
+        embed: dict = {}
+        if cfg.family != "audio":
+            embed["tok"] = ParamSpec((cfg.vocab_size, cfg.d_model),
+                                     ("vocab", "d_model"), "embed")
+        else:
+            embed["tok"] = ParamSpec((cfg.vocab_size, cfg.d_model),
+                                     ("vocab", "d_model"), "embed")
+            embed["enc_ln_post"] = norm_spec(cfg)
+        if cfg.is_vlm:
+            embed["proj_w"] = ParamSpec((cfg.vit_dim, cfg.d_model),
+                                        ("lora", "d_model"))
+            embed["proj_b"] = ParamSpec((cfg.d_model,), ("d_model",), "zeros")
+        head: dict = {"ln_f": norm_spec(cfg)}
+        if not cfg.tie_embeddings:
+            head["out"] = ParamSpec((cfg.d_model, cfg.vocab_size),
+                                    ("d_model", "vocab"))
+        groups = tuple(stack_specs(g.spec, g.n_layers) for g in self.groups)
+        return {"embed": embed, "head": head, "groups": groups}
+
+    def init_params(self, rng, dtype=None):
+        dtype = dtype or jnp.dtype(self.cfg.param_dtype)
+        return materialize(self.param_specs(), rng, dtype)
+
+    def abstract_params(self, dtype=None):
+        dtype = dtype or jnp.dtype(self.cfg.param_dtype)
+        return abstract(self.param_specs(), dtype)
+
+    def param_axes(self):
+        return axes(self.param_specs())
+
+    # ------------------------------------------------------------------
+    # embedding / transitions / head
+    # ------------------------------------------------------------------
+    def _dtype(self):
+        return jnp.dtype(self.cfg.dtype)
+
+    def prepare(self, static, batch) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+        """-> (x0 for group 0, mem for group 0 (None))."""
+        cfg = self.cfg
+        dt = self._dtype()
+        emb = static["embed"]
+        if cfg.family == "audio":
+            frames = batch["frames"].astype(dt)          # (B,nf,d) stub
+            B, nf, _ = frames.shape
+            pos = jnp.broadcast_to(jnp.arange(nf, dtype=jnp.int32), (B, nf))
+            return frames + sinusoidal(pos, cfg.d_model, dt), None
+        toks = batch["tokens"]
+        x = jnp.take(emb["tok"], toks, axis=0).astype(dt)
+        if cfg.is_vlm:
+            p = batch["patches"].astype(dt) @ emb["proj_w"].astype(dt) \
+                + emb["proj_b"].astype(dt)
+            x = jnp.concatenate([p, x], axis=1)
+        return x, None
+
+    def transition_x(self, g: int, static, x_prev, batch):
+        """Input activations of group g, given the output of group g-1.
+
+        The identity for homogeneous-stream group changes (deepseek
+        dense->moe); for whisper the decoder input is built from the target
+        tokens (independent of x_prev — its gradient path to the encoder
+        goes through ``transition_mem``)."""
+        cfg = self.cfg
+        dt = self._dtype()
+        if cfg.family != "audio":
+            return x_prev
+        toks = batch["tokens"]
+        B, S = toks.shape
+        x = jnp.take(static["embed"]["tok"], toks, axis=0).astype(dt)
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        return x + sinusoidal(pos, cfg.d_model, dt)
+
+    def transition_mem(self, g: int, static, x_prev, batch):
+        """Cross-attention memory of group g (None unless has_mem)."""
+        cfg = self.cfg
+        if not self.groups[g].has_mem:
+            return None
+        return apply_norm(static["embed"]["enc_ln_post"], x_prev,
+                          cfg.norm_eps)
+
+    def transition(self, g: int, static, x_prev, batch):
+        return (self.transition_x(g, static, x_prev, batch),
+                self.transition_mem(g, static, x_prev, batch))
+
+    def head_loss(self, static, x, batch):
+        """-> (loss_sum, weight_sum, aux_metrics). Caller normalizes."""
+        cfg = self.cfg
+        x = apply_norm(static["head"]["ln_f"], x, cfg.norm_eps)
+        if cfg.tie_embeddings:
+            w = static["embed"]["tok"].astype(x.dtype).T
+        else:
+            w = static["head"]["out"].astype(x.dtype)
+        logits = x @ w
+        if cfg.logit_soft_cap > 0:
+            c = cfg.logit_soft_cap
+            logits = c * jnp.tanh(logits / c)
+        targets, mask = batch["targets"], batch["mask"]
+        if cfg.is_vlm:  # x covers patches+tokens; loss only on token positions
+            logits = logits[:, cfg.n_patches:, :]
+        loss_sum, wsum = softmax_xent(logits, targets, mask)
+        return loss_sum, wsum
+
+    # ------------------------------------------------------------------
+    # context builders
+    # ------------------------------------------------------------------
+    def train_ctx(self, batch, group: Group) -> Ctx:
+        cfg = self.cfg
+        if group.is_encoder:
+            B, nf = batch["frames"].shape[:2]
+            pos = jnp.broadcast_to(jnp.arange(nf, dtype=jnp.int32), (B, nf))
+            return Ctx(positions=pos, causal=False)
+        if cfg.family == "audio":
+            B, S = batch["tokens"].shape
+            pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+            mp = jnp.broadcast_to(jnp.arange(cfg.n_frames, dtype=jnp.int32),
+                                  (B, cfg.n_frames))
+            return Ctx(positions=pos, mem_positions=mp, causal=True)
+        B, S = batch["tokens"].shape
+        if cfg.is_vlm:
+            S = S + cfg.n_patches
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        return Ctx(positions=pos, causal=True, window=cfg.sliding_window)
+
+    def decode_ctx(self, cur_pos, window: int = 0) -> Ctx:
+        w = window if window else self.cfg.sliding_window
+        return Ctx(cur_pos=cur_pos, window=w, causal=True)
+
+    # ------------------------------------------------------------------
+    # decode embedding / head
+    # ------------------------------------------------------------------
+    def decode_embed(self, static, token, cur_pos):
+        """token: (B,1) -> x (B,1,d)."""
+        cfg = self.cfg
+        dt = self._dtype()
+        x = jnp.take(static["embed"]["tok"], token, axis=0).astype(dt)
+        if cfg.family == "audio":
+            B = token.shape[0]
+            pos = jnp.full((B, 1), cur_pos, jnp.int32)
+            x = x + sinusoidal(pos, cfg.d_model, dt)
+        return x
+
+    def decode_logits(self, static, x):
+        cfg = self.cfg
+        x = apply_norm(static["head"]["ln_f"], x, cfg.norm_eps)
+        if cfg.tie_embeddings:
+            w = static["embed"]["tok"].astype(x.dtype).T
+        else:
+            w = static["head"]["out"].astype(x.dtype)
+        logits = x @ w
+        if cfg.logit_soft_cap > 0:
+            c = cfg.logit_soft_cap
+            logits = c * jnp.tanh(logits / c)
+        return logits
+
+    def decode_groups(self):
+        return tuple(g for g in self.groups if not g.is_encoder)
+
+    # ------------------------------------------------------------------
+    # full caches (stacked over layers per group)
+    # ------------------------------------------------------------------
+    def cache_specs(self, batch: int, live_seq: int):
+        return tuple(stack_specs(g.cache_spec(batch, live_seq), g.n_layers)
+                     for g in self.decode_groups())
+
+    # ------------------------------------------------------------------
+    # reference full forward (baseline engines + tests)
+    # ------------------------------------------------------------------
+    def full_loss(self, params, batch, remat: bool = False):
+        cfg = self.cfg
+        static = {"embed": params["embed"], "head": params["head"]}
+        x, mem = self.prepare(static, batch)
+        aux_total = jnp.float32(0.0)
+        for gi, group in enumerate(self.groups):
+            if gi > 0:
+                x, mem = self.transition(gi, static, x, batch)
+            ctx = self.train_ctx(batch, group)
+            body = lambda h, w, _mem=mem, _ctx=ctx, _g=group: \
+                _g.apply(w, h, _mem, _ctx)
+            if remat:
+                body = jax.checkpoint(body)
+            def scan_body(h, w):
+                h2, aux = body(h, w)
+                return h2, aux
+            x, auxs = jax.lax.scan(scan_body, x, params["groups"][gi])
+            aux_total = aux_total + auxs.sum()
+        loss_sum, wsum = self.head_loss(static, x, batch)
+        loss = loss_sum / jnp.maximum(wsum, 1.0) + aux_total
+        return loss, (loss_sum, wsum, aux_total)
+
+
+# ---------------------------------------------------------------------------
+# Batch specs (ShapeDtypeStruct stand-ins come from launch/dryrun via these)
+# ---------------------------------------------------------------------------
+def batch_spec(cfg: ModelConfig, shape: InputShape) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        return {"token": ParamSpec((B, 1), ("batch", None), "zeros")}
+    if shape.kind == "prefill":
+        spec = {"tokens": ParamSpec(
+            (B, S if not cfg.is_vlm else S - cfg.n_patches),
+            ("batch", "seq"), "zeros")}
+        if cfg.family == "audio":
+            spec["frames"] = ParamSpec((B, cfg.n_frames, cfg.d_model),
+                                       ("batch", "seq", "d_model"), "zeros")
+        if cfg.is_vlm:
+            spec["patches"] = ParamSpec((B, cfg.n_patches, cfg.vit_dim),
+                                        ("batch", "seq", "d_model"), "zeros")
+        return spec
+    if cfg.family == "audio":
+        return {
+            "frames": ParamSpec((B, cfg.n_frames, cfg.d_model),
+                                ("batch", "seq", "d_model"), "zeros"),
+            "tokens": ParamSpec((B, S), ("batch", "seq"), "zeros"),
+            "targets": ParamSpec((B, S), ("batch", "seq"), "zeros"),
+            "mask": ParamSpec((B, S), ("batch", "seq"), "ones"),
+        }
+    spec = {
+        "tokens": ParamSpec((B, S if not cfg.is_vlm else S - cfg.n_patches),
+                            ("batch", "seq"), "zeros"),
+        "targets": ParamSpec((B, S if not cfg.is_vlm else S - cfg.n_patches),
+                             ("batch", "seq"), "zeros"),
+        "mask": ParamSpec((B, S if not cfg.is_vlm else S - cfg.n_patches),
+                          ("batch", "seq"), "ones"),
+    }
+    if cfg.is_vlm:
+        spec["patches"] = ParamSpec((B, cfg.n_patches, cfg.vit_dim),
+                                    ("batch", "seq", "d_model"), "zeros")
+    return spec
+
+
+def batch_dtypes(cfg: ModelConfig, shape: InputShape) -> dict:
+    spec = batch_spec(cfg, shape)
+    out = {}
+    for k, s in spec.items():
+        if k in ("tokens", "targets", "token"):
+            out[k] = jnp.int32
+        elif k == "mask":
+            out[k] = jnp.float32
+        else:
+            out[k] = jnp.dtype(cfg.dtype)
+    return out

@@ -1,0 +1,243 @@
+"""Mixture-of-Experts: token-choice top-k routing.
+
+Two dispatch paths:
+
+* **capacity path** (training / prefill, T large): Switch-style cumsum slot
+  assignment, scatter into per-expert buffers ``(E, C, d)``, batched expert
+  matmuls, weighted scatter-add combine.  FLOPs scale with ``top_k`` (times
+  the capacity factor), *not* with E — this keeps the roofline's
+  MODEL_FLOPS/HLO_FLOPs ratio honest.
+* **dense path** (decode, T <= 2E): compute every expert for every token and
+  combine with the top-k weights.  Exact (no capacity drops) and cheap when
+  only a handful of tokens are live.
+
+Experts are sharded over the ``model`` mesh axis when E divides it
+(expert parallelism — deepseek), otherwise the expert FFN dim is sharded
+(tensor parallelism within experts — grok).  See distributed/sharding.py.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec, act_fn
+from repro.models.mlp import mlp_spec, mlp_apply
+
+
+def moe_spec(cfg) -> dict:
+    E, d, fe = cfg.n_experts, cfg.d_model, cfg.d_ff_expert
+    experts = {
+        "w_gate": ParamSpec((E, d, fe), ("experts", "d_model", "expert_ffn")),
+        "w_in": ParamSpec((E, d, fe), ("experts", "d_model", "expert_ffn")),
+        "w_out": ParamSpec((E, fe, d), ("experts", "expert_ffn", "d_model")),
+    }
+    if not cfg.gated_mlp:
+        experts = {
+            "w_in": ParamSpec((E, d, fe), ("experts", "d_model", "expert_ffn")),
+            "w_out": ParamSpec((E, fe, d), ("experts", "expert_ffn", "d_model")),
+        }
+    spec = {
+        "router": ParamSpec((d, E), ("d_model", "experts"), "scaled", 0.1),
+        "experts": experts,
+    }
+    if cfg.n_shared_experts:
+        spec["shared"] = mlp_spec(cfg, cfg.n_shared_experts * fe)
+    return spec
+
+
+def _expert_ffn(w, x, cfg):
+    """x: (E, C, d) -> (E, C, d), batched over experts."""
+    dt = x.dtype
+    act = act_fn(cfg.act)
+    if "w_gate" in w:
+        h = act(jnp.einsum("ecd,edf->ecf", x, w["w_gate"].astype(dt)))
+        h = h * jnp.einsum("ecd,edf->ecf", x, w["w_in"].astype(dt))
+    else:
+        h = act(jnp.einsum("ecd,edf->ecf", x, w["w_in"].astype(dt)))
+    return jnp.einsum("ecf,efd->ecd", h, w["w_out"].astype(dt))
+
+
+def _route(w, xf, cfg):
+    """xf: (T,d) -> top-k (weights (T,k) fp32, ids (T,k) int32, aux loss)."""
+    logits = (xf.astype(jnp.float32) @ w["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                   # (T,E)
+    top_w, top_i = jax.lax.top_k(probs, cfg.experts_per_token)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+    # load-balance aux (Switch): E * sum_e f_e * p_e
+    E = cfg.n_experts
+    f = jnp.zeros((E,), jnp.float32).at[top_i.reshape(-1)].add(1.0)
+    f = f / jnp.maximum(top_i.size, 1)
+    p = probs.mean(0)
+    aux = E * jnp.sum(f * p) * cfg.router_aux_coef
+    return top_w, top_i, aux
+
+
+def _moe_dense(w, xf, top_w, top_i, cfg):
+    """All-experts path for tiny T (decode)."""
+    E = cfg.n_experts
+    y_all = _expert_ffn(w["experts"], jnp.broadcast_to(
+        xf[None], (E,) + xf.shape), cfg)                      # (E,T,d)
+    gate = jnp.zeros((xf.shape[0], E), jnp.float32)
+    gate = jnp.take_along_axis(
+        gate, top_i, axis=1)  # placeholder to keep shapes; replaced below
+    onehot = jax.nn.one_hot(top_i, E, dtype=jnp.float32)      # (T,k,E)
+    comb = (onehot * top_w[..., None]).sum(1)                 # (T,E)
+    return jnp.einsum("te,etd->td", comb.astype(xf.dtype), y_all)
+
+
+def _ep_constraint(x):
+    """Beyond-paper (§Perf): pin the expert-dispatch buffers' sharding.
+
+    x: (E, C, d).  Without this, the capacity dim C (sized from the GLOBAL
+    token count under pjit semantics) stays unsharded, so every data
+    replica computes the full global capacity — a dp-fold FLOPs inflation
+    observed in the dry-run (16x on the single-pod mesh).  Sharding C over
+    the data axes makes the scatter into the buffer the classic MoE
+    all-to-all (tokens cross data shards to reach their expert slots) and
+    right-sizes per-device expert compute; E additionally shards over
+    "model" when divisible (expert parallel — deepseek), else d does
+    (tensor parallel inside experts — grok).  No-op without a mesh.
+    """
+    from jax.sharding import PartitionSpec as P
+    from jax._src.mesh import thread_resources
+    import numpy as np
+    mesh = thread_resources.env.physical_mesh
+    if mesh is None or mesh.empty or "model" not in (mesh.axis_names or ()):
+        return x
+    m = mesh.shape["model"]
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    dp = int(np.prod([mesh.shape[a] for a in data_axes])) if data_axes else 1
+    E, C, d = x.shape
+    e_ax = "model" if (E % m == 0) else None
+    c_ax = (data_axes if (data_axes and C % dp == 0) else None)
+    d_ax = "model" if (e_ax is None and d % m == 0) else None
+    if e_ax is None and c_ax is None and d_ax is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, P(e_ax, c_ax, d_ax))
+
+
+def _dispatch(xf, top_i, C, E, k):
+    """Token-choice slot assignment for one dispatch group.
+    xf: (T,d) -> buf (E, C+1, d), slot_c (Tk,), keep (Tk,), flat_e, tok_idx."""
+    T, d = xf.shape
+    flat_e = top_i.reshape(T * k)                             # (Tk,)
+    tok_idx = jnp.arange(T * k, dtype=jnp.int32) // k
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)       # (Tk,E)
+    pos_in_e = jnp.cumsum(onehot, axis=0) - onehot
+    slot = jnp.take_along_axis(pos_in_e, flat_e[:, None], axis=1)[:, 0]
+    keep = slot < C
+    slot_c = jnp.where(keep, slot, C)                         # overflow -> C
+    buf = jnp.zeros((E, C + 1, d), xf.dtype)
+    buf = buf.at[flat_e, slot_c].set(xf[tok_idx])
+    return buf, slot_c, keep, flat_e, tok_idx
+
+
+def _combine(y_pad, top_w, slot_c, keep, flat_e, tok_idx, T, d):
+    """y_pad: (E, C+1, d) expert outputs -> (T, d)."""
+    flat_w = top_w.reshape(-1)
+    gathered = y_pad[flat_e, slot_c]                          # (Tk,d)
+    gathered = gathered * (flat_w * keep).astype(y_pad.dtype)[:, None]
+    return jnp.zeros((T, d), y_pad.dtype).at[tok_idx].add(gathered)
+
+
+def _dispatch_groups(cfg, T):
+    """Local-dispatch group count == data-parallel shard count.
+
+    Beyond-paper (§Perf): a single GLOBAL dispatch sizes the capacity
+    buffer from the global token count and its slot cumsum couples all
+    data shards, so the partitioner replicates the (E, C_global, d)
+    buffer on every data shard (dp-fold expert FLOPs) or falls back to
+    full rematerialization.  Splitting tokens into per-data-shard groups
+    makes the cumsum local, the buffer (E, G, C_local, d) fully sharded,
+    and the scatter across shards the classic MoE all-to-all."""
+    if not cfg.moe_ep_constraint:
+        return 1
+    from jax._src.mesh import thread_resources
+    import numpy as np
+    mesh = thread_resources.env.physical_mesh
+    if mesh is None or mesh.empty:
+        return 1
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    G = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+    return G if (G > 1 and T % G == 0) else 1
+
+
+def _moe_capacity(w, xf, top_w, top_i, cfg):
+    T, d = xf.shape
+    E, k = cfg.n_experts, cfg.experts_per_token
+    G = _dispatch_groups(cfg, T)
+    Tl = T // G
+    C = max(1, int(math.ceil(Tl * k / E * cfg.capacity_factor)))
+    C = min(C, Tl)
+    if G == 1:
+        buf, slot_c, keep, flat_e, tok_idx = _dispatch(xf, top_i, C, E, k)
+        if cfg.moe_ep_constraint:
+            buf = _ep_constraint(buf)
+        y = _expert_ffn(w["experts"], buf[:, :C], cfg)        # (E,C,d)
+        if cfg.moe_ep_constraint:
+            y = _ep_constraint(y)
+        y = jnp.pad(y, ((0, 0), (0, 1), (0, 0)))              # slot C == 0
+        return _combine(y, top_w, slot_c, keep, flat_e, tok_idx, T, d)
+
+    # ---- grouped local dispatch (one group per data shard) -------------
+    xg = xf.reshape(G, Tl, d)
+    tig = top_i.reshape(G, Tl, k)
+    twg = top_w.reshape(G, Tl, k)
+    bufs, slot_c, keep, flat_e, tok_idx = jax.vmap(
+        lambda x, ti: _dispatch(x, ti, C, E, k))(xg, tig)     # (G,E,C+1,d)
+    buf = bufs.transpose(1, 0, 2, 3)                          # (E,G,C+1,d)
+    buf = _ep_constraint_grouped(buf)
+    dt = buf.dtype
+    act = act_fn(cfg.act)
+    xb = buf[:, :, :C]
+    if "w_gate" in w["experts"]:
+        h = act(jnp.einsum("egcd,edf->egcf", xb,
+                           w["experts"]["w_gate"].astype(dt)))
+        h = h * jnp.einsum("egcd,edf->egcf", xb,
+                           w["experts"]["w_in"].astype(dt))
+    else:
+        h = act(jnp.einsum("egcd,edf->egcf", xb,
+                           w["experts"]["w_in"].astype(dt)))
+    y = jnp.einsum("egcf,efd->egcd", h, w["experts"]["w_out"].astype(dt))
+    y = _ep_constraint_grouped(jnp.pad(y, ((0, 0), (0, 0), (0, 1), (0, 0))))
+    yg = y.transpose(1, 0, 2, 3)                              # (G,E,C+1,d)
+    out = jax.vmap(
+        lambda yp, tw, sc, kp, fe, ti: _combine(yp, tw, sc, kp, fe, ti,
+                                                Tl, d)
+    )(yg, twg, slot_c, keep, flat_e, tok_idx)
+    return out.reshape(T, d)
+
+
+def _ep_constraint_grouped(x):
+    """(E, G, C, d): E over 'model' when divisible, G over the data axes."""
+    from jax.sharding import PartitionSpec as P
+    from jax._src.mesh import thread_resources
+    import numpy as np
+    mesh = thread_resources.env.physical_mesh
+    if mesh is None or mesh.empty or "model" not in (mesh.axis_names or ()):
+        return x
+    m = mesh.shape["model"]
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    dp = int(np.prod([mesh.shape[a] for a in data_axes])) if data_axes else 1
+    E, G, _, d = x.shape
+    e_ax = "model" if E % m == 0 else None
+    g_ax = data_axes if (data_axes and G % dp == 0) else None
+    d_ax = "model" if (e_ax is None and d % m == 0) else None
+    return jax.lax.with_sharding_constraint(x, P(e_ax, g_ax, None, d_ax))
+
+
+def moe_apply(w, x, cfg) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B,S,d) -> (y, aux_loss)."""
+    B, S, d = x.shape
+    xf = x.reshape(B * S, d)
+    top_w, top_i, aux = _route(w, xf, cfg)
+    if B * S <= 2 * cfg.n_experts:
+        y = _moe_dense(w, xf, top_w, top_i, cfg)
+    else:
+        y = _moe_capacity(w, xf, top_w, top_i, cfg)
+    if "shared" in w:
+        y = y + mlp_apply(w["shared"], xf, cfg)
+    return y.reshape(B, S, d), aux

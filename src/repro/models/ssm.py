@@ -1,0 +1,310 @@
+"""State-space sequence mixers.
+
+* ``mamba_*`` — selective SSM branch (Hymba's parallel attn+SSM heads).
+  Training uses an associative scan (parallel prefix) over the sequence;
+  decode is a single recurrent update, O(1) in context length.
+* ``rwkv6_*`` — RWKV-6 "Finch" time-mix with data-dependent decay (DDLerp
+  low-rank modulation) + channel-mix.  Attention-free; the decode state is
+  a constant-size (H, hd, hd) matrix per layer.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec, apply_norm
+
+
+# ===========================================================================
+# Mamba-style selective SSM (Hymba branch)
+# ===========================================================================
+def mamba_spec(cfg) -> dict:
+    d = cfg.d_model
+    dI = cfg.d_model            # Hymba: SSM head width matches model dim
+    N = cfg.ssm_state
+    K = cfg.ssm_conv
+    dt_rank = max(1, d // 16)
+    return {
+        "w_in": ParamSpec((d, 2 * dI), ("d_model", "ffn")),
+        "conv": ParamSpec((K, dI), ("conv", "ffn"), "scaled", 1.0),
+        "w_bcdt": ParamSpec((dI, 2 * N + dt_rank), ("ffn", "state")),
+        "w_dt": ParamSpec((dt_rank, dI), ("state", "ffn")),
+        "dt_bias": ParamSpec((dI,), ("ffn",), "zeros"),
+        "a_log": ParamSpec((dI, N), ("ffn", "state"), "ones"),
+        "d_skip": ParamSpec((dI,), ("ffn",), "ones"),
+        "w_out": ParamSpec((dI, d), ("ffn", "d_model")),
+    }
+
+
+def _mamba_inner(w, xz, cfg, conv_state=None):
+    """Shared projection part.  xz: (B,S,2*dI) -> (x_conv, z, dt, Bm, Cm)."""
+    dI = cfg.d_model
+    N = cfg.ssm_state
+    x, z = xz[..., :dI], xz[..., dI:]
+    # depthwise causal conv over seq
+    K = w["conv"].shape[0]
+    if conv_state is None:
+        pads = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        pads = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+    xc = sum(pads[:, i:i + x.shape[1], :] * w["conv"][i].astype(x.dtype)
+             for i in range(K))
+    xc = jax.nn.silu(xc)
+    bcdt = xc @ w["w_bcdt"].astype(x.dtype)
+    Bm, Cm, dt_low = bcdt[..., :N], bcdt[..., N:2 * N], bcdt[..., 2 * N:]
+    dt = jax.nn.softplus(dt_low @ w["w_dt"].astype(x.dtype)
+                         + w["dt_bias"].astype(x.dtype))     # (B,S,dI)
+    new_conv_state = pads[:, -(K - 1):, :] if K > 1 else None
+    return xc, z, dt, Bm, Cm, new_conv_state
+
+
+def mamba_apply(w, x, cfg):
+    """Full-sequence selective scan.  x: (B,S,d) -> (B,S,d)."""
+    dt_ = x.dtype
+    xz = x @ w["w_in"].astype(dt_)
+    xc, z, dt, Bm, Cm, _ = _mamba_inner(w, xz, cfg)
+    A = -jnp.exp(w["a_log"].astype(jnp.float32))             # (dI,N)
+    # discretize: a = exp(dt*A), b = dt * B_t * x_t
+    dtf = dt.astype(jnp.float32)
+    a = jnp.exp(dtf[..., None] * A)                          # (B,S,dI,N)
+    b = (dtf * xc.astype(jnp.float32))[..., None] * \
+        Bm.astype(jnp.float32)[..., None, :]                 # (B,S,dI,N)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = (h * Cm.astype(jnp.float32)[..., None, :]).sum(-1)   # (B,S,dI)
+    y = y + w["d_skip"].astype(jnp.float32) * xc.astype(jnp.float32)
+    y = (y.astype(dt_)) * jax.nn.silu(z)
+    return y @ w["w_out"].astype(dt_)
+
+
+def mamba_state_spec(cfg, batch: int) -> dict:
+    dI, N, K = cfg.d_model, cfg.ssm_state, cfg.ssm_conv
+    return {
+        "h": ParamSpec((batch, dI, N), ("batch", "ffn", "state"), "zeros"),
+        "conv": ParamSpec((batch, K - 1, dI), ("batch", "conv", "ffn"),
+                          "zeros"),
+    }
+
+
+def mamba_decode(w, x, state, cfg):
+    """One step.  x: (B,1,d); state: {"h": (B,dI,N), "conv": (B,K-1,dI)}."""
+    dt_ = x.dtype
+    xz = x @ w["w_in"].astype(dt_)
+    xc, z, dt, Bm, Cm, new_conv = _mamba_inner(w, xz, cfg,
+                                               conv_state=state["conv"])
+    A = -jnp.exp(w["a_log"].astype(jnp.float32))
+    dtf = dt[:, 0].astype(jnp.float32)                       # (B,dI)
+    a = jnp.exp(dtf[..., None] * A)                          # (B,dI,N)
+    b = (dtf * xc[:, 0].astype(jnp.float32))[..., None] * \
+        Bm[:, 0].astype(jnp.float32)[:, None, :]
+    h = a * state["h"].astype(jnp.float32) + b
+    y = (h * Cm[:, 0].astype(jnp.float32)[:, None, :]).sum(-1)
+    y = y + w["d_skip"].astype(jnp.float32) * xc[:, 0].astype(jnp.float32)
+    y = (y.astype(dt_) * jax.nn.silu(z[:, 0]))[:, None, :]
+    out = y @ w["w_out"].astype(dt_)
+    new_state = {"h": h.astype(state["h"].dtype),
+                 "conv": new_conv.astype(state["conv"].dtype)}
+    return out, new_state
+
+
+# ===========================================================================
+# RWKV-6 "Finch"
+# ===========================================================================
+def rwkv6_spec(cfg) -> dict:
+    d = cfg.d_model
+    H = cfg.rwkv_heads
+    hd = cfg.rwkv_head_dim
+    L = cfg.rwkv_lora
+    ff = cfg.d_ff
+    return {
+        "tm": {  # time mix
+            "mu_x": ParamSpec((d,), ("d_model",), "zeros"),
+            "mu": ParamSpec((5, d), (None, "d_model"), "zeros"),  # r,k,v,g,w
+            "lora_a": ParamSpec((d, 5 * 32), ("d_model", "lora")),
+            "lora_b": ParamSpec((5, 32, d), (None, "lora", "d_model"),
+                                "scaled", 0.1),
+            "w_r": ParamSpec((d, d), ("d_model", "heads_x_dim")),
+            "w_k": ParamSpec((d, d), ("d_model", "heads_x_dim")),
+            "w_v": ParamSpec((d, d), ("d_model", "heads_x_dim")),
+            "w_g": ParamSpec((d, d), ("d_model", "heads_x_dim")),
+            "w0": ParamSpec((d,), ("d_model",), "zeros"),
+            "decay_a": ParamSpec((d, L), ("d_model", "lora")),
+            "decay_b": ParamSpec((L, d), ("lora", "d_model"), "scaled", 0.1),
+            "u": ParamSpec((H, hd), ("heads", "head_dim"), "zeros"),
+            "ln_scale": ParamSpec((d,), ("d_model",), "ones"),
+            "w_o": ParamSpec((d, d), ("heads_x_dim", "d_model")),
+        },
+        "cm": {  # channel mix
+            "mu_k": ParamSpec((d,), ("d_model",), "zeros"),
+            "mu_r": ParamSpec((d,), ("d_model",), "zeros"),
+            "w_k": ParamSpec((d, ff), ("d_model", "ffn")),
+            "w_v": ParamSpec((ff, d), ("ffn", "d_model")),
+            "w_r": ParamSpec((d, d), ("d_model", "d_model")),
+        },
+    }
+
+
+def _shift(x, prev=None):
+    """Token shift: x_{t-1} (zeros / carried state at t=0)."""
+    if prev is None:
+        return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    return jnp.concatenate([prev[:, None, :], x[:, :-1]], axis=1) \
+        if x.shape[1] > 1 else prev[:, None, :]
+
+
+def _ddlerp(w, x, xx):
+    """Data-dependent lerp -> the 5 mixed inputs (r,k,v,g,w)."""
+    dt_ = x.dtype
+    base = x + (xx - x) * w["mu_x"].astype(dt_)
+    dd = jnp.tanh(base @ w["lora_a"].astype(dt_))            # (B,S,5*32)
+    B_, S_, _ = dd.shape
+    dd = dd.reshape(B_, S_, 5, 32)
+    mod = jnp.einsum("bsfl,fld->bsfd", dd, w["lora_b"].astype(dt_))
+    mix = w["mu"].astype(dt_)[None, None] + mod              # (B,S,5,d)
+    return x[:, :, None, :] + (xx - x)[:, :, None, :] * mix
+
+
+def _rwkv_rkvgw(tm, x, xx, cfg):
+    dt_ = x.dtype
+    mixed = _ddlerp(tm, x, xx)
+    xr, xk, xv, xg, xw = [mixed[:, :, i] for i in range(5)]
+    r = xr @ tm["w_r"].astype(dt_)
+    k = xk @ tm["w_k"].astype(dt_)
+    v = xv @ tm["w_v"].astype(dt_)
+    g = jax.nn.silu(xg @ tm["w_g"].astype(dt_))
+    dec = tm["w0"].astype(jnp.float32) + jnp.tanh(
+        xw.astype(jnp.float32) @ tm["decay_a"].astype(jnp.float32)
+    ) @ tm["decay_b"].astype(jnp.float32)
+    wdecay = jnp.exp(-jnp.exp(dec))                           # (B,S,d) in (0,1)
+    return r, k, v, g, wdecay
+
+
+def _heads(x, H, hd):
+    B, S, _ = x.shape
+    return x.reshape(B, S, H, hd)
+
+
+def _wkv_step_scan(rh, kh, vh, wh, u, s0):
+    """Reference step-by-step recurrence.  (B,H,S,hd) heads-major inputs."""
+    def step(s, t):
+        rt, kt, vt, wt = t                                  # (B,H,hd)
+        kv = kt[..., :, None] * vt[..., None, :]            # (B,H,hd,hd)
+        out = jnp.einsum("bhk,bhkv->bhv", rt, s + u[..., :, None] * kv)
+        s = wt[..., :, None] * s + kv
+        return s, out
+
+    xs = tuple(t.transpose(2, 0, 1, 3) for t in (rh, kh, vh, wh))
+    s_fin, outs = jax.lax.scan(step, s0, xs)                # (S,B,H,hd)
+    return outs.transpose(1, 2, 0, 3), s_fin                # (B,H,S,hd)
+
+
+def _wkv_chunked(rh, kh, vh, wh, u, s0, chunk: int):
+    """Chunked-parallel WKV6 (beyond-paper prefill optimization).
+
+    Within a chunk of length L the recurrence unrolls into two matmuls
+    via cumulative log-decays::
+
+        out_t = â_t @ S_0 + [strict_tril(â k̃ᵀ) + diag(r·u·k)] @ V
+        â_t = r_t ∘ exp(cum_{t-1}),  k̃_j = k_j ∘ exp(-cum_j)
+        S_L  = exp(cum_L) ∘ S_0 + (k ∘ exp(cum_L - cum_j))ᵀ V
+
+    which turns S sequential steps into S/L scan iterations of MXU-sized
+    matmuls.  exp(-cum_j) grows with the in-chunk decay sum, so L is kept
+    small (16 default: |cum| <= L·e keeps fp32 comfortably finite; the
+    identity is asserted against the step scan in tests).
+    inputs: (B,H,S,hd) heads-major.  Returns ((B,H,S,hd), S_end)."""
+    B, H, S, hd = rh.shape
+    L = chunk
+    assert S % L == 0
+    n = S // L
+
+    def resh(t):
+        return t.reshape(B, H, n, L, hd).transpose(2, 0, 1, 3, 4)
+
+    rc, kc, vc = resh(rh), resh(kh), resh(vh)
+    logw = jnp.log(jnp.maximum(resh(wh.astype(jnp.float32)), 1e-38))
+    tri = jnp.tril(jnp.ones((L, L), jnp.float32), k=-1)
+
+    def chunk_body(s, t):
+        r, k, v, lw = t                       # (B,H,L,hd)
+        cum = jnp.cumsum(lw, axis=2)          # cum_j, j=1..L
+        cum_prev = cum - lw                   # cum_{t-1}
+        a_hat = r * jnp.exp(cum_prev)
+        k_tilde = k * jnp.exp(-cum)
+        scores = jnp.einsum("bhtk,bhjk->bhtj", a_hat, k_tilde) * tri
+        # u is (H, hd): the in-place bonus term, diagonal of the scores
+        d_t = jnp.einsum("bhtk,hk,bhtk->bht", r, u, k)
+        out = jnp.einsum("bhtj,bhjv->bhtv", scores, v) \
+            + jnp.einsum("bhtk,bhkv->bhtv", a_hat, s) \
+            + d_t[..., None] * v
+        k_hat = k * jnp.exp(cum[:, :, -1:, :] - cum)
+        s_new = jnp.exp(cum[:, :, -1, :])[..., None] * s + \
+            jnp.einsum("bhjk,bhjv->bhkv", k_hat, v)
+        return s_new, out
+
+    s_fin, outs = jax.lax.scan(chunk_body, s0, (rc, kc, vc, logw))
+    y = outs.transpose(1, 2, 0, 3, 4).reshape(B, H, S, hd)
+    return y, s_fin
+
+
+def rwkv6_time_mix(tm, x, cfg, state=None):
+    """Full-sequence WKV6.  x: (B,S,d).  Returns (y, new_wkv_state)."""
+    B, S, d = x.shape
+    H, hd = cfg.rwkv_heads, cfg.rwkv_head_dim
+    prev = None if state is None else state.get("shift")
+    xx = _shift(x, prev)
+    r, k, v, g, wdecay = _rwkv_rkvgw(tm, x, xx, cfg)
+    to_heads = lambda t: _heads(t, H, hd).transpose(0, 2, 1, 3)  # (B,H,S,hd)
+    rh = to_heads(r).astype(jnp.float32)
+    kh = to_heads(k).astype(jnp.float32)
+    vh = to_heads(v).astype(jnp.float32)
+    wh = to_heads(wdecay)
+    u = tm["u"].astype(jnp.float32)
+
+    s0 = (jnp.zeros((B, H, hd, hd), jnp.float32) if state is None
+          else state["wkv"].astype(jnp.float32))
+
+    chunk = getattr(cfg, "rwkv_chunk", 0)
+    if chunk and S % chunk == 0 and S > chunk:
+        outs, s_fin = _wkv_chunked(rh, kh, vh, wh, u, s0, chunk)
+    else:
+        outs, s_fin = _wkv_step_scan(rh, kh, vh, wh, u, s0)
+    y = outs.transpose(0, 2, 1, 3).reshape(B, S, d)
+    # per-head groupnorm
+    yh = y.reshape(B, S, H, hd)
+    mu = yh.mean(-1, keepdims=True)
+    var = ((yh - mu) ** 2).mean(-1, keepdims=True)
+    yh = (yh - mu) * jax.lax.rsqrt(var + 64e-5)
+    y = yh.reshape(B, S, d) * tm["ln_scale"].astype(jnp.float32)
+    y = (y.astype(x.dtype) * g) @ tm["w_o"].astype(x.dtype)
+    new_state = {"wkv": s_fin, "shift": x[:, -1, :]}
+    return y, new_state
+
+
+def rwkv6_channel_mix(cm, x, state=None):
+    dt_ = x.dtype
+    prev = None if state is None else state.get("shift")
+    xx = _shift(x, prev)
+    xk = x + (xx - x) * cm["mu_k"].astype(dt_)
+    xr = x + (xx - x) * cm["mu_r"].astype(dt_)
+    kk = jnp.square(jax.nn.relu(xk @ cm["w_k"].astype(dt_)))
+    out = jax.nn.sigmoid(xr @ cm["w_r"].astype(dt_)) * (kk @ cm["w_v"].astype(dt_))
+    return out, {"shift": x[:, -1, :]}
+
+
+def rwkv6_state_spec(cfg, batch: int) -> dict:
+    H, hd, d = cfg.rwkv_heads, cfg.rwkv_head_dim, cfg.d_model
+    return {
+        "wkv": ParamSpec((batch, H, hd, hd), ("batch", "heads", "state",
+                                              "state"), "zeros"),
+        "tm_shift": ParamSpec((batch, d), ("batch", "d_model"), "zeros"),
+        "cm_shift": ParamSpec((batch, d), ("batch", "d_model"), "zeros"),
+    }

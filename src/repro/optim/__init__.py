@@ -1,0 +1,6 @@
+from repro.optim.optimizers import (Optimizer, adam, adamw, lamb, sgd,
+                                    make_schedule, clip_by_norm,
+                                    tree_global_norm)
+
+__all__ = ["Optimizer", "adam", "adamw", "lamb", "sgd", "make_schedule",
+           "clip_by_norm", "tree_global_norm"]

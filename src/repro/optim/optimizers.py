@@ -1,0 +1,194 @@
+"""Functional per-layer optimizers.
+
+The L2L Eager Param-Server applies the optimizer ONE LAYER AT A TIME inside
+the reverse scan (Algorithm 4), so the optimizer API is per-subtree::
+
+    state = opt.init(params_subtree)
+    new_params, new_state = opt.update(grads, state, params_subtree, step)
+
+States are pytrees that mirror the param subtree leaf-for-leaf (each leaf
+maps to a dict of slots), so a stacked layer group's optimizer state is
+itself stacked and can be scanned/streamed exactly like the weights
+(the paper's EPS holds params + optimizer state in host DRAM; eq. (1)'s
+"4x" term).
+
+Implemented: adam, adamw, lamb (the paper's future-work large-batch
+optimizer [10]), sgd(+momentum).  All support an ``lr`` schedule function of
+``step`` and optional per-call gradient scaling.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    name: str
+    init: Callable        # params_subtree -> state_subtree
+    update: Callable      # (grads, state, params, step) -> (new_params, new_state)
+
+
+def make_schedule(base_lr: float, warmup: int = 0, total: int = 0,
+                  kind: str = "constant") -> Callable:
+    def sched(step):
+        s = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+        lr = jnp.asarray(base_lr, jnp.float32)
+        if warmup > 0:
+            lr = lr * jnp.minimum(1.0, (s + 1.0) / warmup)
+        if kind == "cosine" and total > 0:
+            frac = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+            lr = lr * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        elif kind == "linear" and total > 0:
+            frac = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+            lr = lr * (1.0 - frac)
+        return lr
+    return sched
+
+
+def tree_global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_norm(tree, max_norm: float):
+    """Clip a gradient subtree by its own global norm (the L2L-p compatible
+    per-layer clip — see DESIGN.md: a *global* clip would serialize the
+    eager updates)."""
+    norm = tree_global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), tree), norm
+
+
+def _cast_like(x, ref):
+    return x.astype(ref.dtype)
+
+
+def adam(lr=1e-3, b1=0.9, b2=0.999, eps=1e-8,
+         schedule: Callable | None = None) -> Optimizer:
+    sched = schedule or (lambda s: lr)
+
+    def init(params):
+        return jax.tree.map(
+            lambda p: {"m": jnp.zeros_like(p, jnp.float32),
+                       "v": jnp.zeros_like(p, jnp.float32)}, params)
+
+    def update(grads, state, params, step):
+        t = step.astype(jnp.float32) + 1.0
+        a = sched(step) * jnp.sqrt(1.0 - b2 ** t) / (1.0 - b1 ** t)
+
+        def leaf(g, s, p):
+            gf = g.astype(jnp.float32)
+            m = b1 * s["m"] + (1 - b1) * gf
+            v = b2 * s["v"] + (1 - b2) * gf * gf
+            newp = p.astype(jnp.float32) - a * m / (jnp.sqrt(v) + eps)
+            return _cast_like(newp, p), {"m": m, "v": v}
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_s = treedef.flatten_up_to(state)
+        flat_p = treedef.flatten_up_to(params)
+        out = [leaf(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+        new_s = jax.tree.unflatten(treedef, [o[1] for o in out])
+        return new_p, new_s
+
+    return Optimizer("adam", init, update)
+
+
+def adamw(lr=1e-3, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.01,
+          schedule: Callable | None = None) -> Optimizer:
+    sched = schedule or (lambda s: lr)
+    base = adam(lr, b1, b2, eps, schedule)
+
+    def update(grads, state, params, step):
+        t = step.astype(jnp.float32) + 1.0
+        a = sched(step) * jnp.sqrt(1.0 - b2 ** t) / (1.0 - b1 ** t)
+
+        def leaf(g, s, p):
+            gf = g.astype(jnp.float32)
+            m = b1 * s["m"] + (1 - b1) * gf
+            v = b2 * s["v"] + (1 - b2) * gf * gf
+            upd = m / (jnp.sqrt(v) + eps) + weight_decay * p.astype(jnp.float32)
+            return _cast_like(p.astype(jnp.float32) - a * upd, p), \
+                {"m": m, "v": v}
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_s = treedef.flatten_up_to(state)
+        flat_p = treedef.flatten_up_to(params)
+        out = [leaf(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        return (jax.tree.unflatten(treedef, [o[0] for o in out]),
+                jax.tree.unflatten(treedef, [o[1] for o in out]))
+
+    return Optimizer("adamw", base.init, update)
+
+
+def lamb(lr=1e-3, b1=0.9, b2=0.999, eps=1e-6, weight_decay=0.01,
+         schedule: Callable | None = None) -> Optimizer:
+    """LAMB [You et al. 2019] — the paper's pointer for 32K-batch L2L-p."""
+    sched = schedule or (lambda s: lr)
+    base = adam(lr, b1, b2, eps, schedule)
+
+    def update(grads, state, params, step):
+        t = step.astype(jnp.float32) + 1.0
+        a = sched(step)
+
+        def leaf(g, s, p):
+            gf = g.astype(jnp.float32)
+            m = b1 * s["m"] + (1 - b1) * gf
+            v = b2 * s["v"] + (1 - b2) * gf * gf
+            mhat = m / (1.0 - b1 ** t)
+            vhat = v / (1.0 - b2 ** t)
+            u = mhat / (jnp.sqrt(vhat) + eps) + \
+                weight_decay * p.astype(jnp.float32)
+            w_norm = jnp.linalg.norm(p.astype(jnp.float32).reshape(-1))
+            u_norm = jnp.linalg.norm(u.reshape(-1))
+            trust = jnp.where(w_norm > 0,
+                              jnp.where(u_norm > 0, w_norm / u_norm, 1.0),
+                              1.0)
+            return _cast_like(p.astype(jnp.float32) - a * trust * u, p), \
+                {"m": m, "v": v}
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_s = treedef.flatten_up_to(state)
+        flat_p = treedef.flatten_up_to(params)
+        out = [leaf(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        return (jax.tree.unflatten(treedef, [o[0] for o in out]),
+                jax.tree.unflatten(treedef, [o[1] for o in out]))
+
+    return Optimizer("lamb", base.init, update)
+
+
+def sgd(lr=1e-2, momentum=0.0, schedule: Callable | None = None) -> Optimizer:
+    sched = schedule or (lambda s: lr)
+
+    def init(params):
+        if momentum == 0.0:
+            return jax.tree.map(lambda p: {}, params)
+        return jax.tree.map(
+            lambda p: {"mu": jnp.zeros_like(p, jnp.float32)}, params)
+
+    def update(grads, state, params, step):
+        a = sched(step)
+
+        def leaf(g, s, p):
+            gf = g.astype(jnp.float32)
+            if momentum == 0.0:
+                return _cast_like(p.astype(jnp.float32) - a * gf, p), s
+            mu = momentum * s["mu"] + gf
+            return _cast_like(p.astype(jnp.float32) - a * mu, p), {"mu": mu}
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_s = treedef.flatten_up_to(state)
+        flat_p = treedef.flatten_up_to(params)
+        out = [leaf(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        return (jax.tree.unflatten(treedef, [o[0] for o in out]),
+                jax.tree.unflatten(treedef, [o[1] for o in out]))
+
+    return Optimizer("sgd", init, update)
+
+
+def get_optimizer(name: str, **kw) -> Optimizer:
+    return {"adam": adam, "adamw": adamw, "lamb": lamb, "sgd": sgd}[name](**kw)

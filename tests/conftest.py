@@ -1,0 +1,28 @@
+import jax
+import jax.numpy as jnp
+import pytest
+
+# NOTE: no XLA_FLAGS here on purpose — unit tests and benches see ONE device.
+# Multi-device dry-run tests spawn subprocesses (test_dryrun_small.py).
+
+
+def make_batch(cfg, B, S, seed=0, dtype=jnp.float32):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    batch = {
+        "tokens": jax.random.randint(ks[0], (B, S), 0, cfg.vocab_size),
+        "targets": jax.random.randint(ks[1], (B, S), 0, cfg.vocab_size),
+        "mask": jnp.ones((B, S), jnp.float32),
+    }
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(
+            ks[2], (B, cfg.n_frames, cfg.d_model), dtype)
+    if cfg.is_vlm:
+        batch["patches"] = jax.random.normal(
+            ks[3], (B, cfg.n_patches, cfg.vit_dim), dtype)
+    return batch
+
+
+@pytest.fixture(scope="session")
+def archs():
+    from repro.configs.base import list_archs
+    return list_archs()

@@ -1,0 +1,63 @@
+"""Deliverable (f): per-architecture smoke tests.
+
+Each assigned architecture instantiates a REDUCED variant of the same
+family (2 layers, d_model<=512, <=4 experts) and runs one forward and one
+L2L train step on CPU, asserting output shapes and absence of NaNs."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from conftest import make_batch
+from repro.configs.base import get_config, list_archs
+from repro.core import l2l
+from repro.core.schedule import ExecutionConfig
+from repro.models.model import LayeredModel
+from repro.optim import adam
+
+ARCHS = list_archs()
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_reduced_limits(arch):
+    cfg = get_config(arch, "smoke")
+    assert cfg.n_layers <= 2
+    assert cfg.d_model <= 512
+    assert cfg.n_experts <= 4
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward(arch):
+    cfg = get_config(arch, "smoke")
+    model = LayeredModel(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    B, S = 2, 16
+    batch = make_batch(cfg, B, S)
+    loss, (loss_sum, wsum, aux) = jax.jit(
+        lambda p, b: model.full_loss(p, b))(params, batch)
+    assert jnp.isfinite(loss), arch
+    assert float(wsum) == B * S
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch):
+    cfg = get_config(arch, "smoke")
+    model = LayeredModel(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, 4, 16)
+    opt = adam(lr=1e-3)
+    step = jax.jit(l2l.make_train_step(
+        model, opt, ExecutionConfig(n_microbatches=2)))
+    opt_state = l2l.init_opt_state(opt, params)
+    new_params, new_opt, metrics = step(params, opt_state, batch)
+    assert jnp.isfinite(metrics["loss"]), arch
+    assert jnp.isfinite(metrics["grad_norm"]), arch
+    assert int(new_opt["step"]) == 1
+    # params actually moved, shapes preserved
+    moved = jax.tree.map(
+        lambda a, b: (a.shape == b.shape
+                      and bool(jnp.any(a != b))), params, new_params)
+    assert all(jax.tree.leaves(jax.tree.map(
+        lambda a, b: a.shape == b.shape, params, new_params)))
+    assert any(jax.tree.leaves(moved)), f"{arch}: no parameter changed"
+    assert all(jnp.isfinite(l.astype(jnp.float32)).all()
+               for l in jax.tree.leaves(new_params)), arch

@@ -1,0 +1,136 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("shape", [(1, 2, 128, 64), (2, 4, 256, 128),
+                                   (1, 1, 512, 64)])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("window", [0, 64])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_vs_oracle(shape, causal, window, dtype):
+    B, H, S, D = shape
+    ks = jax.random.split(jax.random.PRNGKey(S + H), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, S, H, D), dtype)
+    v = jax.random.normal(ks[2], (B, S, H, D), dtype)
+    o = ops.flash_attention(q, k, v, causal=causal, window=window,
+                            block_q=64, block_k=64)
+    t = lambda x: x.transpose(0, 2, 1, 3)
+    r = t(ref.ref_attention(t(q), t(k), t(v), causal=causal, window=window))
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    err = float(jnp.max(jnp.abs(o.astype(jnp.float32)
+                                - r.astype(jnp.float32))))
+    assert err < tol, err
+
+
+def test_flash_attention_soft_cap():
+    B, H, S, D = 1, 2, 128, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q, k, v = (jax.random.normal(kk, (B, S, H, D)) * 3 for kk in ks)
+    o = ops.flash_attention(q, k, v, causal=True, soft_cap=30.0,
+                            block_q=64, block_k=64)
+    t = lambda x: x.transpose(0, 2, 1, 3)
+    r = t(ref.ref_attention(t(q), t(k), t(v), causal=True, soft_cap=30.0))
+    assert float(jnp.max(jnp.abs(o - r))) < 2e-5
+
+
+def test_flash_attention_matches_model_attend():
+    """Kernel == the chunked jnp attention used by the models."""
+    from repro.models.attention import attend
+    B, H, S, D = 1, 2, 256, 64
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, H, D))
+    v = jax.random.normal(ks[2], (B, S, H, D))
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    a = attend(q, k, v, pos, pos, causal=True, chunk=64)
+    o = ops.flash_attention(q, k, v, causal=True, block_q=64, block_k=64)
+    assert float(jnp.max(jnp.abs(a - o))) < 2e-5
+
+
+@pytest.mark.parametrize("n", [128, 1000, 4096, 100_000])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_adam_vs_oracle(n, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(n), 4)
+    p = jax.random.normal(ks[0], (n,), dtype)
+    g = jax.random.normal(ks[1], (n,), jnp.float32)
+    m = jax.random.normal(ks[2], (n,), jnp.float32) * 0.1
+    v = jnp.abs(jax.random.normal(ks[3], (n,), jnp.float32)) * 0.01
+    p2, m2, v2 = ops.fused_adam(p, g, m, v, 1e-3, 0.7, wd=0.01)
+    rp, rm, rv = ref.ref_adam(p, g, m, v, 1e-3, 0.7, wd=0.01)
+    assert jnp.allclose(m2, rm, atol=1e-6)
+    assert jnp.allclose(v2, rv, atol=1e-6)
+    assert jnp.allclose(p2.astype(jnp.float32), rp.astype(jnp.float32),
+                        atol=1e-2 if dtype == jnp.bfloat16 else 1e-6)
+
+
+@pytest.mark.parametrize("shape", [(4, 128), (37, 256), (2, 8, 512)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_vs_oracle(shape, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(0), shape, dtype)
+    s = jax.random.normal(jax.random.PRNGKey(1), (shape[-1],), jnp.float32)
+    o = ops.rmsnorm(x, s)
+    r = ref.ref_rmsnorm(x, s)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    assert float(jnp.max(jnp.abs(o.astype(jnp.float32)
+                                 - r.astype(jnp.float32)))) < tol
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("window", [0, 32])
+def test_flash_attention_vjp_vs_oracle(causal, window):
+    """FA-2 recompute backward (dq/dk/dv Pallas kernels) == autodiff of
+    the naive oracle."""
+    B, H, S, D = 1, 2, 128, 64
+    ks = jax.random.split(jax.random.PRNGKey(7), 4)
+    q, k, v, seed = (jax.random.normal(kk, (B, S, H, D)) for kk in ks)
+    t = lambda x: x.transpose(0, 2, 1, 3)
+
+    def f_kernel(q, k, v):
+        return (ops.flash_attention(q, k, v, causal=causal, window=window,
+                                    block_q=64, block_k=64) * seed).sum()
+
+    def f_ref(q, k, v):
+        return (t(ref.ref_attention(t(q), t(k), t(v), causal=causal,
+                                    window=window)) * seed).sum()
+
+    gk = jax.grad(f_kernel, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gk, gr):
+        assert float(jnp.max(jnp.abs(a - b))) < 5e-5
+
+
+def test_use_pallas_training_path_matches_jnp():
+    """End-to-end: a smoke model trained with cfg.use_pallas computes the
+    same L2L gradients as the jnp chunked-attention path."""
+    from conftest import make_batch
+    from repro.configs.base import get_config
+    from repro.core import l2l
+    from repro.core.schedule import ExecutionConfig
+    from repro.models.model import LayeredModel
+    cfg0 = get_config("granite-3-8b", "smoke").replace(
+        dtype="float32", max_seq_len=64)
+    cfg1 = cfg0.replace(use_pallas=True)
+    m0, m1 = LayeredModel(cfg0), LayeredModel(cfg1)
+    params = m0.init_params(jax.random.PRNGKey(0))
+    batch = make_batch(cfg0, 2, 64)
+    ec = ExecutionConfig(n_microbatches=1)
+    l0, g0 = jax.jit(l2l.make_grads_fn(m0, ec))(params, batch)
+    l1, g1 = jax.jit(l2l.make_grads_fn(m1, ec))(params, batch)
+    assert abs(float(l0) - float(l1)) < 1e-4
+    err = max(jax.tree.leaves(jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a - b))), g0, g1)))
+    assert err < 1e-3, err
+
+
+def test_rmsnorm_matches_model_norm():
+    from repro.models.common import apply_norm
+    x = jax.random.normal(jax.random.PRNGKey(2), (16, 128))
+    s = jnp.abs(jax.random.normal(jax.random.PRNGKey(3), (128,))) + 0.5
+    o = ops.rmsnorm(x, s)
+    r = apply_norm({"scale": s}, x)
+    assert float(jnp.max(jnp.abs(o - r))) < 1e-5

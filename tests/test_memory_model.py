@@ -1,0 +1,68 @@
+"""Analytic memory/time model invariants (eqs. 1-7)."""
+import pytest
+
+from repro.configs.base import get_config
+from repro.core.memory_model import (estimate, for_config,
+                                     paper_worked_example)
+from repro.models.model import LayeredModel
+
+
+def test_l2l_device_bytes_depth_independent():
+    """Eq. (4): the device footprint must not grow with N."""
+    devs = []
+    for n in (12, 24, 96):
+        model = LayeredModel(get_config("bert-large").replace(n_layers=n))
+        r = estimate(model, batch=32, seq=512, n_microbatches=8,
+                     mode="l2l_p", offload_stash=True)
+        devs.append(r.total_device)
+    assert devs[0] == devs[1] == devs[2]
+
+
+def test_baseline_device_bytes_linear_in_depth():
+    rs = []
+    for n in (12, 24):
+        model = LayeredModel(get_config("bert-large").replace(n_layers=n))
+        r = estimate(model, batch=32, seq=512, mode="baseline")
+        rs.append(r.total_device + r.opt_state)
+    assert 1.8 < rs[1] / rs[0] < 2.2
+
+
+def test_l2l_host_holds_model_and_opt():
+    model = LayeredModel(get_config("bert-large"))
+    r = estimate(model, batch=32, seq=512, mode="l2l_p",
+                 offload_stash=True)
+    b = estimate(model, batch=32, seq=512, mode="baseline")
+    # host >= params + opt (what baseline kept on device)
+    assert r.total_host >= b.params_device + b.opt_state
+
+
+def test_stash_scales_with_batch_not_ub():
+    model = LayeredModel(get_config("bert-large"))
+    r8 = estimate(model, batch=8, seq=512, n_microbatches=2, mode="l2l")
+    r32 = estimate(model, batch=32, seq=512, n_microbatches=8, mode="l2l")
+    assert r32.stash == 4 * r8.stash
+    a = estimate(model, batch=32, seq=512, n_microbatches=2, mode="l2l")
+    b = estimate(model, batch=32, seq=512, n_microbatches=16, mode="l2l")
+    assert a.stash == b.stash            # Table 5: ub count doesn't matter
+
+
+def test_paper_worked_example_numbers():
+    tm = paper_worked_example()
+    assert abs(tm.l2l() - 2.92) < 0.15
+    assert abs(tm.l2l_p() - 2.45) < 0.15
+    assert tm.baseline() < tm.l2l_p() < tm.l2l()
+
+
+def test_l2lp_hides_relay_when_compute_bound():
+    tm = paper_worked_example()
+    # with fast host link the L2L-p overhead over pure compute vanishes
+    fast = tm.__class__(**{**tm.__dict__, "hb": 1e12, "o_tc": 0.0})
+    assert abs(fast.l2l_p()
+               - fast.n_layers * fast.u * (2 * fast.f_t + fast.b_t)) < 1e-9
+
+
+def test_for_config_sane():
+    model = LayeredModel(get_config("granite-3-8b"))
+    tm = for_config(model, batch=16, seq=4096, u=4)
+    assert tm.baseline() > 0
+    assert tm.l2l() > tm.baseline()      # recompute overhead

@@ -1,0 +1,181 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st, HealthCheck
+
+from repro.models.attention import attend, expand_kv
+from repro.models.common import apply_rope
+from repro.models.moe import moe_apply, moe_spec
+from repro.models.common import materialize
+from repro.optim import adam, clip_by_norm, tree_global_norm
+
+SET = dict(deadline=None, max_examples=20,
+           suppress_health_check=[HealthCheck.too_slow])
+
+
+# ---------------------------------------------------------------------------
+# invariant: chunked online-softmax attention == unchunked
+# ---------------------------------------------------------------------------
+@settings(**SET)
+@given(st.integers(1, 3), st.integers(1, 4),
+       st.sampled_from([16, 48, 64, 96]),
+       st.sampled_from([0, 8, 24]),
+       st.booleans(), st.integers(0, 2 ** 31 - 1))
+def test_chunked_attention_equals_full(B, H, S, window, causal, seed):
+    D = 16
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, H, D))
+    v = jax.random.normal(ks[2], (B, S, H, D))
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    full = attend(q, k, v, pos, pos, causal=causal, window=window, chunk=0)
+    chunked = attend(q, k, v, pos, pos, causal=causal, window=window,
+                     chunk=16)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(chunked),
+                               atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# invariant: RoPE is a rotation — it preserves vector norms exactly
+# ---------------------------------------------------------------------------
+@settings(**SET)
+@given(st.integers(1, 4), st.sampled_from([1.0, 0.5]),
+       st.integers(0, 2 ** 31 - 1))
+def test_rope_preserves_norm(B, fraction, seed):
+    S, H, D = 8, 2, 32
+    x = jax.random.normal(jax.random.PRNGKey(seed), (B, S, H, D))
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    y = apply_rope(x, pos, 10000.0, fraction)
+    np.testing.assert_allclose(
+        np.asarray(jnp.linalg.norm(x, axis=-1)),
+        np.asarray(jnp.linalg.norm(y, axis=-1)), rtol=1e-5)
+
+
+def test_rope_relative_property():
+    """q.k after rope depends only on relative distance."""
+    D = 32
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 1, 1, D))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, D))
+    def score(pq, pk):
+        qq = apply_rope(q, jnp.full((1, 1), pq, jnp.int32), 1e4)
+        kk = apply_rope(k, jnp.full((1, 1), pk, jnp.int32), 1e4)
+        return float(jnp.sum(qq * kk))
+    assert abs(score(5, 3) - score(10, 8)) < 1e-4
+    assert abs(score(7, 7) - score(0, 0)) < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# invariant: GQA expand_kv replicates kv heads in query-group order
+# ---------------------------------------------------------------------------
+@settings(**SET)
+@given(st.integers(1, 2), st.integers(1, 4), st.integers(1, 4),
+       st.integers(0, 2 ** 31 - 1))
+def test_expand_kv(B, KV, rep, seed):
+    S, D = 4, 8
+    k = jax.random.normal(jax.random.PRNGKey(seed), (B, S, KV, D))
+    e = expand_kv(k, rep)
+    assert e.shape == (B, S, KV * rep, D)
+    for h in range(KV * rep):
+        np.testing.assert_array_equal(np.asarray(e[:, :, h]),
+                                      np.asarray(k[:, :, h // rep]))
+
+
+# ---------------------------------------------------------------------------
+# invariant: MoE dense path == capacity path when capacity is ample
+# ---------------------------------------------------------------------------
+class _MoECfg:
+    d_model = 32
+    d_ff_expert = 16
+    n_experts = 4
+    n_shared_experts = 0
+    experts_per_token = 2
+    capacity_factor = 100.0     # ample: no drops
+    router_aux_coef = 0.01
+    gated_mlp = True
+    act = "silu"
+    moe_ep_constraint = False
+
+
+@settings(**SET)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_moe_dense_equals_capacity(seed):
+    cfg = _MoECfg()
+    spec = moe_spec(cfg)
+    w = materialize(spec, jax.random.PRNGKey(seed))
+    # T = 6 <= 2E triggers dense; reshape to force capacity path with same
+    # tokens via a larger batch of identical rows is awkward — instead call
+    # the two internals directly.
+    from repro.models.moe import _route, _moe_dense, _moe_capacity
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (40, cfg.d_model))
+    tw, ti, aux = _route(w, x, cfg)
+    yd = _moe_dense(w, x, tw, ti, cfg)
+    yc = _moe_capacity(w, x, tw, ti, cfg)
+    np.testing.assert_allclose(np.asarray(yd), np.asarray(yc), atol=1e-4)
+    assert np.isfinite(float(aux))
+
+
+@settings(**SET)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_moe_router_weights_normalized(seed):
+    cfg = _MoECfg()
+    from repro.models.moe import _route
+    w = materialize(moe_spec(cfg), jax.random.PRNGKey(seed))
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (16, cfg.d_model))
+    tw, ti, _ = _route(w, x, cfg)
+    np.testing.assert_allclose(np.asarray(tw.sum(-1)), 1.0, atol=1e-5)
+    # top-k ids are distinct per token
+    assert all(len(set(row)) == len(row) for row in np.asarray(ti))
+
+
+# ---------------------------------------------------------------------------
+# invariant: clip_by_norm bounds the subtree norm; adam step bounded by lr
+# ---------------------------------------------------------------------------
+@settings(**SET)
+@given(st.floats(1e-4, 10.0), st.integers(0, 2 ** 31 - 1))
+def test_clip_by_norm(max_norm, seed):
+    tree = {"a": jax.random.normal(jax.random.PRNGKey(seed), (7, 3)) * 10,
+            "b": jax.random.normal(jax.random.PRNGKey(seed + 1), (5,)) * 10}
+    clipped, pre = clip_by_norm(tree, max_norm)
+    post = float(tree_global_norm(clipped))
+    assert post <= max_norm * 1.001
+    if float(pre) <= max_norm:
+        np.testing.assert_allclose(np.asarray(clipped["a"]),
+                                   np.asarray(tree["a"]), rtol=1e-6)
+
+
+@settings(**SET)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_adam_update_bounded(seed):
+    opt = adam(lr=1e-2)
+    p = {"w": jax.random.normal(jax.random.PRNGKey(seed), (11,))}
+    g = {"w": jax.random.normal(jax.random.PRNGKey(seed + 1), (11,)) * 100}
+    s = opt.init(p)
+    newp, _ = opt.update(g, s, p, jnp.int32(0))
+    # |delta| <= lr * bias-correction bound (~ lr / (1-b1) early on)
+    delta = float(jnp.max(jnp.abs(newp["w"] - p["w"])))
+    assert delta <= 1e-2 * 12
+
+
+# ---------------------------------------------------------------------------
+# invariant: L2L gradient identity holds for random microbatch splits
+# ---------------------------------------------------------------------------
+@settings(deadline=None, max_examples=6,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(st.sampled_from([1, 2, 4, 8]), st.integers(0, 2 ** 31 - 1))
+def test_l2l_identity_random_ub(ub, seed):
+    from conftest import make_batch
+    from repro.configs.base import get_config
+    from repro.core import baseline, l2l
+    from repro.core.schedule import ExecutionConfig
+    from repro.models.model import LayeredModel
+    cfg = get_config("bert-large", "smoke").replace(dtype="float32")
+    model = LayeredModel(cfg)
+    params = model.init_params(jax.random.PRNGKey(seed))
+    batch = make_batch(cfg, 8, 8, seed=seed)
+    ec = ExecutionConfig(n_microbatches=ub)
+    _, gb = jax.jit(baseline.make_grads_fn(model, ec))(params, batch)
+    _, gl = jax.jit(l2l.make_grads_fn(model, ec))(params, batch)
+    errs = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))), gb, gl)
+    assert max(jax.tree.leaves(errs)) < 1e-4

@@ -1,0 +1,97 @@
+"""Unit tests for the logical-axis sharding rules (divisibility fallbacks,
+double-use protection, decode cache layout)."""
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import get_config
+from repro.distributed import sharding as shd
+from repro.models.model import LayeredModel
+
+
+def mesh44():
+    devs = jax.devices()
+    if len(devs) < 1:
+        pytest.skip("no devices")
+    # 1-device "mesh" with logical shape (1,1) is enough for rule logic;
+    # axis sizes come from the mesh shape we declare.
+    return Mesh(np.asarray(devs[:1]).reshape(1, 1), ("data", "model"))
+
+
+class FakeMesh:
+    """Shape-only stand-in (the rules never touch devices)."""
+    def __init__(self, **shape):
+        self.shape = shape
+
+
+def test_heads_divisibility_fallback():
+    cfg = get_config("hymba-1.5b")       # 25 heads: not divisible by 16
+    rules = shd.make_rules(cfg, FakeMesh(data=16, model=16))
+    assert rules["heads"] is None
+    assert rules["ffn"] == "model"        # 5504 % 16 == 0
+    cfg2 = get_config("command-r-35b")    # 64 heads
+    rules2 = shd.make_rules(cfg2, FakeMesh(data=16, model=16))
+    assert rules2["heads"] == "model"
+
+
+def test_vocab_divisibility():
+    cfg = get_config("whisper-base")      # 51865: indivisible
+    rules = shd.make_rules(cfg, FakeMesh(data=16, model=16))
+    assert rules["vocab"] is None
+    cfg2 = get_config("qwen1.5-110b")     # 152064
+    assert shd.make_rules(cfg2, FakeMesh(data=16, model=16))["vocab"] \
+        == "model"
+
+
+def test_expert_vs_tp_sharding():
+    ds = get_config("deepseek-v2-lite-16b")   # 64 experts
+    r = shd.make_rules(ds, FakeMesh(data=16, model=16))
+    assert r["experts"] == "model" and r["expert_ffn"] is None
+    gk = get_config("grok-1-314b")            # 8 experts < 16
+    r = shd.make_rules(gk, FakeMesh(data=16, model=16))
+    assert r["experts"] is None and r["expert_ffn"] == "model"
+
+
+def test_decode_rules_shard_cache_seq():
+    cfg = get_config("granite-3-8b")
+    r = shd.make_rules(cfg, FakeMesh(pod=2, data=16, model=16),
+                       kind="decode", batch_size=128)
+    assert r["seq"] == "model"
+    assert r["kv"] is None                 # can't double-use the axis
+    assert r["batch"] == ("pod", "data")
+
+
+def test_batch_indivisible_goes_replicated():
+    cfg = get_config("granite-3-8b")
+    r = shd.make_rules(cfg, FakeMesh(data=16, model=16), kind="decode",
+                       batch_size=1)       # long_500k
+    assert r["batch"] is None
+
+
+def test_spec_to_pspec_no_axis_double_use():
+    rules = {"a": "model", "b": "model", "c": ("pod", "data")}
+    ps = shd.spec_to_pspec(("a", "b", "c"), rules)
+    assert ps == P("model", None, ("pod", "data"))
+
+
+def test_spec_to_pspec_shape_divisibility():
+    rules = {"seq": "model"}
+    ps = shd.spec_to_pspec(("seq",), rules, shape=(1500,),
+                           mesh=FakeMesh(model=16))
+    assert ps == P()                       # 1500 % 16 != 0 -> replicate
+    ps2 = shd.spec_to_pspec(("seq",), rules, shape=(1600,),
+                            mesh=FakeMesh(model=16))
+    assert ps2 == P("model")
+
+
+def test_param_pspecs_cover_all_leaves():
+    for arch in ("deepseek-v2-lite-16b", "whisper-base", "rwkv6-1.6b"):
+        cfg = get_config(arch)
+        model = LayeredModel(cfg)
+        rules = shd.make_rules(cfg, FakeMesh(data=16, model=16))
+        slices = shd.layer_slice_pspecs(model, None, rules)
+        for tree in slices:
+            for p in jax.tree.leaves(tree, is_leaf=lambda x: isinstance(x, P)):
+                assert isinstance(p, P)
