@@ -1,0 +1,24 @@
+PY ?= python
+
+# Two failures ship with the seed and are tracked in CHANGES.md/ROADMAP
+# (CPU fp noise + MLA decode mismatch); deselect them so `verify` carries
+# signal about NEW regressions.  `make test` runs everything, warts and all.
+KNOWN_SEED_FAILURES = \
+	--deselect tests/test_decode_consistency.py::test_mla_absorbed_decode_matches_naive \
+	--deselect tests/test_system.py::test_l2l_and_baseline_learning_curves_match
+
+.PHONY: verify test bench quickstart
+
+# tier-1 verification (quick: slow multi-device subprocess tests deselected)
+verify:
+	PYTHONPATH=src $(PY) -m pytest -x -q -m "not slow" $(KNOWN_SEED_FAILURES)
+
+# the full suite: slow marks included, known seed failures NOT deselected
+test:
+	PYTHONPATH=src $(PY) -m pytest -q
+
+bench:
+	PYTHONPATH=src $(PY) -m benchmarks.run --quick
+
+quickstart:
+	PYTHONPATH=src $(PY) examples/quickstart.py

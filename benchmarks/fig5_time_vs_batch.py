@@ -7,13 +7,11 @@ V100 OOM limit), while L2L runs device microbatches of 8.  Time per
 "epoch" = time per step normalized to a fixed token budget.
 """
 import jax
-import jax.numpy as jnp
 
 from benchmarks.common import lm_batch, timeit
+from repro import engine as engines
 from repro.configs.base import get_config
-from repro.core import baseline as base_mod, l2l
 from repro.core.schedule import ExecutionConfig
-from repro.models.model import LayeredModel
 from repro.optim import adam
 
 SEQ = 64
@@ -21,8 +19,6 @@ SEQ = 64
 
 def run(quick=False):
     cfg = get_config("bert-large", "smoke")
-    model = LayeredModel(cfg)
-    params = model.init_params(jax.random.PRNGKey(0))
     opt = adam()
     batches = [8, 16] if quick else [8, 16, 32, 64]
     print("\n# Fig 5 — time per fixed token budget vs batch "
@@ -31,14 +27,16 @@ def run(quick=False):
     out = []
     for b in batches:
         batch = lm_batch(cfg, b, SEQ)
-        s_base = jax.jit(base_mod.make_train_step(
-            model, opt, ExecutionConfig(n_microbatches=b // 2)))
-        s_l2l = jax.jit(l2l.make_train_step(
-            model, opt, ExecutionConfig(n_microbatches=max(1, b // 8))))
-        st_b = base_mod.init_opt_state(opt, params)
-        st_l = l2l.init_opt_state(opt, params)
-        tb = timeit(lambda: s_base(params, st_b, batch), iters=2) / b
-        tl = timeit(lambda: s_l2l(params, st_l, batch), iters=2) / b
+        e_base = engines.create(
+            "baseline", cfg, ExecutionConfig(n_microbatches=b // 2),
+            optimizer=opt, donate=False)
+        e_l2l = engines.create(
+            "l2l-p", cfg, ExecutionConfig(n_microbatches=max(1, b // 8)),
+            optimizer=opt, donate=False)
+        st_b = e_base.init(jax.random.PRNGKey(0))
+        st_l = e_l2l.init(jax.random.PRNGKey(0))
+        tb = timeit(lambda: e_base.train_step(st_b, batch), iters=2) / b
+        tl = timeit(lambda: e_l2l.train_step(st_l, batch), iters=2) / b
         out.append((b, tb, tl))
         print(f"{b},{tb:.4f},{tl:.4f},{tb/max(tl,1e-12):.2f}")
     # paper claim: the ratio (baseline/L2L) grows with batch

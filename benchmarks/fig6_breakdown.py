@@ -11,31 +11,26 @@ step); transfer share comes from the eq. (6) relay term on the TPU target
 import jax
 
 from benchmarks.common import lm_batch, timeit
+from repro import engine as engines
 from repro.configs.base import get_config
-from repro.core import l2l
 from repro.core.memory_model import for_config
 from repro.core.schedule import ExecutionConfig
-from repro.models.model import LayeredModel
 from repro.optim import adam
 
 
 def run(quick=False):
     cfg = get_config("bert-large", "smoke")
-    model = LayeredModel(cfg)
-    params = model.init_params(jax.random.PRNGKey(0))
+    eng = engines.create("l2l-p", cfg, ExecutionConfig(n_microbatches=8),
+                         optimizer=adam(), donate=False)
+    model = eng.model
+    state = eng.init(jax.random.PRNGKey(0))
+    params = state.params
     batch = lm_batch(cfg, 32, 64)
-    ec = ExecutionConfig(n_microbatches=8)
-    opt = adam()
 
-    fwd = jax.jit(l2l.make_prefill_fn(model, ec))
-    grads = jax.jit(l2l.make_grads_fn(model, ec))
-    step = jax.jit(l2l.make_train_step(model, opt, ec))
-    st = l2l.init_opt_state(opt, params)
-
-    t_fwd = timeit(lambda: fwd(params, {k: batch[k] for k in ("tokens",)}),
-                   iters=3)
-    t_grads = timeit(lambda: grads(params, batch), iters=3)
-    t_step = timeit(lambda: step(params, st, batch), iters=3)
+    t_fwd = timeit(lambda: eng.prefill(
+        params, {k: batch[k] for k in ("tokens",)}), iters=3)
+    t_grads = timeit(lambda: eng.grads(params, batch), iters=3)
+    t_step = timeit(lambda: eng.train_step(state, batch), iters=3)
     t_bwd = max(t_grads - t_fwd, 1e-9)
     t_opt = max(t_step - t_grads, 1e-9)
 

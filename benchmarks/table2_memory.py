@@ -12,12 +12,8 @@ Validation: baseline activations grow ~linearly with depth; the L2L device
 footprint stays ~flat (its growth is only the boundary stash, which
 eq. (4) moves to the host).
 """
-import jax
-import jax.numpy as jnp
-
 from benchmarks.common import abstract_batch, bert_model, compiled_memory, gb
-from repro.core import baseline as base_mod, l2l
-from repro.core.memory_model import estimate
+from repro import engine as engines
 from repro.core.schedule import ExecutionConfig
 
 
@@ -34,17 +30,21 @@ def run(quick=False):
         params_abs = model.abstract_params()
         batch_abs = abstract_batch(cfg, BATCH, SEQ)
 
-        base_fn = base_mod.make_grads_fn(
-            model, ExecutionConfig(n_microbatches=1))
-        m_base = compiled_memory(base_fn, params_abs, batch_abs)
+        e_base = engines.create("baseline", model,
+                                ExecutionConfig(n_microbatches=1))
+        m_base = compiled_memory(e_base.grads_fn, params_abs, batch_abs)
 
-        l2l_fn = l2l.make_grads_fn(
-            model, ExecutionConfig(n_microbatches=UB))
-        m_l2l = compiled_memory(l2l_fn, params_abs, batch_abs)
+        # compiled measurement: stash on device (the depth-growing term we
+        # want visible); analytic: eq. (4)'s host-offloaded L2L-p split
+        e_l2l = engines.create("l2l", model,
+                               ExecutionConfig(n_microbatches=UB))
+        m_l2l = compiled_memory(e_l2l.grads_fn, params_abs, batch_abs)
 
-        a_base = estimate(model, batch=BATCH, seq=SEQ, mode="baseline")
-        a_l2l = estimate(model, batch=BATCH, seq=SEQ, n_microbatches=UB,
-                         mode="l2l_p", offload_stash=True)
+        a_base = e_base.memory_estimate(batch=BATCH, seq=SEQ)
+        a_l2l = engines.create(
+            "l2l-p", model, ExecutionConfig(n_microbatches=UB,
+                                            offload_stash=True)
+        ).memory_estimate(batch=BATCH, seq=SEQ)
         rows.append({
             "layers": n,
             "baseline_temp_gb": gb(m_base["temp"]),

@@ -9,32 +9,26 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import engine as engines
 from repro.configs.base import get_config
-from repro.core import baseline as base_mod, l2l
 from repro.core.schedule import ExecutionConfig
 from repro.data.synthetic import DataConfig, SyntheticLM
-from repro.models.model import LayeredModel
 from repro.optim import adam, make_schedule
 
 
 def train(engine, batch, ub, steps, seed=0):
     cfg = get_config("bert-large", "smoke")
-    model = LayeredModel(cfg)
-    params = model.init_params(jax.random.PRNGKey(seed))
     opt = adam(lr=2e-3, schedule=make_schedule(2e-3, warmup=10))
-    ec = ExecutionConfig(n_microbatches=ub)
-    if engine == "l2l":
-        step = jax.jit(l2l.make_train_step(model, opt, ec))
-        st = l2l.init_opt_state(opt, params)
-    else:
-        step = jax.jit(base_mod.make_train_step(model, opt, ec))
-        st = base_mod.init_opt_state(opt, params)
+    name = "l2l-p" if engine == "l2l" else "baseline"
+    eng = engines.create(name, cfg, ExecutionConfig(n_microbatches=ub),
+                         optimizer=opt)
+    state = eng.init(jax.random.PRNGKey(seed))
     data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=64,
                                   global_batch=batch, seed=seed))
     losses = []
     for i in range(steps):
         b = {k: jnp.asarray(v) for k, v in data.batch(i).items()}
-        params, st, m = step(params, st, b)
+        state, m = eng.train_step(state, b)
         losses.append(float(m["loss"]))
     return np.asarray(losses)
 

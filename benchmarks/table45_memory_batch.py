@@ -5,11 +5,8 @@ N*mb*A dominates).  Table 5's finding: for fixed batch, the number of
 microbatches barely matters (7020 -> 7432 MB for ub 2 -> 16, ~6%).
 Both reproduced via compiled memory_analysis + the eq. (2)/(4) model.
 """
-import jax
-
 from benchmarks.common import abstract_batch, bert_model, compiled_memory, gb
-from repro.core import l2l
-from repro.core.memory_model import estimate
+from repro import engine as engines
 from repro.core.schedule import ExecutionConfig
 
 SEQ = 512
@@ -20,15 +17,20 @@ def run(quick=False):
     cfg = model.cfg
     params_abs = model.abstract_params()
 
+    def l2l_engine(ub):
+        return engines.create("l2l", model,
+                              ExecutionConfig(n_microbatches=ub))
+
     print("\n# Table 4 — L2L memory vs batch (uB size 4)")
     print("batch,ubatches,temp_gb,analytic_device_gb,analytic_stash_gb")
     batches = [4, 8, 16, 32]
     t4 = []
     for b in (batches[:2] if quick else batches):
         ub = max(1, b // 4)
-        fn = l2l.make_grads_fn(model, ExecutionConfig(n_microbatches=ub))
-        m = compiled_memory(fn, params_abs, abstract_batch(cfg, b, SEQ))
-        a = estimate(model, batch=b, seq=SEQ, n_microbatches=ub, mode="l2l")
+        eng = l2l_engine(ub)
+        m = compiled_memory(eng.grads_fn, params_abs,
+                            abstract_batch(cfg, b, SEQ))
+        a = eng.memory_estimate(batch=b, seq=SEQ)
         t4.append((b, m["temp"]))
         print(f"{b},{ub},{gb(m['temp']):.3f},{gb(a.total_device):.3f},"
               f"{gb(a.stash):.3f}")
@@ -39,10 +41,10 @@ def run(quick=False):
     sizes = [2, 4] if quick else [2, 4, 8, 16]
     for ub_size in sizes:
         ub = 32 // ub_size
-        fn = l2l.make_grads_fn(model, ExecutionConfig(n_microbatches=ub))
-        m = compiled_memory(fn, params_abs, abstract_batch(cfg, 32, SEQ))
-        a = estimate(model, batch=32, seq=SEQ, n_microbatches=ub,
-                     mode="l2l")
+        eng = l2l_engine(ub)
+        m = compiled_memory(eng.grads_fn, params_abs,
+                            abstract_batch(cfg, 32, SEQ))
+        a = eng.memory_estimate(batch=32, seq=SEQ)
         t5.append(m["temp"])
         print(f"32,{ub_size},{ub},{gb(m['temp']):.3f},"
               f"{gb(a.total_device):.3f}")

@@ -4,18 +4,13 @@ grows linearly and falls over; L2L's stays flat (Table 2: a 96-layer BERT
 in 11.13 GB where baseline OOMs at 48).
 
 Compile-only on this container (memory_analysis, nothing allocated), plus
-the analytic eq. (1)-(4) split for the TPU target.
+the analytic eq. (1)-(4) split via each engine's ``memory_estimate``.
 
     PYTHONPATH=src python examples/depth_scaling.py
 """
-import jax
-import jax.numpy as jnp
-
+from repro import engine as engines
 from repro.configs.base import get_config
-from repro.core import baseline, l2l
-from repro.core.memory_model import estimate
 from repro.core.schedule import ExecutionConfig
-from repro.models.model import LayeredModel
 
 V100_GB = 16.0
 
@@ -25,10 +20,11 @@ def main():
           f"{'L2L host/EPS (GiB)':>20}  verdict")
     for n in (12, 24, 48, 96):
         cfg = get_config("bert-large", "full").replace(n_layers=n)
-        model = LayeredModel(cfg)
-        b = estimate(model, batch=32, seq=512, mode="baseline")
-        l = estimate(model, batch=32, seq=512, n_microbatches=8,
-                     mode="l2l_p", offload_stash=True)
+        base = engines.create("baseline", cfg)
+        l2lp = engines.create("l2l-p", cfg, ExecutionConfig(
+            n_microbatches=8, offload_stash=True))
+        b = base.memory_estimate(batch=32, seq=512)
+        l = l2lp.memory_estimate(batch=32, seq=512)
         base_dev = (b.total_device + b.opt_state) / 2**30
         l2l_dev = l.total_device / 2**30
         l2l_host = l.total_host / 2**30

@@ -5,77 +5,69 @@ It also enables dynamic approaches such as neural architecture search."
 
 Because the L2L engine executes a *stacked* layer axis (and the device
 only ever holds one layer), growing the network mid-training is just
-concatenating freshly-initialized layers (+ zero optializer slots) onto
-the stacked pytrees — no engine change, no device-footprint change.
+concatenating freshly-initialized layers (+ zero optimizer slots) onto
+the stacked pytrees in the TrainState — a new Engine for the deeper
+config picks the state up unchanged; no device-footprint change.
 
     PYTHONPATH=src python examples/nas_depth_growth.py
 """
 import jax
 import jax.numpy as jnp
 
+from repro import engine as engines
 from repro.configs.base import get_config
-from repro.core import l2l
 from repro.core.schedule import ExecutionConfig
 from repro.data.synthetic import DataConfig, SyntheticLM
-from repro.models.common import materialize
-from repro.models.model import LayeredModel
+from repro.models.common import materialize, stack_specs
 from repro.optim import adam
 
 
-def grow(model, params, opt_state, extra_layers, rng):
+def grow(eng, state, extra_layers, rng, opt):
     """Append freshly-initialized layers to group 0 (identity-friendly:
-    new blocks start with near-zero residual contributions)."""
-    cfg = model.cfg.replace(n_layers=model.cfg.n_layers + extra_layers)
-    new_model = LayeredModel(cfg)
-    fresh = materialize(
-        __import__("repro.models.common", fromlist=["stack_specs"]
-                   ).stack_specs(model.groups[0].spec, extra_layers),
-        rng)
+    new blocks start with near-zero residual contributions).  Returns the
+    deeper engine and the carried-over TrainState."""
+    cfg = eng.model.cfg.replace(
+        n_layers=eng.model.cfg.n_layers + extra_layers)
+    new_eng = engines.create(eng.name, cfg, eng.exec_cfg, optimizer=opt,
+                             donate=False)
+    fresh = materialize(stack_specs(eng.model.groups[0].spec, extra_layers),
+                        rng)
     # scale down the fresh layers' output projections so growth is smooth
-    def dampen(tree):
-        return jax.tree.map(lambda a: a * 0.1, tree)
-    fresh = dampen(fresh)
+    fresh = jax.tree.map(lambda a: a * 0.1, fresh)
     cat = lambda old, new: jax.tree.map(
         lambda a, b: jnp.concatenate([a, b.astype(a.dtype)], 0), old, new)
-    params = dict(params)
+    params = dict(state.params)
     params["groups"] = (cat(params["groups"][0], fresh),)
-    opt = adam(lr=1e-3)
-    fresh_opt = opt.init(fresh)
-    opt_state = dict(opt_state)
-    opt_state["groups"] = (cat(opt_state["groups"][0], fresh_opt),)
-    return new_model, params, opt_state
+    opt_state = dict(state.opt_state)
+    opt_state["groups"] = (cat(opt_state["groups"][0], opt.init(fresh)),)
+    return new_eng, state.replace(params=params, opt_state=opt_state)
 
 
-def run_phase(model, params, opt_state, data, start, steps, opt):
-    step = jax.jit(l2l.make_train_step(model, opt,
-                                       ExecutionConfig(n_microbatches=2)))
+def run_phase(eng, state, data, start, steps):
     losses = []
     for i in range(start, start + steps):
         b = {k: jnp.asarray(v) for k, v in data.batch(i).items()}
-        params, opt_state, m = step(params, opt_state, b)
+        state, m = eng.train_step(state, b)
         losses.append(float(m["loss"]))
-    return params, opt_state, losses
+    return state, losses
 
 
 def main():
     cfg = get_config("bert-large", "smoke")
-    model = LayeredModel(cfg)
-    params = model.init_params(jax.random.PRNGKey(0))
     opt = adam(lr=1e-3)
-    opt_state = l2l.init_opt_state(opt, params)
+    eng = engines.create("l2l-p", cfg, ExecutionConfig(n_microbatches=2),
+                         optimizer=opt, donate=False)
+    state = eng.init(jax.random.PRNGKey(0))
     data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=64,
                                   global_batch=8))
 
-    params, opt_state, l1 = run_phase(model, params, opt_state, data, 0,
-                                      25, opt)
-    print(f"phase 1 (depth {model.cfg.n_layers}): "
+    state, l1 = run_phase(eng, state, data, 0, 25)
+    print(f"phase 1 (depth {eng.model.cfg.n_layers}): "
           f"loss {l1[0]:.3f} -> {l1[-1]:.3f}")
 
-    model, params, opt_state = grow(model, params, opt_state, 2,
-                                    jax.random.PRNGKey(42))
-    params, opt_state, l2 = run_phase(model, params, opt_state, data, 25,
-                                      25, opt)
-    print(f"phase 2 (depth {model.cfg.n_layers}): "
+    eng, state = grow(eng, state, 2, jax.random.PRNGKey(42), opt)
+    state, l2 = run_phase(eng, state, data, 25, 25)
+    print(f"phase 2 (depth {eng.model.cfg.n_layers}): "
           f"loss {l2[0]:.3f} -> {l2[-1]:.3f}")
     assert l2[-1] < l1[0], "grown model must keep improving"
     assert abs(l2[0] - l1[-1]) < 0.5, "growth must not reset learning"

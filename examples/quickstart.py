@@ -1,7 +1,10 @@
-"""Quickstart: the L2L execution schedule in ~60 lines.
+"""Quickstart: the Engine facade in ~10 lines.
 
-Builds a small dense LM, runs ONE training step three ways and shows they
-are numerically identical — the paper's core claim — then prints the
+Every execution schedule in the repo is an engine behind one registry —
+``engines.create(name, model_cfg, exec_cfg)`` — with the same lifecycle:
+``init`` -> ``train_step`` -> ``prefill``.  This builds a small dense LM,
+runs the SAME step through all three schedules and shows the gradients
+are numerically identical (the paper's core claim), then prints the
 analytic two-tier memory split (eqs. 1-4) for the full-size model.
 
     PYTHONPATH=src python examples/quickstart.py
@@ -9,42 +12,48 @@ analytic two-tier memory split (eqs. 1-4) for the full-size model.
 import jax
 import jax.numpy as jnp
 
+from repro import engine as engines
 from repro.configs.base import get_config
-from repro.core import baseline, l2l
-from repro.core.memory_model import estimate
 from repro.core.schedule import ExecutionConfig
 from repro.data.synthetic import DataConfig, SyntheticLM
-from repro.models.model import LayeredModel
 
 
 def main():
     cfg = get_config("bert-large", "smoke").replace(dtype="float32")
-    model = LayeredModel(cfg)
-    params = model.init_params(jax.random.PRNGKey(0))
     data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=64,
                                   global_batch=8))
     batch = {k: jnp.asarray(v) for k, v in data.batch(0).items()}
+    ec = ExecutionConfig(n_microbatches=2)
 
-    # Algorithm 1/2: conventional execution (microbatch loop inner)
-    loss_a2, g_a2 = jax.jit(baseline.make_grads_fn(
-        model, ExecutionConfig(n_microbatches=2)))(params, batch)
-    # Algorithm 3: L2L — LAYER loop outer, microbatch loop inner,
-    # per-layer recompute from the boundary stash
-    loss_l2l, g_l2l = jax.jit(l2l.make_grads_fn(
-        model, ExecutionConfig(n_microbatches=2)))(params, batch)
+    # --- the 10-line engine lifecycle ---------------------------------
+    eng = engines.create("l2l-p", cfg, ec)          # Alg 4 (L2L-p)
+    state = eng.init(jax.random.PRNGKey(0))         # params + opt TrainState
+    state, metrics = eng.train_step(state, batch)   # one update (jitted)
+    logits = eng.prefill(state, batch)              # forward relay
+    print(f"train_step: loss={float(metrics['loss']):.4f} "
+          f"step={int(state.step)}  prefill logits {tuple(logits.shape)}")
 
-    err = max(jax.tree.leaves(jax.tree.map(
-        lambda a, b: float(jnp.max(jnp.abs(a - b))), g_a2, g_l2l)))
-    print(f"loss baseline-AG = {float(loss_a2):.6f}")
-    print(f"loss L2L         = {float(loss_l2l):.6f}")
-    print(f"max |grad diff|  = {err:.2e}   (identical math, inverted loops)")
+    # --- gradient identity across every registered schedule -----------
+    params = engines.create("baseline", cfg, ec).init(
+        jax.random.PRNGKey(0)).params
+    grads = {name: engines.create(name, cfg, ec).grads(params, batch)
+             for name in engines.available()}
+    loss_ref, g_ref = grads["baseline"]
+    for name, (loss, g) in grads.items():
+        err = max(jax.tree.leaves(jax.tree.map(
+            lambda a, b: float(jnp.max(jnp.abs(a - b))), g_ref, g)))
+        print(f"loss[{name:9s}] = {float(loss):.6f}   "
+              f"max |grad diff| vs baseline = {err:.2e}")
+    print("-> identical math, inverted loops.")
 
     # Where the memory went: full-size BERT-large, batch 32, seq 512
-    full = LayeredModel(get_config("bert-large", "full"))
-    for mode in ("baseline", "l2l", "l2l_p"):
-        r = estimate(full, batch=32, seq=512, n_microbatches=8, mode=mode,
-                     offload_stash=(mode == "l2l_p"))
-        print(f"{mode:9s} device={r.total_device/2**30:6.2f} GiB   "
+    full = get_config("bert-large", "full")
+    for name in ("baseline", "l2l", "l2l-p"):
+        eng = engines.create(
+            name, full, ExecutionConfig(n_microbatches=8,
+                                        offload_stash=(name == "l2l-p")))
+        r = eng.memory_estimate(batch=32, seq=512)
+        print(f"{name:9s} device={r.total_device/2**30:6.2f} GiB   "
               f"host(EPS)={r.total_host/2**30:6.2f} GiB")
     print("-> the paper's Table 2 story: the device footprint stops "
           "depending on depth.")

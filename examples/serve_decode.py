@@ -1,6 +1,7 @@
 """Serving example: prefill + batched decode for four cache families —
 full KV (granite), MLA-compressed (deepseek), O(1) recurrent state (rwkv),
-enc-dec cross-attention (whisper) — plus the long-context ring-buffer mode.
+enc-dec cross-attention (whisper) — plus the long-context ring-buffer mode,
+all through the Engine facade's decode_init/decode_step.
 
     PYTHONPATH=src python examples/serve_decode.py
 """
@@ -9,18 +10,17 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import engine as engines
 from repro.configs.base import get_config
-from repro.core import decode as dec
 from repro.core.schedule import ExecutionConfig
-from repro.models.model import LayeredModel
 
 
 def demo(arch, window=0, gen=12):
     cfg = get_config(arch, "smoke")
     if window:
         cfg = cfg.replace(grouped_decode_attn=True)
-    model = LayeredModel(cfg)
-    params = model.init_params(jax.random.PRNGKey(0))
+    eng = engines.create("l2l", cfg, ExecutionConfig(decode_window=window))
+    params = eng.model.init_params(jax.random.PRNGKey(0))
     B, P = (2, 8) if cfg.family == "audio" else (4, 16)
     prompt = jax.random.randint(jax.random.PRNGKey(1), (B, P), 0,
                                 cfg.vocab_size)
@@ -28,15 +28,13 @@ def demo(arch, window=0, gen=12):
                                 (B, cfg.n_frames, cfg.d_model), jnp.bfloat16)
               if cfg.family == "audio" else None)
     live = window if window else P + gen
-    ec = ExecutionConfig(decode_window=window)
     t0 = time.time()
-    caches, logits = dec.prefill(model, params, prompt, live, exec_cfg=ec,
-                                 frames=frames)
-    serve = jax.jit(dec.make_serve_step(model, ec))
+    caches, logits = eng.decode_init(params, prompt, live, frames=frames)
     tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
     toks = [tok]
     for i in range(gen - 1):
-        logits, caches = serve(params, caches, tok, jnp.int32(P + i))
+        logits, caches = eng.decode_step(params, caches, tok,
+                                         jnp.int32(P + i))
         tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
         toks.append(tok)
     out = jnp.concatenate(toks, 1)

@@ -1,13 +1,13 @@
 """Execution schedule configuration.
 
-Maps the paper's knobs onto one frozen config:
+Maps the paper's knobs onto one frozen config (consumed through the
+``repro.engine`` facade — the registered engines pin ``eager_optimizer``):
 
-* Algorithm 1  -> ``baseline.make_train_step(..., n_microbatches=1)``
-* Algorithm 2  -> ``baseline.make_train_step(..., n_microbatches=u)``
-* Algorithm 3  -> ``l2l.make_train_step(ExecutionConfig(eager_optimizer=False))``
-* Algorithm 4  -> ``l2l.make_train_step(ExecutionConfig(eager_optimizer=True))``
-  (L2L-p: per-layer optimize inside the reverse scan, per-layer eager
-  gradient reduction via the sharded scan body)
+* Algorithm 1  -> engine "baseline" with ``n_microbatches=1``
+* Algorithm 2  -> engine "baseline" with ``n_microbatches=u``
+* Algorithm 3  -> engine "l2l"   (trailing optimizer)
+* Algorithm 4  -> engine "l2l-p" (per-layer optimize inside the reverse
+  scan, per-layer eager gradient reduction via the sharded scan body)
 
 ``offload_stash`` is eq. (4): boundary activations live in pinned_host
 between forward and backward.  ``weight_stream`` is the EPS proper: the

@@ -1,0 +1,20 @@
+"""Public execution-engine facade.
+
+Usage::
+
+    from repro import engine as engines
+
+    eng = engines.create("l2l-p", model_cfg, exec_cfg, optimizer=adam())
+    state = eng.init(rng)
+    state, metrics = eng.train_step(state, batch)
+
+See ``repro.engine.engine`` for the Engine API and the registered
+schedules ("baseline", "l2l", "l2l-p").
+"""
+from repro.engine.engine import (BaselineEngine, Engine, L2LEngine,
+                                 L2LPEngine)
+from repro.engine.registry import available, create, get, register
+from repro.engine.state import TrainState
+
+__all__ = ["Engine", "BaselineEngine", "L2LEngine", "L2LPEngine",
+           "TrainState", "available", "create", "get", "register"]

@@ -1,0 +1,270 @@
+"""The Engine facade — the one public way to run any execution schedule.
+
+An Engine owns a model, an ExecutionConfig, an optimizer and the EPS
+placements, and exposes the full lifecycle over a single ``TrainState``
+pytree::
+
+    from repro import engine as engines
+
+    eng = engines.create("l2l-p", get_config("bert-large", "smoke"),
+                         ExecutionConfig(n_microbatches=4))
+    state = eng.init(jax.random.PRNGKey(0))
+    state, metrics = eng.train_step(state, batch)     # lazily jitted
+    logits = eng.prefill(state.params, batch)
+    eng.save(ckpt_dir, state)
+
+Registered schedules:
+
+* ``baseline`` — Algorithms 1/2 (conventional execution; microbatch loop
+  inner, monolithic update).
+* ``l2l``      — Algorithm 3 (layer-major relay, trailing optimizer).
+* ``l2l-p``    — Algorithm 4 (layer-major relay, eager per-layer
+  optimizer overlapped with the backward).
+
+The ``repro.core`` kernels (``l2l``/``baseline``/``decode``) stay
+internal: every consumer — launchers, benchmarks, examples, tests — goes
+through this facade, so new schedules (pipelined, multi-device relay)
+only have to subclass ``Engine`` and ``@register`` themselves.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+
+from repro.checkpoint import io as ckpt_io
+from repro.configs.base import ModelConfig
+from repro.core import baseline as _baseline, decode as _decode, l2l as _l2l
+from repro.core.memory_model import MemoryReport, estimate
+from repro.core.schedule import ExecutionConfig
+from repro.engine.placement import placements_for
+from repro.engine.registry import register
+from repro.engine.state import TrainState
+from repro.models.model import LayeredModel
+from repro.optim import Optimizer, adam
+
+
+class Engine:
+    """Base facade: lifecycle + lazy jit over a schedule's kernels.
+
+    Subclasses implement ``_make_step_kernel``/``_make_grads_kernel``/
+    ``_init_opt_legacy`` and set ``name``/``memory_mode``.
+    """
+    name = "base"
+    memory_mode = "baseline"
+
+    def __init__(self, model, exec_cfg: Optional[ExecutionConfig] = None, *,
+                 optimizer: Optional[Optimizer] = None, mesh=None,
+                 rules=None, placements=None, donate: bool = True):
+        if isinstance(model, ModelConfig):
+            model = LayeredModel(model)
+        self.model = model
+        self.exec_cfg = self._normalize_cfg(exec_cfg or ExecutionConfig())
+        self.optimizer = optimizer or adam()
+        self.mesh = mesh
+        self._rules = rules
+        self._placements = placements
+        self._donate = donate
+        self._fns: dict = {}        # lazily built kernels / jitted wrappers
+
+    # -- schedule-specific hooks (override in subclasses) -------------------
+    def _normalize_cfg(self, exec_cfg: ExecutionConfig) -> ExecutionConfig:
+        return exec_cfg
+
+    def _make_step_kernel(self):
+        raise NotImplementedError
+
+    def _make_grads_kernel(self):
+        raise NotImplementedError
+
+    def _init_opt_legacy(self, params) -> dict:
+        raise NotImplementedError
+
+    # -- placements ---------------------------------------------------------
+    @property
+    def placements(self):
+        if self._placements is None:
+            self._placements = placements_for(
+                self.model, self.exec_cfg, mesh=self.mesh, rules=self._rules,
+                optimizer=self.optimizer)
+        return self._placements
+
+    # -- state lifecycle ----------------------------------------------------
+    def init(self, rng) -> TrainState:
+        """Materialize parameters + optimizer state from a PRNG key."""
+        params = self.model.init_params(rng)
+        return TrainState.from_legacy(params, self._init_opt_legacy(params))
+
+    def abstract_state(self) -> TrainState:
+        """ShapeDtypeStruct TrainState (for lowering / restore targets)."""
+        params_abs = self.model.abstract_params()
+        opt_abs = jax.eval_shape(self._init_opt_legacy, params_abs)
+        return TrainState.from_legacy(params_abs, opt_abs)
+
+    def save(self, directory: str, state: TrainState,
+             step: Optional[int] = None, prefix: str = "ckpt") -> str:
+        step = int(state.step) if step is None else int(step)
+        return ckpt_io.save_train_state(directory, state.params,
+                                        state.legacy_opt(), step,
+                                        prefix=prefix)
+
+    def restore(self, directory: str, step: Optional[int] = None,
+                like: Optional[TrainState] = None, prefix: str = "ckpt"):
+        """Returns (TrainState, step).  ``like`` defaults to the engine's
+        abstract state."""
+        like = like if like is not None else self.abstract_state()
+        params, opt, step = ckpt_io.restore_train_state(
+            directory, like.params, like.legacy_opt(), step=step,
+            prefix=prefix)
+        return TrainState.from_legacy(params, opt), step
+
+    # -- training -----------------------------------------------------------
+    @property
+    def step_fn(self):
+        """Unjitted (state, batch) -> (state, metrics) — for callers that
+        manage jit/shardings themselves (dry-run lowering)."""
+        if "step_fn" not in self._fns:
+            kernel = self._make_step_kernel()
+
+            def step(state: TrainState, batch):
+                new_p, new_o, metrics = kernel(state.params,
+                                               state.legacy_opt(), batch)
+                return TrainState.from_legacy(new_p, new_o), metrics
+
+            self._fns["step_fn"] = step
+        return self._fns["step_fn"]
+
+    def train_step(self, state: TrainState, batch):
+        """One optimizer step: (state, batch) -> (state, metrics)."""
+        if "train_step" not in self._fns:
+            donate = (0,) if self._donate else ()
+            self._fns["train_step"] = jax.jit(self.step_fn,
+                                              donate_argnums=donate)
+        return self._fns["train_step"](state, batch)
+
+    # -- gradients (no update) ---------------------------------------------
+    @property
+    def grads_fn(self):
+        """Unjitted (params, batch) -> (loss, grads)."""
+        if "grads_fn" not in self._fns:
+            self._fns["grads_fn"] = self._make_grads_kernel()
+        return self._fns["grads_fn"]
+
+    def grads(self, state_or_params, batch):
+        if "grads" not in self._fns:
+            self._fns["grads"] = jax.jit(self.grads_fn)
+        params = getattr(state_or_params, "params", state_or_params)
+        return self._fns["grads"](params, batch)
+
+    # -- inference ----------------------------------------------------------
+    @property
+    def prefill_fn(self):
+        """Unjitted (params, batch) -> last-token logits (B, vocab)."""
+        if "prefill_fn" not in self._fns:
+            self._fns["prefill_fn"] = _l2l.make_prefill_fn(
+                self.model, self.exec_cfg, self.placements)
+        return self._fns["prefill_fn"]
+
+    def prefill(self, state_or_params, batch):
+        if "prefill" not in self._fns:
+            self._fns["prefill"] = jax.jit(self.prefill_fn)
+        params = getattr(state_or_params, "params", state_or_params)
+        return self._fns["prefill"](params, batch)
+
+    @property
+    def decode_step_fn(self):
+        """Unjitted (params, caches, token, cur_pos) -> (logits, caches)."""
+        if "decode_step_fn" not in self._fns:
+            self._fns["decode_step_fn"] = _decode.make_serve_step(
+                self.model, self.exec_cfg, self.placements)
+        return self._fns["decode_step_fn"]
+
+    def decode_init(self, state_or_params, tokens, live_seq: int,
+                    frames=None):
+        """Prefill the decode caches from a prompt.
+        Returns (caches, last_logits)."""
+        params = getattr(state_or_params, "params", state_or_params)
+        return _decode.prefill(self.model, params, tokens, live_seq,
+                               exec_cfg=self.exec_cfg, frames=frames)
+
+    def decode_step(self, state_or_params, caches, token, cur_pos):
+        if "decode_step" not in self._fns:
+            self._fns["decode_step"] = jax.jit(self.decode_step_fn)
+        params = getattr(state_or_params, "params", state_or_params)
+        return self._fns["decode_step"](params, caches, token, cur_pos)
+
+    # -- analysis -----------------------------------------------------------
+    def memory_estimate(self, *, batch: int, seq: int,
+                        **kw) -> MemoryReport:
+        """Analytic two-tier device/EPS byte split (paper eqs. 1-4) for
+        this engine's schedule at the given shape."""
+        kw.setdefault("n_microbatches", self.exec_cfg.n_microbatches)
+        kw.setdefault("offload_stash", self.exec_cfg.offload_stash)
+        return estimate(self.model, batch=batch, seq=seq,
+                        mode=self.memory_mode, **kw)
+
+    def describe(self) -> dict:
+        return {"engine": self.name,
+                "arch": self.model.cfg.name,
+                "exec": dataclasses.asdict(self.exec_cfg)}
+
+
+# ===========================================================================
+# Registered schedules
+# ===========================================================================
+@register("baseline")
+class BaselineEngine(Engine):
+    """Algorithms 1/2: conventional execution; Alg 2 (gradient
+    accumulation) when ``n_microbatches > 1``."""
+    name = "baseline"
+
+    @property
+    def memory_mode(self):
+        return "baseline_remat" if self.exec_cfg.remat else "baseline"
+
+    def _make_step_kernel(self):
+        return _baseline.make_train_step(self.model, self.optimizer,
+                                         self.exec_cfg)
+
+    def _make_grads_kernel(self):
+        return _baseline.make_grads_fn(self.model, self.exec_cfg)
+
+    def _init_opt_legacy(self, params):
+        return _baseline.init_opt_state(self.optimizer, params)
+
+
+class _L2LBase(Engine):
+    def _make_step_kernel(self):
+        return _l2l.make_train_step(self.model, self.optimizer,
+                                    self.exec_cfg, self.placements)
+
+    def _make_grads_kernel(self):
+        return _l2l.make_grads_fn(self.model, self.exec_cfg,
+                                  self.placements)
+
+    def _init_opt_legacy(self, params):
+        return _l2l.init_opt_state(self.optimizer, params, self.exec_cfg)
+
+
+@register("l2l")
+class L2LEngine(_L2LBase):
+    """Algorithm 3: layer-major relay; gradients shipped to the EPS and
+    applied in a trailing layer loop."""
+    name = "l2l"
+    memory_mode = "l2l"
+
+    def _normalize_cfg(self, exec_cfg):
+        return dataclasses.replace(exec_cfg, eager_optimizer=False)
+
+
+@register("l2l-p")
+class L2LPEngine(_L2LBase):
+    """Algorithm 4 (L2L-p): the optimizer for layer l runs inside the
+    reverse scan, overlapping the backward of layer l-1, with per-layer
+    eager gradient reduction."""
+    name = "l2l-p"
+    memory_mode = "l2l_p"
+
+    def _normalize_cfg(self, exec_cfg):
+        return dataclasses.replace(exec_cfg, eager_optimizer=True)

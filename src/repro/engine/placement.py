@@ -1,0 +1,46 @@
+"""EPS placement construction for engines.
+
+Single-device (tests/benchmarks) placements come straight from
+``repro.core.eps.make_placements``; for a mesh this derives the
+per-layer-slice PartitionSpecs from the model's param specs (the logic
+that used to live in ``repro.launch.build.make_placements_for``) and
+hands them to the same ``make_placements``.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.core.eps import EPSPlacements, make_placements, pspecs_like
+
+
+def placements_for(model, exec_cfg, mesh=None, rules=None,
+                   optimizer=None) -> EPSPlacements:
+    """Build the per-group weight/opt/stash placements for one engine.
+
+    With no mesh this is the single-device two-tier placement (or no-ops
+    when the backend drops memory-space transfers / streaming is off).
+    With a mesh, per-layer-slice pspecs are derived from the model's param
+    specs and the sharding ``rules`` (defaulting to the production train
+    rules for the config).
+    """
+    if mesh is None:
+        return make_placements(exec_cfg, len(model.groups))
+
+    from repro.distributed import sharding as shd
+    from repro.models.common import abstract
+    from repro.optim import adam
+
+    if rules is None:
+        rules = shd.make_rules(model.cfg, mesh, kind="train")
+    optimizer = optimizer or adam()
+    slice_pspecs = shd.layer_slice_pspecs(model, mesh, rules)
+    opt_slice_pspecs = []
+    for gi, g in enumerate(model.groups):
+        layer_abs = abstract(g.spec)
+        opt_abs = jax.eval_shape(optimizer.init, layer_abs)
+        opt_slice_pspecs.append(pspecs_like(slice_pspecs[gi], opt_abs))
+    return make_placements(exec_cfg, len(model.groups), mesh=mesh,
+                           weight_pspecs=slice_pspecs,
+                           opt_pspecs=opt_slice_pspecs,
+                           stash_pspec=P(None, rules.get("batch")))

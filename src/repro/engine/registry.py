@@ -1,0 +1,51 @@
+"""Open registry of execution engines.
+
+The three paper schedules register themselves on import of
+``repro.engine`` ("baseline" = Alg 1/2, "l2l" = Alg 3, "l2l-p" = Alg 4);
+future schedules (pipelined, multi-device relay, ...) plug in with the
+same decorator without touching any caller::
+
+    @register("my-schedule")
+    class MyEngine(Engine):
+        ...
+
+    eng = engines.create("my-schedule", model_cfg, exec_cfg)
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+_REGISTRY: Dict[str, Callable] = {}
+
+
+def register(name: str) -> Callable:
+    """Class/factory decorator: ``create(name, ...)`` will call it as
+    ``factory(model, exec_cfg, **kwargs)``."""
+    def deco(factory):
+        _REGISTRY[name] = factory
+        return factory
+    return deco
+
+
+def available() -> list:
+    return sorted(_REGISTRY)
+
+
+def get(name: str) -> Callable:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown engine {name!r}; available engines: "
+            f"{', '.join(available()) or '(none registered)'}") from None
+
+
+def create(name: str, model, exec_cfg=None, **kwargs):
+    """Build a registered Engine.
+
+    ``model`` is a ModelConfig (a LayeredModel is built internally) or an
+    already-built LayeredModel.  Keyword args are forwarded to the engine
+    constructor (``optimizer=``, ``mesh=``, ``rules=``, ``placements=``,
+    ``donate=``).
+    """
+    return get(name)(model, exec_cfg, **kwargs)

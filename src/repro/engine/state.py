@@ -1,0 +1,58 @@
+"""TrainState — the one training-state pytree shared by every Engine.
+
+Every execution schedule (baseline Alg 1/2, L2L Alg 3, L2L-p Alg 4)
+consumes and produces the same state: parameters, per-subtree optimizer
+slots, the step counter, and (when AMP is on) the dynamic loss scale.
+The core kernels in ``repro.core`` predate this dataclass and speak a flat
+dict (``{"step", "embed", "head", "groups"[, "loss_scale"]}``);
+``legacy_opt``/``from_legacy`` convert at the engine boundary so the
+kernels stay untouched.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+
+
+@dataclasses.dataclass
+class TrainState:
+    """Pytree of everything a training step consumes and produces.
+
+    ``params``      — model parameters ({"embed", "head", "groups"}).
+    ``opt_state``   — optimizer slots mirroring params ({"embed", "head",
+                      "groups"}), WITHOUT the step counter.
+    ``step``        — scalar int32 update counter.
+    ``loss_scale``  — {"scale", "good_steps"} when AMP is enabled, else None.
+    """
+    params: Any
+    opt_state: Any
+    step: Any
+    loss_scale: Any = None
+
+    _OPT_KEYS = ("embed", "head", "groups")
+
+    def legacy_opt(self) -> dict:
+        """The flat opt-state dict the ``repro.core`` kernels expect."""
+        out = {"step": self.step, **{k: self.opt_state[k]
+                                     for k in self._OPT_KEYS}}
+        if self.loss_scale is not None:
+            out["loss_scale"] = self.loss_scale
+        return out
+
+    @classmethod
+    def from_legacy(cls, params, opt: dict) -> "TrainState":
+        return cls(params=params,
+                   opt_state={k: opt[k] for k in cls._OPT_KEYS},
+                   step=opt["step"],
+                   loss_scale=opt.get("loss_scale"))
+
+    def replace(self, **kw) -> "TrainState":
+        return dataclasses.replace(self, **kw)
+
+
+jax.tree_util.register_dataclass(
+    TrainState,
+    data_fields=("params", "opt_state", "step", "loss_scale"),
+    meta_fields=())

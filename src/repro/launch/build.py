@@ -1,13 +1,15 @@
 """Assemble (step_fn, abstract inputs, shardings) for every
 (architecture x input shape x mesh) combination — the single source used by
-the dry-run, the roofline, and the perf iterations.
+the dry-run, the roofline, and the perf iterations.  All programs are
+obtained through the Engine facade (``repro.engine``); this module only
+adds the abstract inputs and explicit shardings the lowering needs.
 
 Shape -> program mapping (see DESIGN.md §5 for the skips):
 
 * train_4k    -> L2L-p train_step (weight relay + stash offload + eager opt)
 * prefill_32k -> L2L prefill (layer-major forward relay)
-* decode_32k  -> serve_step against a full-context KV cache / SSM state
-* long_500k   -> serve_step with ring-buffer window (dense) or O(1) state
+* decode_32k  -> decode_step against a full-context KV cache / SSM state
+* long_500k   -> decode_step with ring-buffer window (dense) or O(1) state
                  (ssm/hybrid); whisper: skipped
 """
 from __future__ import annotations
@@ -20,15 +22,16 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import engine as engines
 from repro.configs.base import (INPUT_SHAPES, InputShape, ModelConfig,
                                 get_config)
-from repro.core import baseline, decode, l2l
-from repro.core.eps import EPSPlacements, mesh_placement, noop_placement, \
-    pspecs_like
+from repro.core.eps import pspecs_like
 from repro.core.schedule import ExecutionConfig
 from repro.distributed import sharding as shd
+from repro.engine import TrainState
+from repro.engine.placement import placements_for
 from repro.models.model import LayeredModel, batch_spec, batch_dtypes
-from repro.models.common import abstract, is_spec, ParamSpec
+from repro.models.common import is_spec
 from repro.optim import adam
 
 
@@ -90,18 +93,8 @@ def _batch_shardings(cfg, shape, mesh, rules):
             for k, s in spec.items()}
 
 
-def _opt_abstract(optimizer, params_abs):
-    def init_like(p):
-        return jax.eval_shape(optimizer.init, p)
-    return {
-        "step": jax.ShapeDtypeStruct((), jnp.int32),
-        "embed": init_like(params_abs["embed"]),
-        "head": init_like(params_abs["head"]),
-        "groups": tuple(init_like(g) for g in params_abs["groups"]),
-    }
-
-
-def _opt_shardings(param_sh, opt_abs, mesh):
+def _opt_shardings_legacy(param_sh, opt_abs, mesh):
+    """NamedShardings for the flat opt dict, mirroring the param ones."""
     def like(sh_tree, state_tree):
         pspecs = jax.tree.map(lambda s: s.spec, sh_tree)
         kinds = jax.tree.leaves(sh_tree)[0].memory_kind if jax.tree.leaves(
@@ -133,30 +126,6 @@ def make_exec_cfg(shape: InputShape, cfg: ModelConfig, mesh,
     return ExecutionConfig(**base)
 
 
-def make_placements_for(model, exec_cfg, mesh, rules) -> EPSPlacements:
-    from repro.core.eps import memories_supported
-    noop = noop_placement()
-    n = len(model.groups)
-    if not memories_supported():
-        # backend strips memory-space transfers (see eps.memories_supported):
-        # the L2L schedule runs unchanged, placement becomes logical-only.
-        return EPSPlacements((noop,) * n, (noop,) * n, noop)
-    optimizer = adam()
-    slice_pspecs = shd.layer_slice_pspecs(model, mesh, rules)
-    opt_slice_pspecs = []
-    for gi, g in enumerate(model.groups):
-        layer_abs = abstract(g.spec)
-        opt_abs = jax.eval_shape(optimizer.init, layer_abs)
-        opt_slice_pspecs.append(pspecs_like(slice_pspecs[gi], opt_abs))
-    stash_pspec = P(None, rules.get("batch"))
-    ws = tuple(mesh_placement(mesh, sp) for sp in slice_pspecs) \
-        if exec_cfg.weight_stream else (noop,) * n
-    ops_ = tuple(mesh_placement(mesh, sp) for sp in opt_slice_pspecs) \
-        if exec_cfg.weight_stream else (noop,) * n
-    st = mesh_placement(mesh, stash_pspec) if exec_cfg.offload_stash else noop
-    return EPSPlacements(ws, ops_, st)
-
-
 # ===========================================================================
 # Builders
 # ===========================================================================
@@ -175,39 +144,46 @@ def build(arch: str, shape_name: str, mesh, *, variant: str = "full",
     if rule_overrides:
         rules.update(rule_overrides)
     exec_cfg = make_exec_cfg(shape, cfg, mesh, exec_overrides)
-    placements = make_placements_for(model, exec_cfg, mesh, rules)
+    placements = placements_for(model, exec_cfg, mesh=mesh, rules=rules)
+
+    # the production dry-run schedule is L2L-p unless the overrides asked
+    # for the trailing (Alg-3) optimizer
+    engine_name = "l2l-p" if exec_cfg.eager_optimizer else "l2l"
+    eng = engines.create(engine_name, model, exec_cfg, optimizer=adam(),
+                         mesh=mesh, rules=rules, placements=placements,
+                         donate=False)
 
     params_abs = model.abstract_params()
     param_sh = shd.param_shardings(model, mesh, rules,
                                    weight_stream=exec_cfg.weight_stream)
     meta = {"arch": arch, "shape": shape_name, "kind": shape.kind,
-            "exec": dataclasses.asdict(exec_cfg),
+            "engine": eng.name,
+            "exec": dataclasses.asdict(eng.exec_cfg),
             "mesh": dict(mesh.shape)}
 
     if shape.kind == "train":
-        optimizer = adam()
-        step = l2l.make_train_step(model, optimizer, exec_cfg, placements)
-        opt_abs = _opt_abstract(optimizer, params_abs)
-        opt_sh = _opt_shardings(param_sh, opt_abs, mesh)
+        state_abs = eng.abstract_state()
+        opt_sh = _opt_shardings_legacy(param_sh,
+                                       state_abs.legacy_opt(), mesh)
+        state_sh = TrainState.from_legacy(param_sh, opt_sh)
         batch_abs = _batch_abstract(cfg, shape)
         batch_sh = _batch_shardings(cfg, shape, mesh, rules)
-        return BuiltStep(step, (params_abs, opt_abs, batch_abs),
-                         (param_sh, opt_sh, batch_sh),
-                         (param_sh, opt_sh, None), meta)
+        return BuiltStep(eng.step_fn, (state_abs, batch_abs),
+                         (state_sh, batch_sh),
+                         (state_sh, None), meta)
 
     if shape.kind == "prefill":
-        fn = l2l.make_prefill_fn(model, exec_cfg, placements)
         batch_abs = _batch_abstract(cfg, shape)
         batch_sh = _batch_shardings(cfg, shape, mesh, rules)
-        return BuiltStep(fn, (params_abs, batch_abs),
+        return BuiltStep(eng.prefill_fn, (params_abs, batch_abs),
                          (param_sh, batch_sh), None, meta)
 
     # decode
+    from repro.core import decode as dec
     live = live_cache_len(cfg, shape)
     meta["live_cache"] = live
-    fn = decode.make_serve_step(model, exec_cfg, placements)
-    caches_abs = decode.init_caches(model, shape.global_batch, live,
-                                    abstract_only=True)
+    caches_abs = dec.init_caches(model, shape.global_batch, live,
+                                 abstract_only=True)
     cache_specs = model.cache_specs(shape.global_batch, live)
     cache_sh = tuple(
         jax.tree.map(lambda s: NamedSharding(
@@ -218,7 +194,8 @@ def build(arch: str, shape_name: str, mesh, *, variant: str = "full",
     pos_abs = jax.ShapeDtypeStruct((), jnp.int32)
     token_sh = NamedSharding(mesh, P(rules.get("batch")))
     pos_sh = NamedSharding(mesh, P())
-    return BuiltStep(fn, (params_abs, caches_abs, token_abs, pos_abs),
+    return BuiltStep(eng.decode_step_fn,
+                     (params_abs, caches_abs, token_abs, pos_abs),
                      (param_sh, cache_sh, token_sh, pos_sh),
                      (None, cache_sh), meta)
 

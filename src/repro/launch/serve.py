@@ -3,9 +3,10 @@
     PYTHONPATH=src python -m repro.launch.serve --arch granite-3-8b \
         --variant smoke --batch 4 --prompt-len 32 --gen 32
 
-Demonstrates the L2L serving story: with --weight-stream the model's layer
-stack is EPS-resident and relayed per layer during decode (TPU memory
-spaces; logical-only on CPU — see eps.memories_supported)."""
+Demonstrates the L2L serving story through the Engine facade: with
+--weight-stream the model's layer stack is EPS-resident and relayed per
+layer during decode (TPU memory spaces; logical-only on CPU — see
+eps.memories_supported)."""
 from __future__ import annotations
 
 import argparse
@@ -15,10 +16,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import engine as engines
 from repro.configs.base import get_config
-from repro.core import decode as dec
 from repro.core.schedule import ExecutionConfig
-from repro.models.model import LayeredModel
 
 
 def main(argv=None):
@@ -36,10 +36,9 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, args.variant)
-    model = LayeredModel(cfg)
-    params = model.init_params(jax.random.PRNGKey(args.seed))
-    exec_cfg = ExecutionConfig(weight_stream=args.weight_stream,
-                               decode_window=args.window)
+    eng = engines.create("l2l", cfg, ExecutionConfig(
+        weight_stream=args.weight_stream, decode_window=args.window))
+    params = eng.model.init_params(jax.random.PRNGKey(args.seed))
 
     live = args.cache_len or (args.window if args.window
                               else args.prompt_len + args.gen)
@@ -53,18 +52,17 @@ def main(argv=None):
         ).astype(jnp.bfloat16)
 
     t0 = time.time()
-    caches, last_logits = dec.prefill(model, params, prompt, live,
-                                      exec_cfg=exec_cfg, frames=frames)
+    caches, last_logits = eng.decode_init(params, prompt, live,
+                                          frames=frames)
     jax.block_until_ready(last_logits)
     t_prefill = time.time() - t0
 
-    serve = jax.jit(dec.make_serve_step(model, exec_cfg))
     tok = jnp.argmax(last_logits, axis=-1)[:, None].astype(jnp.int32)
     out_tokens = [tok]
     t0 = time.time()
     for i in range(args.gen - 1):
-        logits, caches = serve(params, caches, tok,
-                               jnp.int32(args.prompt_len + i))
+        logits, caches = eng.decode_step(params, caches, tok,
+                                         jnp.int32(args.prompt_len + i))
         tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
         out_tokens.append(tok)
     jax.block_until_ready(tok)

@@ -1,14 +1,15 @@
 """Training driver.
 
-End-to-end single-host training with the L2L engine (or the baseline
-engines for comparison) on the synthetic LM pipeline::
+End-to-end single-host training through the Engine facade (L2L-p by
+default, Alg-3 L2L or the baseline for comparison) on the synthetic LM
+pipeline::
 
     PYTHONPATH=src python -m repro.launch.train --arch bert-large \
-        --engine l2l --steps 300 --batch 32 --seq 128 --ub 4
+        --engine l2l-p --steps 300 --batch 32 --seq 128 --ub 4
 
 On a real TPU pod this same driver runs under the production mesh with
 ``--mesh single|multi`` (sharded params, per-layer eager reduction); on CPU
-it runs unsharded.  Checkpoints via repro.checkpoint.
+it runs unsharded.  Checkpoints via the engine's save/restore.
 """
 from __future__ import annotations
 
@@ -20,35 +21,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import io as ckpt_io
+from repro import engine as engines
 from repro.configs.base import get_config
-from repro.core import baseline, l2l
 from repro.core.schedule import ExecutionConfig
 from repro.data.synthetic import DataConfig, SyntheticLM, add_modality_stubs
-from repro.models.model import LayeredModel
 from repro.optim.optimizers import get_optimizer, make_schedule
-
-
-def build_step(model, args):
-    opt = get_optimizer(
-        args.optimizer,
-        schedule=make_schedule(args.lr, warmup=args.warmup,
-                               total=args.steps, kind=args.lr_schedule))
-    exec_cfg = ExecutionConfig(
-        n_microbatches=args.ub,
-        offload_stash=args.offload_stash,
-        weight_stream=args.weight_stream,
-        eager_optimizer=(args.engine == "l2l" and not args.no_eager),
-        host_optimizer=getattr(args, "host_optimizer", False),
-        clip_mode="per_layer" if args.clip > 0 else "none",
-        clip_norm=args.clip)
-    if args.engine == "l2l":
-        step = l2l.make_train_step(model, opt, exec_cfg)
-        init_opt = l2l.init_opt_state
-    else:
-        step = baseline.make_train_step(model, opt, exec_cfg)
-        init_opt = baseline.init_opt_state
-    return step, (lambda params: init_opt(opt, params))
 
 
 def main(argv=None):
@@ -57,7 +34,7 @@ def main(argv=None):
     ap.add_argument("--variant", default="smoke",
                     choices=["smoke", "full"])
     ap.add_argument("--engine", default="l2l",
-                    choices=["l2l", "baseline"])
+                    choices=["l2l", "l2l-p", "baseline"])
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch", type=int, default=32)
     ap.add_argument("--seq", type=int, default=128)
@@ -68,7 +45,9 @@ def main(argv=None):
     ap.add_argument("--optimizer", default="adam",
                     choices=["adam", "adamw", "lamb", "sgd"])
     ap.add_argument("--clip", type=float, default=1.0)
-    ap.add_argument("--no-eager", action="store_true")
+    ap.add_argument("--no-eager", action="store_true",
+                    help="with --engine l2l: trailing optimizer (Alg 3) "
+                         "instead of the eager L2L-p schedule")
     ap.add_argument("--offload-stash", action="store_true")
     ap.add_argument("--weight-stream", action="store_true")
     ap.add_argument("--host-optimizer", action="store_true",
@@ -83,6 +62,15 @@ def main(argv=None):
     ap.add_argument("--n-layers", type=int, default=0)
     args = ap.parse_args(argv)
 
+    # historical CLI: "--engine l2l" means the eager L2L-p schedule unless
+    # --no-eager asks for the Alg-3 trailing-update variant.
+    engine_name = args.engine
+    if engine_name == "l2l" and not args.no_eager:
+        engine_name = "l2l-p"
+    elif engine_name == "l2l-p" and args.no_eager:
+        ap.error("--no-eager contradicts --engine l2l-p "
+                 "(use --engine l2l --no-eager for Algorithm 3)")
+
     cfg = get_config(args.arch, args.variant)
     over = {"max_seq_len": max(cfg.max_seq_len, args.seq)}
     if args.d_model:
@@ -94,43 +82,60 @@ def main(argv=None):
     if args.n_layers:
         over["n_layers"] = args.n_layers
     cfg = cfg.replace(**over)
-    model = LayeredModel(cfg)
-    print(f"arch={cfg.name} engine={args.engine} params="
+
+    opt = get_optimizer(
+        args.optimizer,
+        schedule=make_schedule(args.lr, warmup=args.warmup,
+                               total=args.steps, kind=args.lr_schedule))
+    exec_cfg = ExecutionConfig(
+        n_microbatches=args.ub,
+        offload_stash=args.offload_stash,
+        weight_stream=args.weight_stream,
+        host_optimizer=args.host_optimizer,
+        clip_mode="per_layer" if args.clip > 0 else "none",
+        clip_norm=args.clip)
+    eng = engines.create(engine_name, cfg, exec_cfg, optimizer=opt)
+    print(f"arch={cfg.name} engine={eng.name} params="
           f"{cfg.param_count()/1e6:.1f}M layers={cfg.n_layers} "
           f"d={cfg.d_model}")
 
-    params = model.init_params(jax.random.PRNGKey(args.seed))
-    step_fn, init_opt = build_step(model, args)
-    opt_state = init_opt(params)
-    step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
-
+    state = eng.init(jax.random.PRNGKey(args.seed))
     data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size,
                                   seq_len=args.seq,
                                   global_batch=args.batch,
                                   seed=args.seed))
     rng = np.random.default_rng(args.seed)
     losses = []
+    compile_s = 0.0
     t0 = time.time()
     for i in range(args.steps):
         batch_np = add_modality_stubs(data.batch(i), cfg, rng)
         batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
-        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        state, metrics = eng.train_step(state, batch)
         loss = float(metrics["loss"])
         losses.append(loss)
-        if i % args.log_every == 0 or i == args.steps - 1:
+        if i == 0:
+            # step 0 includes the jit compile: report it separately and
+            # restart the s/step clock so the average is steady-state only.
+            compile_s = time.time() - t0
+            t0 = time.time()
+            print(f"step {i:5d}  loss {loss:8.4f}  gnorm "
+                  f"{float(metrics['grad_norm']):8.3f}  "
+                  f"(compile+first step: {compile_s:.2f}s)", flush=True)
+        elif i % args.log_every == 0 or i == args.steps - 1:
             dt = time.time() - t0
             print(f"step {i:5d}  loss {loss:8.4f}  gnorm "
                   f"{float(metrics['grad_norm']):8.3f}  "
-                  f"{dt/max(i,1):.2f}s/step", flush=True)
+                  f"{dt/i:.2f}s/step", flush=True)
         if args.ckpt_dir and args.ckpt_every and \
                 (i + 1) % args.ckpt_every == 0:
-            ckpt_io.save_train_state(args.ckpt_dir, params, opt_state, i + 1)
+            eng.save(args.ckpt_dir, state, step=i + 1)
     if args.ckpt_dir:
-        ckpt_io.save_train_state(args.ckpt_dir, params, opt_state,
-                                 args.steps)
+        eng.save(args.ckpt_dir, state, step=args.steps)
     print(json.dumps({"final_loss": losses[-1],
                       "mean_last10": float(np.mean(losses[-10:])),
                       "initial_loss": losses[0],
+                      "compile_s": round(compile_s, 2),
                       "steps": args.steps}))
     return losses
 

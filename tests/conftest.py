@@ -26,3 +26,28 @@ def make_batch(cfg, B, S, seed=0, dtype=jnp.float32):
 def archs():
     from repro.configs.base import list_archs
     return list_archs()
+
+
+@pytest.fixture
+def make_engine():
+    """Factory for facade engines in tests.
+
+    ``make_engine(name, arch=..., exec_cfg=..., optimizer=...)`` builds an
+    Engine through the public registry with test-friendly defaults: smoke
+    variant, float32 math, donation off (tests reuse states across calls).
+    """
+    from repro import engine as engines
+    from repro.configs.base import get_config
+    from repro.core.schedule import ExecutionConfig
+
+    def _make(name, arch="bert-large", exec_cfg=None, *, variant="smoke",
+              dtype="float32", optimizer=None, **kw):
+        cfg = get_config(arch, variant)
+        if dtype:
+            cfg = cfg.replace(dtype=dtype)
+        kw.setdefault("donate", False)
+        return engines.create(name, cfg,
+                              exec_cfg or ExecutionConfig(n_microbatches=2),
+                              optimizer=optimizer, **kw)
+
+    return _make

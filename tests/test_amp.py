@@ -1,30 +1,28 @@
 """Mixed precision (fp16 compute + dynamic loss scaling) — the paper's
-named future work, adapted to L2L's eager per-layer updates."""
+named future work, adapted to L2L's eager per-layer updates — driven
+through the Engine facade (the loss scale rides in TrainState)."""
 import jax
 import jax.numpy as jnp
 import pytest
 
 from conftest import make_batch
 from repro.configs.base import get_config
-from repro.core import l2l
 from repro.core.schedule import ExecutionConfig
-from repro.models.model import LayeredModel
 from repro.optim import adam
 
 
-def test_fp16_training_with_dynamic_loss_scale():
-    cfg = get_config("bert-large", "smoke").replace(dtype="float16")
-    model = LayeredModel(cfg)
-    params = model.init_params(jax.random.PRNGKey(0))
-    ec = ExecutionConfig(n_microbatches=2, loss_scale_init=2.0 ** 15,
-                         loss_scale_growth=50)
-    opt = adam(3e-4)
-    step = jax.jit(l2l.make_train_step(model, opt, ec))
-    st = l2l.init_opt_state(opt, params, ec)
+def test_fp16_training_with_dynamic_loss_scale(make_engine):
+    eng = make_engine("l2l-p", dtype="float16", optimizer=adam(3e-4),
+                      exec_cfg=ExecutionConfig(n_microbatches=2,
+                                               loss_scale_init=2.0 ** 15,
+                                               loss_scale_growth=50))
+    cfg = eng.model.cfg
+    state = eng.init(jax.random.PRNGKey(0))
+    assert state.loss_scale is not None
     losses, scales, nonfinite = [], [], []
     for i in range(10):
         batch = make_batch(cfg, 4, 16, seed=i, dtype=jnp.float16)
-        params, st, m = step(params, st, batch)
+        state, m = eng.train_step(state, batch)
         losses.append(float(m["loss"]))
         scales.append(float(m["loss_scale"]))
         nonfinite.append(int(m["nonfinite_layers"]))
@@ -33,45 +31,42 @@ def test_fp16_training_with_dynamic_loss_scale():
     assert all(jnp.isfinite(jnp.asarray(losses)))
     assert scales[-1] < scales[0]
     assert nonfinite[-1] == 0
+    assert float(state.loss_scale["scale"]) == scales[-1]
     # params stayed finite fp16
     assert all(jnp.isfinite(l.astype(jnp.float32)).all()
-               for l in jax.tree.leaves(params))
+               for l in jax.tree.leaves(state.params))
 
 
-def test_amp_with_safe_scale_matches_plain_update():
+def test_amp_with_safe_scale_matches_plain_update(make_engine):
     """fp32 compute + a modest scale: identical updates to no-AMP."""
     cfg = get_config("bert-large", "smoke").replace(dtype="float32")
-    model = LayeredModel(cfg)
-    params = model.init_params(jax.random.PRNGKey(0))
     batch = make_batch(cfg, 4, 16)
-    opt = adam(1e-3)
-    ec0 = ExecutionConfig(n_microbatches=2)
-    ec1 = ExecutionConfig(n_microbatches=2, loss_scale_init=1024.0)
-    p0, _, _ = jax.jit(l2l.make_train_step(model, opt, ec0))(
-        params, l2l.init_opt_state(opt, params, ec0), batch)
-    p1, _, _ = jax.jit(l2l.make_train_step(model, opt, ec1))(
-        params, l2l.init_opt_state(opt, params, ec1), batch)
+    e0 = make_engine("l2l-p", optimizer=adam(1e-3),
+                     exec_cfg=ExecutionConfig(n_microbatches=2))
+    e1 = make_engine("l2l-p", optimizer=adam(1e-3),
+                     exec_cfg=ExecutionConfig(n_microbatches=2,
+                                              loss_scale_init=1024.0))
+    s0, _ = e0.train_step(e0.init(jax.random.PRNGKey(0)), batch)
+    s1, _ = e1.train_step(e1.init(jax.random.PRNGKey(0)), batch)
     err = max(jax.tree.leaves(jax.tree.map(
-        lambda a, b: float(jnp.max(jnp.abs(a - b))), p0, p1)))
+        lambda a, b: float(jnp.max(jnp.abs(a - b))), s0.params, s1.params)))
     assert err < 1e-5
 
 
-def test_overflow_skips_update_and_halves_scale():
+def test_overflow_skips_update_and_halves_scale(make_engine):
     """Inject an overflow via an absurd scale: params must be unchanged
     and the scale halved."""
-    cfg = get_config("bert-large", "smoke").replace(dtype="float16")
-    model = LayeredModel(cfg)
-    params = model.init_params(jax.random.PRNGKey(0))
+    eng = make_engine("l2l-p", dtype="float16", optimizer=adam(1e-3),
+                      exec_cfg=ExecutionConfig(n_microbatches=2,
+                                               loss_scale_init=2.0 ** 30))
+    cfg = eng.model.cfg
     batch = make_batch(cfg, 4, 16, dtype=jnp.float16)
-    opt = adam(1e-3)
-    ec = ExecutionConfig(n_microbatches=2, loss_scale_init=2.0 ** 30)
-    step = jax.jit(l2l.make_train_step(model, opt, ec))
-    st = l2l.init_opt_state(opt, params, ec)
-    new_p, new_st, m = step(params, st, batch)
+    state = eng.init(jax.random.PRNGKey(0))
+    new_state, m = eng.train_step(state, batch)
     assert int(m["nonfinite_layers"]) > 0
-    assert float(new_st["loss_scale"]["scale"]) == 2.0 ** 29
+    assert float(new_state.loss_scale["scale"]) == 2.0 ** 29
     diff = max(jax.tree.leaves(jax.tree.map(
         lambda a, b: float(jnp.max(jnp.abs(
             a.astype(jnp.float32) - b.astype(jnp.float32)))),
-        params["groups"], new_p["groups"])))
+        state.params["groups"], new_state.params["groups"])))
     assert diff == 0.0, "overflowed layers must skip their update"

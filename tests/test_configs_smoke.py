@@ -9,7 +9,6 @@ import pytest
 
 from conftest import make_batch
 from repro.configs.base import get_config, list_archs
-from repro.core import l2l
 from repro.core.schedule import ExecutionConfig
 from repro.models.model import LayeredModel
 from repro.optim import adam
@@ -39,19 +38,18 @@ def test_smoke_forward(arch):
 
 
 @pytest.mark.parametrize("arch", ARCHS)
-def test_smoke_train_step(arch):
+def test_smoke_train_step(arch, make_engine):
     cfg = get_config(arch, "smoke")
-    model = LayeredModel(cfg)
-    params = model.init_params(jax.random.PRNGKey(0))
+    eng = make_engine("l2l-p", arch, dtype=None, optimizer=adam(lr=1e-3),
+                      exec_cfg=ExecutionConfig(n_microbatches=2))
     batch = make_batch(cfg, 4, 16)
-    opt = adam(lr=1e-3)
-    step = jax.jit(l2l.make_train_step(
-        model, opt, ExecutionConfig(n_microbatches=2)))
-    opt_state = l2l.init_opt_state(opt, params)
-    new_params, new_opt, metrics = step(params, opt_state, batch)
+    state = eng.init(jax.random.PRNGKey(0))
+    params = state.params
+    new_state, metrics = eng.train_step(state, batch)
+    new_params = new_state.params
     assert jnp.isfinite(metrics["loss"]), arch
     assert jnp.isfinite(metrics["grad_norm"]), arch
-    assert int(new_opt["step"]) == 1
+    assert int(new_state.step) == 1
     # params actually moved, shapes preserved
     moved = jax.tree.map(
         lambda a, b: (a.shape == b.shape

@@ -73,22 +73,20 @@ def test_checkpoint_roundtrip(tmp_path):
 
 
 def test_checkpoint_train_state_roundtrip(tmp_path):
+    from repro import engine as engines
     from repro.configs.base import get_config
-    from repro.core import l2l
-    from repro.models.model import LayeredModel
-    from repro.optim import adam
     cfg = get_config("bert-large", "smoke")
-    model = LayeredModel(cfg)
-    params = model.init_params(jax.random.PRNGKey(0))
-    opt = adam()
-    st = l2l.init_opt_state(opt, params)
+    eng = engines.create("l2l-p", cfg, donate=False)
+    state = eng.init(jax.random.PRNGKey(0))
     d = str(tmp_path)
-    ckpt.save_train_state(d, params, st, 42)
+    eng.save(d, state, step=42)
     assert ckpt.latest_step(d) == 42
-    p2, s2, step = ckpt.restore_train_state(d, params, st)
+    restored, step = eng.restore(d)
     assert step == 42
     assert jax.tree.all(jax.tree.map(
-        lambda x, y: bool(jnp.all(x == y)), params, p2))
+        lambda x, y: bool(jnp.all(jnp.asarray(x) == jnp.asarray(y))),
+        state.params, restored.params))
+    assert int(restored.step) == int(state.step)
 
 
 def test_checkpoint_structure_mismatch_rejected(tmp_path):

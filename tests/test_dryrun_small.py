@@ -69,9 +69,9 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 sys.path.insert(0, {src!r})
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from repro import engine as engines
 from repro.configs.base import get_config
 from repro.models.model import LayeredModel
-from repro.core import baseline
 from repro.core.schedule import ExecutionConfig
 mesh = Mesh(np.asarray(jax.devices()).reshape(2, 4), ("data", "model"))
 cfg0 = get_config("deepseek-v2-lite-16b", "smoke").replace(
@@ -84,8 +84,8 @@ batch = {{"tokens": toks, "targets": toks,
 params = LayeredModel(cfg0).init_params(jax.random.PRNGKey(0))
 outs = {{}}
 for name, cfg in [("global", cfg0), ("grouped", cfg1)]:
-    fn = baseline.make_grads_fn(LayeredModel(cfg),
-                                ExecutionConfig(n_microbatches=1))
+    fn = engines.create("baseline", LayeredModel(cfg),
+                        ExecutionConfig(n_microbatches=1)).grads_fn
     with mesh:
         loss, grads = jax.jit(fn, in_shardings=(
             None, NamedSharding(mesh, P("data"))))(params, batch)

@@ -1,15 +1,15 @@
 """The paper's core correctness claim: L2L execution computes the SAME
 gradients/updates as baseline-with-accumulated-gradients (Alg 2 == Alg 3
-== Alg 4 numerically), which is why Fig 3/4's learning curves coincide."""
+== Alg 4 numerically), which is why Fig 3/4's learning curves coincide.
+All schedules are driven through the public Engine facade."""
 import jax
 import jax.numpy as jnp
 import pytest
 
 from conftest import make_batch
+from repro import engine as engines
 from repro.configs.base import get_config, list_archs
-from repro.core import baseline, l2l
 from repro.core.schedule import ExecutionConfig
-from repro.models.model import LayeredModel
 from repro.optim import adam
 
 ARCHS = list_archs()
@@ -25,83 +25,74 @@ def _rel_err(a, b):
 
 
 @pytest.mark.parametrize("arch", ARCHS)
-def test_l2l_grads_match_baseline_ag(arch):
+def test_l2l_grads_match_baseline_ag(arch, make_engine):
     cfg = get_config(arch, "smoke").replace(dtype="float32")
-    model = LayeredModel(cfg)
-    params = model.init_params(jax.random.PRNGKey(0))
     batch = make_batch(cfg, 4, 16)
-    ec = ExecutionConfig(n_microbatches=2)
-    l_base, g_base = jax.jit(baseline.make_grads_fn(model, ec))(params, batch)
-    l_l2l, g_l2l = jax.jit(l2l.make_grads_fn(model, ec))(params, batch)
+    e_base = make_engine("baseline", arch)
+    e_l2l = make_engine("l2l", arch)
+    params = e_base.model.init_params(jax.random.PRNGKey(0))
+    l_base, g_base = e_base.grads(params, batch)
+    l_l2l, g_l2l = e_l2l.grads(params, batch)
     assert abs(float(l_base) - float(l_l2l)) < 1e-4
     assert _rel_err(g_base, g_l2l) < 1e-4, arch
 
 
 @pytest.mark.parametrize("ub", [1, 2, 4])
-def test_microbatch_count_invariance(ub):
+def test_microbatch_count_invariance(ub, make_engine):
     """Alg 3's point: more microbatches never changes the math."""
     cfg = get_config("bert-large", "smoke").replace(dtype="float32")
-    model = LayeredModel(cfg)
-    params = model.init_params(jax.random.PRNGKey(0))
     batch = make_batch(cfg, 4, 16)
-    _, g1 = jax.jit(l2l.make_grads_fn(
-        model, ExecutionConfig(n_microbatches=1)))(params, batch)
-    _, gu = jax.jit(l2l.make_grads_fn(
-        model, ExecutionConfig(n_microbatches=ub)))(params, batch)
+    e1 = make_engine("l2l", exec_cfg=ExecutionConfig(n_microbatches=1))
+    eu = make_engine("l2l", exec_cfg=ExecutionConfig(n_microbatches=ub))
+    params = e1.model.init_params(jax.random.PRNGKey(0))
+    _, g1 = e1.grads(params, batch)
+    _, gu = eu.grads(params, batch)
     assert _rel_err(g1, gu) < 1e-4
 
 
-def test_alg3_equals_alg4_updates():
+def test_alg3_equals_alg4_updates(make_engine):
     """Eager (L2L-p) and trailing (L2L) optimizer orders produce identical
     updated parameters."""
     cfg = get_config("granite-3-8b", "smoke").replace(dtype="float32")
-    model = LayeredModel(cfg)
-    params = model.init_params(jax.random.PRNGKey(0))
     batch = make_batch(cfg, 4, 16)
     opt = adam(lr=1e-3)
-    p3 = None
     outs = {}
-    for eager in (False, True):
-        step = jax.jit(l2l.make_train_step(
-            model, opt, ExecutionConfig(n_microbatches=2,
-                                        eager_optimizer=eager)))
-        st = l2l.init_opt_state(opt, params)
-        new_p, new_o, m = step(params, st, batch)
-        outs[eager] = (new_p, m)
-    err = _rel_err(outs[False][0], outs[True][0])
+    for name in ("l2l", "l2l-p"):
+        eng = make_engine(name, "granite-3-8b", optimizer=opt)
+        state = eng.init(jax.random.PRNGKey(0))
+        new_state, m = eng.train_step(state, batch)
+        outs[name] = (new_state.params, m)
+    err = _rel_err(outs["l2l"][0], outs["l2l-p"][0])
     assert err < 1e-5, err
-    assert abs(float(outs[False][1]["loss"]) -
-               float(outs[True][1]["loss"])) < 1e-5
+    assert abs(float(outs["l2l"][1]["loss"]) -
+               float(outs["l2l-p"][1]["loss"])) < 1e-5
 
 
-def test_l2l_step_equals_baseline_step():
+def test_l2l_step_equals_baseline_step(make_engine):
     """Full train step (grads + adam) parity: L2L-p vs Algorithm 2."""
     cfg = get_config("chatglm3-6b", "smoke").replace(dtype="float32")
-    model = LayeredModel(cfg)
-    params = model.init_params(jax.random.PRNGKey(1))
     batch = make_batch(cfg, 4, 16, seed=3)
     opt = adam(lr=1e-3)
-    ec = ExecutionConfig(n_microbatches=2)
-    s_l2l = jax.jit(l2l.make_train_step(model, opt, ec))
-    s_base = jax.jit(baseline.make_train_step(model, opt, ec))
-    p1, o1, m1 = s_l2l(params, l2l.init_opt_state(opt, params), batch)
-    p2, o2, m2 = s_base(params, baseline.init_opt_state(opt, params), batch)
-    assert _rel_err(p1, p2) < 1e-5
+    e_l2l = make_engine("l2l-p", "chatglm3-6b", optimizer=opt)
+    e_base = make_engine("baseline", "chatglm3-6b", optimizer=opt)
+    s1, m1 = e_l2l.train_step(e_l2l.init(jax.random.PRNGKey(1)), batch)
+    s2, m2 = e_base.train_step(e_base.init(jax.random.PRNGKey(1)), batch)
+    assert _rel_err(s1.params, s2.params) < 1e-5
     assert abs(float(m1["loss"]) - float(m2["loss"])) < 1e-5
+    assert int(s1.step) == int(s2.step) == 1
 
 
-def test_per_layer_clip_consistency():
+def test_per_layer_clip_consistency(make_engine):
     cfg = get_config("bert-large", "smoke").replace(dtype="float32")
-    model = LayeredModel(cfg)
-    params = model.init_params(jax.random.PRNGKey(0))
     batch = make_batch(cfg, 4, 16)
-    opt = adam(lr=1e-2)
-    ec = ExecutionConfig(n_microbatches=2, clip_mode="per_layer",
-                         clip_norm=1e-3)
-    step = jax.jit(l2l.make_train_step(model, opt, ec))
-    p, o, m = step(params, l2l.init_opt_state(opt, params), batch)
+    eng = make_engine(
+        "l2l-p", optimizer=adam(lr=1e-2),
+        exec_cfg=ExecutionConfig(n_microbatches=2, clip_mode="per_layer",
+                                 clip_norm=1e-3))
+    state = eng.init(jax.random.PRNGKey(0))
+    new_state, m = eng.train_step(state, batch)
     assert jnp.isfinite(m["loss"])
     # with a tiny clip norm the layer updates are bounded by ~lr
     deltas = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))),
-                          params["groups"], p["groups"])
+                          state.params["groups"], new_state.params["groups"])
     assert max(jax.tree.leaves(deltas)) < 0.1

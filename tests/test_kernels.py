@@ -108,19 +108,19 @@ def test_use_pallas_training_path_matches_jnp():
     """End-to-end: a smoke model trained with cfg.use_pallas computes the
     same L2L gradients as the jnp chunked-attention path."""
     from conftest import make_batch
+    from repro import engine as engines
     from repro.configs.base import get_config
-    from repro.core import l2l
     from repro.core.schedule import ExecutionConfig
-    from repro.models.model import LayeredModel
     cfg0 = get_config("granite-3-8b", "smoke").replace(
         dtype="float32", max_seq_len=64)
     cfg1 = cfg0.replace(use_pallas=True)
-    m0, m1 = LayeredModel(cfg0), LayeredModel(cfg1)
-    params = m0.init_params(jax.random.PRNGKey(0))
-    batch = make_batch(cfg0, 2, 64)
     ec = ExecutionConfig(n_microbatches=1)
-    l0, g0 = jax.jit(l2l.make_grads_fn(m0, ec))(params, batch)
-    l1, g1 = jax.jit(l2l.make_grads_fn(m1, ec))(params, batch)
+    e0 = engines.create("l2l", cfg0, ec, donate=False)
+    e1 = engines.create("l2l", cfg1, ec, donate=False)
+    params = e0.model.init_params(jax.random.PRNGKey(0))
+    batch = make_batch(cfg0, 2, 64)
+    l0, g0 = e0.grads(params, batch)
+    l1, g1 = e1.grads(params, batch)
     assert abs(float(l0) - float(l1)) < 1e-4
     err = max(jax.tree.leaves(jax.tree.map(
         lambda a, b: float(jnp.max(jnp.abs(a - b))), g0, g1)))

@@ -3,6 +3,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed: property tests skipped")
 from hypothesis import given, settings, strategies as st, HealthCheck
 
 from repro.models.attention import attend, expand_kv
@@ -166,16 +169,16 @@ def test_adam_update_bounded(seed):
 @given(st.sampled_from([1, 2, 4, 8]), st.integers(0, 2 ** 31 - 1))
 def test_l2l_identity_random_ub(ub, seed):
     from conftest import make_batch
+    from repro import engine as engines
     from repro.configs.base import get_config
-    from repro.core import baseline, l2l
     from repro.core.schedule import ExecutionConfig
-    from repro.models.model import LayeredModel
     cfg = get_config("bert-large", "smoke").replace(dtype="float32")
-    model = LayeredModel(cfg)
-    params = model.init_params(jax.random.PRNGKey(seed))
-    batch = make_batch(cfg, 8, 8, seed=seed)
     ec = ExecutionConfig(n_microbatches=ub)
-    _, gb = jax.jit(baseline.make_grads_fn(model, ec))(params, batch)
-    _, gl = jax.jit(l2l.make_grads_fn(model, ec))(params, batch)
+    e_base = engines.create("baseline", cfg, ec, donate=False)
+    e_l2l = engines.create("l2l", cfg, ec, donate=False)
+    params = e_base.model.init_params(jax.random.PRNGKey(seed))
+    batch = make_batch(cfg, 8, 8, seed=seed)
+    _, gb = e_base.grads(params, batch)
+    _, gl = e_l2l.grads(params, batch)
     errs = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))), gb, gl)
     assert max(jax.tree.leaves(errs)) < 1e-4

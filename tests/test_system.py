@@ -1,66 +1,60 @@
 """End-to-end behaviour tests: training converges, engines interchange,
-serving generates, the drivers run."""
+serving generates, the drivers run — all through the Engine facade."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from conftest import make_batch
+from repro import engine as engines
 from repro.configs.base import get_config
-from repro.core import baseline, decode as dec, l2l
 from repro.core.schedule import ExecutionConfig
 from repro.data.synthetic import DataConfig, SyntheticLM
-from repro.models.model import LayeredModel
 from repro.optim import adam, make_schedule
 
 
 def _train(engine, steps=25, seed=0):
     cfg = get_config("bert-large", "smoke")
-    model = LayeredModel(cfg)
-    params = model.init_params(jax.random.PRNGKey(seed))
     opt = adam(lr=3e-3, schedule=make_schedule(3e-3, warmup=5))
-    ec = ExecutionConfig(n_microbatches=2)
-    if engine == "l2l":
-        step = jax.jit(l2l.make_train_step(model, opt, ec))
-        st = l2l.init_opt_state(opt, params)
-    else:
-        step = jax.jit(baseline.make_train_step(model, opt, ec))
-        st = baseline.init_opt_state(opt, params)
+    eng = engines.create(engine, cfg, ExecutionConfig(n_microbatches=2),
+                         optimizer=opt, donate=False)
+    state = eng.init(jax.random.PRNGKey(seed))
     data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=64,
                                   global_batch=8, seed=seed))
     losses = []
     for i in range(steps):
         b = {k: jnp.asarray(v) for k, v in data.batch(i).items()}
-        params, st, m = step(params, st, b)
+        state, m = eng.train_step(state, b)
         losses.append(float(m["loss"]))
     return losses
 
 
 def test_l2l_training_converges():
-    losses = _train("l2l", steps=30)
+    losses = _train("l2l-p", steps=30)
     assert losses[-1] < losses[0] - 0.15, losses[::6]
     assert all(np.isfinite(losses))
 
 
 def test_l2l_and_baseline_learning_curves_match():
     """Fig 3/4's claim, in miniature: identical losses step-for-step."""
-    l1 = _train("l2l", steps=8)
+    l1 = _train("l2l-p", steps=8)
     l2 = _train("baseline", steps=8)
     np.testing.assert_allclose(l1, l2, rtol=2e-3)
 
 
-def test_serving_generates_tokens():
-    cfg = get_config("granite-3-8b", "smoke")
-    model = LayeredModel(cfg)
-    params = model.init_params(jax.random.PRNGKey(0))
+def test_serving_generates_tokens(make_engine):
+    eng = make_engine("l2l", "granite-3-8b", dtype=None,
+                      exec_cfg=ExecutionConfig())
+    cfg = eng.model.cfg
+    params = eng.model.init_params(jax.random.PRNGKey(0))
     toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
                               cfg.vocab_size)
-    caches, logits = dec.prefill(model, params, toks, live_seq=24)
-    serve = jax.jit(dec.make_serve_step(model, ExecutionConfig()))
+    caches, logits = eng.decode_init(params, toks, live_seq=24)
     tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
     outs = []
     for i in range(6):
-        logits, caches = serve(params, caches, tok, jnp.int32(8 + i))
+        logits, caches = eng.decode_step(params, caches, tok,
+                                         jnp.int32(8 + i))
         tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
         outs.append(tok)
     toks_out = jnp.concatenate(outs, 1)
@@ -83,22 +77,18 @@ def test_serve_driver_cli():
     assert toks.shape == (2, 4)
 
 
-def test_host_optimizer_matches_device_optimizer():
+def test_host_optimizer_matches_device_optimizer(make_engine):
     """The EPS-host optimizer (compute_on 'device_host' — the paper's CPU
     optimizer) produces identical updates."""
     cfg = get_config("bert-large", "smoke").replace(dtype="float32")
-    model = LayeredModel(cfg)
-    params = model.init_params(jax.random.PRNGKey(0))
     batch = make_batch(cfg, 4, 16)
-    opt = adam(lr=1e-3)
     outs = {}
     for host in (False, True):
-        step = jax.jit(l2l.make_train_step(
-            model, opt, ExecutionConfig(n_microbatches=2,
-                                        host_optimizer=host)))
-        st = l2l.init_opt_state(opt, params)
-        p, _, m = step(params, st, batch)
-        outs[host] = (p, float(m["loss"]))
+        eng = make_engine("l2l-p", optimizer=adam(lr=1e-3),
+                          exec_cfg=ExecutionConfig(n_microbatches=2,
+                                                   host_optimizer=host))
+        state, m = eng.train_step(eng.init(jax.random.PRNGKey(0)), batch)
+        outs[host] = (state.params, float(m["loss"]))
     err = max(jax.tree.leaves(jax.tree.map(
         lambda a, b: float(jnp.max(jnp.abs(a - b))),
         outs[False][0], outs[True][0])))
@@ -106,17 +96,16 @@ def test_host_optimizer_matches_device_optimizer():
     assert outs[False][1] == outs[True][1]
 
 
-def test_weight_stream_flag_is_noop_on_cpu():
+def test_weight_stream_flag_is_noop_on_cpu(make_engine):
     """weight_stream placements degrade gracefully off-TPU but the step
     still runs and matches the non-streamed result."""
     cfg = get_config("bert-large", "smoke").replace(dtype="float32")
-    model = LayeredModel(cfg)
-    params = model.init_params(jax.random.PRNGKey(0))
     batch = make_batch(cfg, 4, 16)
-    _, g1 = jax.jit(l2l.make_grads_fn(
-        model, ExecutionConfig(n_microbatches=2)))(params, batch)
-    _, g2 = jax.jit(l2l.make_grads_fn(
-        model, ExecutionConfig(n_microbatches=2, weight_stream=True,
-                               offload_stash=True)))(params, batch)
+    e1 = make_engine("l2l", exec_cfg=ExecutionConfig(n_microbatches=2))
+    e2 = make_engine("l2l", exec_cfg=ExecutionConfig(
+        n_microbatches=2, weight_stream=True, offload_stash=True))
+    params = e1.model.init_params(jax.random.PRNGKey(0))
+    _, g1 = e1.grads(params, batch)
+    _, g2 = e2.grads(params, batch)
     errs = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))), g1, g2)
     assert max(jax.tree.leaves(errs)) < 1e-5
