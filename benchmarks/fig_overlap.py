@@ -1,0 +1,158 @@
+"""Relay-overlap A/B: double-buffered EPS prefetch on/off x weight
+streaming on/off.
+
+The paper's throughput argument is that the host<->device relay cost is
+HIDDEN: "the model is executed a layer at a time across many micro-
+batches" with device memory holding "the executing layer(s)'s footprint"
+(plural — a compute slot and a transfer slot).  This benchmark times the
+L2L-p train step over the four {prefetch_depth, weight_stream} combos and
+writes ``BENCH_relay.json`` at the repo root so the perf trajectory has
+data points.
+
+What each axis means by backend:
+
+* CPU (this container): ``weight_stream`` placements are logical no-ops
+  (see ``repro.core.eps.memories_supported``), so the A/B isolates the
+  pure *schedule restructuring* cost — prefetch-on must show NO
+  regression (the carry grows by one layer slot; the math is
+  bit-identical, tests/test_prefetch.py).
+* TPU: the same program text lowers the prefetch slot to host-offload
+  annotate custom calls issued one layer AHEAD of their consumer scan
+  iteration — the overlap the paper's 40%-over-Megatron claim rests on.
+
+Usage::
+
+    PYTHONPATH=src python benchmarks/fig_overlap.py --tiny
+    PYTHONPATH=src python -m benchmarks.fig_overlap --steps 10
+"""
+import argparse
+import json
+import os
+import sys
+import time
+
+if __package__ in (None, ""):                       # `python benchmarks/...`
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+
+import jax
+
+from benchmarks.common import lm_batch
+from repro import engine as engines
+from repro.configs.base import get_config
+from repro.core.eps import memories_supported
+from repro.core.schedule import ExecutionConfig
+from repro.optim import adam
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_OUT = os.path.join(REPO_ROOT, "BENCH_relay.json")
+
+COMBOS = [  # (prefetch_depth, weight_stream)
+    (0, False), (1, False), (0, True), (1, True)]
+
+
+def time_combo(cfg, batch, *, ub, prefetch, weight_stream, iters,
+               rounds=3):
+    eng = engines.create(
+        "l2l-p", cfg,
+        ExecutionConfig(n_microbatches=ub, weight_stream=weight_stream,
+                        offload_stash=weight_stream,
+                        prefetch_depth=prefetch),
+        optimizer=adam(lr=1e-4), donate=False)
+    state = eng.init(jax.random.PRNGKey(0))
+    t0 = time.perf_counter()
+    state, m = eng.train_step(state, batch)          # compile + step 0
+    jax.block_until_ready(m["loss"])
+    compile_s = time.perf_counter() - t0
+    # best-of-N rounds: a background spike on a shared runner slows one
+    # round, not the minimum
+    best = float("inf")
+    for _ in range(rounds):
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            state, m = eng.train_step(state, batch)
+        jax.block_until_ready(m["loss"])
+        best = min(best, (time.perf_counter() - t0) / iters)
+    return {"prefetch_depth": prefetch, "weight_stream": weight_stream,
+            "s_per_step": best,
+            "steps_per_s": 1.0 / max(best, 1e-12),
+            "compile_s": round(compile_s, 3),
+            "loss": float(m["loss"])}
+
+
+# a real scheduling regression (e.g. accidentally doubled compute) tanks
+# the ratio far below this; CPU timer noise at smoke scale does not
+REGRESSION_FLOOR = 0.75
+
+
+def run(quick=False, *, arch="bert-large", steps=None, batch=None,
+        seq=None, ub=None, out_path=DEFAULT_OUT):
+    iters = steps or (5 if quick else 8)
+    B = batch or (8 if quick else 16)
+    S = seq or (64 if quick else 128)
+    UB = ub or (4 if quick else 8)
+    cfg = get_config(arch, "smoke")
+    data = lm_batch(cfg, B, S)
+
+    results = [time_combo(cfg, data, ub=UB, prefetch=pf, weight_stream=ws,
+                          iters=iters) for pf, ws in COMBOS]
+
+    def rate(pf, ws):
+        return next(r["steps_per_s"] for r in results
+                    if r["prefetch_depth"] == pf and r["weight_stream"] == ws)
+
+    speedup = {"weight_stream_off": rate(1, False) / rate(0, False),
+               "weight_stream_on": rate(1, True) / rate(0, True)}
+    record = {
+        "benchmark": "fig_overlap_relay",
+        "backend": jax.default_backend(),
+        "memories_supported": memories_supported(),
+        "arch": arch, "variant": "smoke",
+        "batch": B, "seq": S, "n_microbatches": UB, "timed_steps": iters,
+        "results": results,
+        "speedup_prefetch_on_vs_off": speedup,
+    }
+    with open(out_path, "w") as f:
+        json.dump(record, f, indent=1)
+
+    print("\n# Relay overlap A/B (l2l-p train step)")
+    print("prefetch,weight_stream,s_per_step,steps_per_s,compile_s")
+    for r in results:
+        print(f"{r['prefetch_depth']},{int(r['weight_stream'])},"
+              f"{r['s_per_step']:.4f},{r['steps_per_s']:.2f},"
+              f"{r['compile_s']}")
+    for k, v in speedup.items():
+        tag = "ok" if v >= REGRESSION_FLOOR else "REGRESSION"
+        print(f"# prefetch-on/off steps/s ratio ({k}): {v:.3f} [{tag}]")
+    if not memories_supported():
+        print("# NOTE: backend drops memory-space transfers — this A/B "
+              "isolates schedule-restructuring cost; DMA overlap needs TPU")
+    print(f"# wrote {out_path}")
+    bad = {k: v for k, v in speedup.items() if v < REGRESSION_FLOOR}
+    if bad:
+        # RuntimeError (not SystemExit) so benchmarks/run.py's
+        # collect-and-continue harness records the failure and keeps going
+        raise RuntimeError(
+            f"prefetch-on regressed beyond noise floor {REGRESSION_FLOOR}: "
+            f"{bad}")
+    return record
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="smoke shapes + 5 timed steps x3 rounds (CI)")
+    ap.add_argument("--arch", default="bert-large")
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--batch", type=int, default=None)
+    ap.add_argument("--seq", type=int, default=None)
+    ap.add_argument("--ub", type=int, default=None)
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args(argv)
+    return run(quick=args.tiny, arch=args.arch, steps=args.steps,
+               batch=args.batch, seq=args.seq, ub=args.ub,
+               out_path=args.out)
+
+
+if __name__ == "__main__":
+    main()

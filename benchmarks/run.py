@@ -17,8 +17,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (cost_model, fig5_time_vs_batch, fig6_breakdown,
-                            roofline, table2_memory, table3_convergence,
-                            table45_memory_batch)
+                            fig_overlap, roofline, table2_memory,
+                            table3_convergence, table45_memory_batch)
     benches = [
         ("cost_model_eq5_7", cost_model.run),
         ("table2_memory_vs_depth", table2_memory.run),
@@ -26,6 +26,7 @@ def main() -> None:
         ("table3_fig3_4_convergence", table3_convergence.run),
         ("fig5_time_vs_batch", fig5_time_vs_batch.run),
         ("fig6_breakdown", fig6_breakdown.run),
+        ("fig_overlap_relay", fig_overlap.run),
         ("roofline_from_dryrun", roofline.run),
     ]
     failures = []

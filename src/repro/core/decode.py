@@ -32,6 +32,7 @@ def make_serve_step(model, exec_cfg: ExecutionConfig,
     """
     if placements is None:
         placements = make_placements(exec_cfg, len(model.groups))
+    PF = exec_cfg.prefetch_depth
 
     dgroups = model.decode_groups()
     # map decode-group index -> model group index (for placements)
@@ -45,15 +46,34 @@ def make_serve_step(model, exec_cfg: ExecutionConfig,
         for di, group in enumerate(dgroups):
             wp = placements.weights[gidx[di]]
 
-            def body(x_c, wc, _g=group, _wp=wp):
-                w, cache_l = wc
-                w = _wp.dev(w)
-                x2, cache2 = _g.decode(w, x_c, cache_l, None, ctx)
-                return x2, cache2
+            if PF:
+                # double-buffered serving relay: layer l+1's weights stream
+                # from the EPS while layer l attends against its cache
+                relay, _ = placements.relay(gidx[di],
+                                            params["groups"][gidx[di]])
 
-            x, nc = jax.lax.scan(body, x,
-                                 (params["groups"][gidx[di]], caches[di]),
-                                 unroll=exec_cfg.unroll_layers)
+                def body_pf(carry, xs, _g=group, _r=relay):
+                    x_c, w_cur = carry
+                    i, cache_l = xs
+                    w_nxt = _r.prefetch(i)
+                    x2, cache2 = _g.decode(w_cur, x_c, cache_l, None, ctx)
+                    return (x2, w_nxt), cache2
+
+                (x, _), nc = jax.lax.scan(
+                    body_pf, (x, relay.warmup()),
+                    (jnp.arange(relay.n), caches[di]),
+                    unroll=exec_cfg.unroll_layers)
+            else:
+                def body(x_c, wc, _g=group, _wp=wp):
+                    w, cache_l = wc
+                    w = _wp.dev(w)
+                    x2, cache2 = _g.decode(w, x_c, cache_l, None, ctx)
+                    return x2, cache2
+
+                x, nc = jax.lax.scan(body, x,
+                                     (params["groups"][gidx[di]],
+                                      caches[di]),
+                                     unroll=exec_cfg.unroll_layers)
             new_caches.append(nc)
         logits = model.decode_logits(static, x)
         return logits, tuple(new_caches)

@@ -20,6 +20,15 @@ gradient all-reduce is issued layer-by-layer too ("parallel reduce").
 
 Gradient identity: this computes exactly the gradients of
 baseline-with-accumulated-gradients (Algorithm 2) — asserted by tests.
+
+Relay pipelining (``ExecutionConfig.prefetch_depth``): with depth 1 every
+layer scan here is double-buffered — the scan carry holds a prefetched HBM
+slot for the NEXT layer's weights (and optimizer slice in L2L-p) whose
+host->device copy was issued before the current layer's microbatch loop,
+so the EPS DMA overlaps compute instead of serializing with it (paper
+§3.1's "the executing layer(s)", plural).  Depth 0 keeps the historical
+fetch-inside-the-iteration schedule.  Both depths compute bit-identical
+results (asserted by tests/test_prefetch.py).
 """
 from __future__ import annotations
 
@@ -29,7 +38,8 @@ from typing import Any, Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.eps import EPSPlacements, make_placements, noop_placement
+from repro.core.eps import (EPSPlacements, Relay, make_placements,
+                            noop_placement)
 from repro.core.schedule import ExecutionConfig
 from repro.optim import Optimizer, clip_by_norm, tree_global_norm
 
@@ -61,6 +71,7 @@ def make_train_step(model, optimizer: Optimizer, exec_cfg: ExecutionConfig,
     if placements is None:
         placements = make_placements(exec_cfg, len(model.groups))
     UB = exec_cfg.n_microbatches
+    PF = exec_cfg.prefetch_depth
 
     def run_opt(grads, opt_l, w, step_i):
         """Apply the optimizer — on the EPS host when host_optimizer (the
@@ -112,8 +123,8 @@ def make_train_step(model, optimizer: Optimizer, exec_cfg: ExecutionConfig,
             ctx = model.train_ctx(ub_slice, group)
             wp = placements.weights[gi]
 
-            def fwd_layer(x_c, w, _g=group, _ctx=ctx, _mem=mem_ub, _wp=wp):
-                w = _wp.dev(w)
+            def fwd_compute(x_c, w, _g=group, _ctx=ctx, _mem=mem_ub):
+                """Microbatch loop of one layer (w already in HBM)."""
                 def ub_body(aux_c, args):
                     if _mem is None:
                         x_i = args
@@ -123,12 +134,31 @@ def make_train_step(model, optimizer: Optimizer, exec_cfg: ExecutionConfig,
                         y, aux = _g.apply(w, x_i, m_i, _ctx)
                     return aux_c + aux.astype(jnp.float32), y
                 xs = x_c if _mem is None else (x_c, _mem)
-                aux_g, y_ub = jax.lax.scan(ub_body, jnp.float32(0.0), xs)
-                return y_ub, (placements.stash.host(x_c), aux_g)
+                return jax.lax.scan(ub_body, jnp.float32(0.0), xs)
 
-            x_ub, (stash_g, aux_per_layer) = jax.lax.scan(
-                fwd_layer, x_ub, params["groups"][gi],
-                unroll=exec_cfg.unroll_layers)
+            if PF:
+                # double buffer: layer l+1's host->HBM DMA is issued at the
+                # top of iteration l (no data dependence on x_c, so it
+                # overlaps the microbatch loop); the slot arrives via carry
+                relay, _ = placements.relay(gi, params["groups"][gi])
+
+                def fwd_layer_pf(carry, i, _fc=fwd_compute, _r=relay):
+                    x_c, w_cur = carry
+                    w_nxt = _r.prefetch(i)
+                    aux_g, y_ub = _fc(x_c, w_cur)
+                    return (y_ub, w_nxt), (placements.stash.host(x_c), aux_g)
+
+                (x_ub, _), (stash_g, aux_per_layer) = jax.lax.scan(
+                    fwd_layer_pf, (x_ub, relay.warmup()),
+                    jnp.arange(relay.n), unroll=exec_cfg.unroll_layers)
+            else:
+                def fwd_layer(x_c, w, _fc=fwd_compute, _wp=wp):
+                    aux_g, y_ub = _fc(x_c, _wp.dev(w))
+                    return y_ub, (placements.stash.host(x_c), aux_g)
+
+                x_ub, (stash_g, aux_per_layer) = jax.lax.scan(
+                    fwd_layer, x_ub, params["groups"][gi],
+                    unroll=exec_cfg.unroll_layers)
             stashes.append(stash_g)
             aux_total = aux_total + aux_per_layer.sum() / UB
 
@@ -173,11 +203,11 @@ def make_train_step(model, optimizer: Optimizer, exec_cfg: ExecutionConfig,
                 lambda a: jnp.zeros(a.shape, a.dtype), mem_ub)
                 if has_mem else None)
 
-            def bwd_layer(carry, xs, _g=group, _ctx=ctx, _mem=mem_ub,
-                          _wp=wp, _op=op, _has_mem=has_mem):
-                dx_c, dmem_c, gn_c, nf_c = carry
-                w, stash_l, opt_l = xs
-                w_dev = _wp.dev(w)
+            def bwd_compute(core, w_dev, stash_l, opt_l, _g=group, _ctx=ctx,
+                            _mem=mem_ub, _wp=wp, _op=op, _has_mem=has_mem):
+                """Recompute-vjp microbatch loop (+ eager opt) of one layer;
+                ``w_dev``/``opt_l`` are already the HBM-resident slices."""
+                dx_c, dmem_c, gn_c, nf_c = core
                 stash_dev = placements.stash.dev(stash_l)
 
                 def ub_body(dw_acc, args):
@@ -235,10 +265,44 @@ def make_train_step(model, optimizer: Optimizer, exec_cfg: ExecutionConfig,
                 nf_c = nf_c + jnp.where(finite_l, 0, 1)
                 return (dxin_ub, dmem_c, gn_c, nf_c), out
 
-            (dx_ub, dmem_ub, gnorm_sq, nonfinite), outs = jax.lax.scan(
-                bwd_layer, (dx_ub, dmem_ub, gnorm_sq, nonfinite),
-                (params["groups"][gi], stashes[gi], opt_state["groups"][gi]),
-                reverse=True, unroll=exec_cfg.unroll_layers)
+            core0 = (dx_ub, dmem_ub, gnorm_sq, nonfinite)
+            if PF:
+                # reverse relay: iteration l's carry already holds layer
+                # l's slot; issue layer l-1's DMA before the vjp loop.  For
+                # L2L-p the optimizer slice rides the same double buffer,
+                # and the updated-weight write-back (``out``, a stacked
+                # device->pinned_host ys) is consumed only after the scan —
+                # it overlaps the backward of layer l-1.
+                w_relay, o_relay = placements.relay(
+                    gi, params["groups"][gi], reverse=True,
+                    opt_stacked=(opt_state["groups"][gi]
+                                 if exec_cfg.eager_optimizer else None))
+
+                def bwd_layer_pf(carry, xs, _bc=bwd_compute, _wr=w_relay,
+                                 _or=o_relay):
+                    core, w_cur, opt_cur = carry
+                    i, stash_l = xs
+                    w_nxt = _wr.prefetch(i)
+                    opt_nxt = _or.prefetch(i) if _or is not None else None
+                    core, out = _bc(core, w_cur, stash_l, opt_cur)
+                    return (core, w_nxt, opt_nxt), out
+
+                opt0 = o_relay.warmup() if o_relay is not None else None
+                (core0, _, _), outs = jax.lax.scan(
+                    bwd_layer_pf, (core0, w_relay.warmup(), opt0),
+                    (jnp.arange(w_relay.n), stashes[gi]),
+                    reverse=True, unroll=exec_cfg.unroll_layers)
+            else:
+                def bwd_layer(carry, xs, _bc=bwd_compute, _wp=wp):
+                    w, stash_l, opt_l = xs
+                    return _bc(carry, _wp.dev(w), stash_l, opt_l)
+
+                core0, outs = jax.lax.scan(
+                    bwd_layer, core0,
+                    (params["groups"][gi], stashes[gi],
+                     opt_state["groups"][gi]),
+                    reverse=True, unroll=exec_cfg.unroll_layers)
+            dx_ub, dmem_ub, gnorm_sq, nonfinite = core0
             if exec_cfg.eager_optimizer:
                 new_group_params[gi], new_group_opt[gi] = outs
             else:
@@ -318,16 +382,38 @@ def make_train_step(model, optimizer: Optimizer, exec_cfg: ExecutionConfig,
             # Alg 3: separate trailing loop over layers (still layer-major)
             for gi, group in enumerate(model.groups):
                 wp, op = placements.weights[gi], placements.opts[gi]
-                def upd_layer(_, xs, _wp=wp, _op=op):
-                    w, g, o = xs
-                    nw, no = run_opt(_wp.dev(g), _op.dev(o), _wp.dev(w),
-                                     opt_step)
-                    return None, (_wp.host(nw), _op.host(no))
-                _, (nw_g, no_g) = jax.lax.scan(
-                    upd_layer, None,
-                    (params["groups"][gi], group_grads[gi],
-                     opt_state["groups"][gi]),
-                    unroll=exec_cfg.unroll_layers)
+                if PF:
+                    # triple relay: weight, gradient (shipped to the EPS by
+                    # the backward, same placement as weights) and opt
+                    # slices of layer l+1 stream in while l updates
+                    w_r, o_r = placements.relay(
+                        gi, params["groups"][gi],
+                        opt_stacked=opt_state["groups"][gi])
+                    g_r = Relay(wp, group_grads[gi])
+
+                    def upd_layer_pf(carry, i, _wp=wp, _op=op, _wr=w_r,
+                                     _gr=g_r, _or=o_r):
+                        w_cur, g_cur, o_cur = carry
+                        nxt = (_wr.prefetch(i), _gr.prefetch(i),
+                               _or.prefetch(i))
+                        nw, no = run_opt(g_cur, o_cur, w_cur, opt_step)
+                        return nxt, (_wp.host(nw), _op.host(no))
+
+                    _, (nw_g, no_g) = jax.lax.scan(
+                        upd_layer_pf,
+                        (w_r.warmup(), g_r.warmup(), o_r.warmup()),
+                        jnp.arange(w_r.n), unroll=exec_cfg.unroll_layers)
+                else:
+                    def upd_layer(_, xs, _wp=wp, _op=op):
+                        w, g, o = xs
+                        nw, no = run_opt(_wp.dev(g), _op.dev(o), _wp.dev(w),
+                                         opt_step)
+                        return None, (_wp.host(nw), _op.host(no))
+                    _, (nw_g, no_g) = jax.lax.scan(
+                        upd_layer, None,
+                        (params["groups"][gi], group_grads[gi],
+                         opt_state["groups"][gi]),
+                        unroll=exec_cfg.unroll_layers)
                 new_group_params[gi] = nw_g
                 new_group_opt[gi] = no_g
 
@@ -369,6 +455,7 @@ def make_prefill_fn(model, exec_cfg: ExecutionConfig,
     if placements is None:
         placements = make_placements(exec_cfg, len(model.groups))
     UB = exec_cfg.n_microbatches
+    PF = exec_cfg.prefetch_depth
 
     def prefill(params, batch):
         static = {"embed": params["embed"], "head": params["head"]}
@@ -395,8 +482,7 @@ def make_prefill_fn(model, exec_cfg: ExecutionConfig,
             ctx = model.train_ctx(ub_slice, group)
             wp = placements.weights[gi]
 
-            def fwd_layer(x_c, w, _g=group, _ctx=ctx, _mem=mem_ub, _wp=wp):
-                w = _wp.dev(w)
+            def fwd_compute(x_c, w, _g=group, _ctx=ctx, _mem=mem_ub):
                 def ub_body(_, args):
                     if _mem is None:
                         y, _aux = _g.apply(w, args, None, _ctx)
@@ -406,10 +492,26 @@ def make_prefill_fn(model, exec_cfg: ExecutionConfig,
                     return None, y
                 xs = x_c if _mem is None else (x_c, _mem)
                 _, y_ub = jax.lax.scan(ub_body, None, xs)
-                return y_ub, None
+                return y_ub
 
-            x_ub, _ = jax.lax.scan(fwd_layer, x_ub, params["groups"][gi],
-                                   unroll=exec_cfg.unroll_layers)
+            if PF:
+                relay, _ = placements.relay(gi, params["groups"][gi])
+
+                def fwd_layer_pf(carry, i, _fc=fwd_compute, _r=relay):
+                    x_c, w_cur = carry
+                    w_nxt = _r.prefetch(i)
+                    return (_fc(x_c, w_cur), w_nxt), None
+
+                (x_ub, _), _ = jax.lax.scan(
+                    fwd_layer_pf, (x_ub, relay.warmup()),
+                    jnp.arange(relay.n), unroll=exec_cfg.unroll_layers)
+            else:
+                def fwd_layer(x_c, w, _fc=fwd_compute, _wp=wp):
+                    return _fc(x_c, _wp.dev(w)), None
+
+                x_ub, _ = jax.lax.scan(fwd_layer, x_ub,
+                                       params["groups"][gi],
+                                       unroll=exec_cfg.unroll_layers)
 
         # last-position logits per microbatch
         def head_one(x_i):
@@ -432,6 +534,7 @@ def make_grads_fn(model, exec_cfg: ExecutionConfig,
         n_microbatches=exec_cfg.n_microbatches,
         offload_stash=exec_cfg.offload_stash,
         weight_stream=exec_cfg.weight_stream,
+        prefetch_depth=exec_cfg.prefetch_depth,
         eager_optimizer=False, clip_mode="none")
     return _make_loss_and_grads(model, cfg_noeager, placements)
 

@@ -53,8 +53,8 @@ def _layer_bytes(model: LayeredModel, dtype_bytes: int):
 def estimate(model: LayeredModel, *, batch: int, seq: int,
              n_microbatches: int = 1, mode: str = "l2l",
              offload_stash: bool = False, opt_slots: int = 2,
-             act_dtype_bytes: int = 2, param_dtype_bytes: int = 4
-             ) -> MemoryReport:
+             act_dtype_bytes: int = 2, param_dtype_bytes: int = 4,
+             prefetch_depth: int = 0) -> MemoryReport:
     """Modes:
       baseline      eq. (1): everything device-resident
       baseline_remat eq. (1) with the N*L*mb*X term reduced to boundaries
@@ -62,6 +62,12 @@ def estimate(model: LayeredModel, *, batch: int, seq: int,
                     stash of N*mb*A boundaries on device
       l2l_p         eq. (3)/(4): + weight/grad transit buffers; stash to
                     host when offload_stash (the constant-memory variant)
+
+    ``prefetch_depth`` (l2l modes only) makes the paper's "the executing
+    layer(s)'s footprint" plural explicit: the double-buffered relay keeps
+    a second full layer slot set in HBM (compute slot + in-flight DMA
+    slot), so the device weight-transit footprint is (1+depth)x eq. (2)/(3)
+    — still O(1) in depth N.
     """
     cfg = model.cfg
     d = cfg.d_model
@@ -86,6 +92,7 @@ def estimate(model: LayeredModel, *, batch: int, seq: int,
             stash=stash, stash_on_host=False).finalize()
 
     transit = 2 if mode == "l2l" else 4            # eq.(2) vs eq.(3)
+    transit *= 1 + prefetch_depth                  # double-buffered relay
     return MemoryReport(
         params_device=transit * L_max,
         params_host=L_total,

@@ -25,6 +25,15 @@ class ExecutionConfig:
     # --- L2L memory policies -------------------------------------------
     offload_stash: bool = False     # eq.(4): stash -> pinned_host
     weight_stream: bool = False     # EPS: params/opt live in pinned_host
+    # --- relay pipelining -------------------------------------------------
+    # 0 = fetch layer l's weights at the top of its own scan iteration
+    #     (the copy is serialized with the layer's compute);
+    # 1 = double buffer: the scan carry holds a prefetched HBM slot for
+    #     layer l+1 (l-1 in the reverse scan) whose host->device DMA was
+    #     issued BEFORE layer l's microbatch loop ran, so the transfer
+    #     overlaps compute and the device holds "the executing layer(s)"
+    #     (paper §3.1, plural): one compute slot + one transfer slot.
+    prefetch_depth: int = 0
     # --- L2L-p ----------------------------------------------------------
     eager_optimizer: bool = True    # Alg 4 (False = Alg 3)
     host_optimizer: bool = False    # run the optimizer on the EPS host
@@ -54,3 +63,5 @@ class ExecutionConfig:
     def __post_init__(self):
         assert self.n_microbatches >= 1
         assert self.clip_mode in ("none", "per_layer")
+        assert self.prefetch_depth in (0, 1), \
+            "prefetch_depth: 0 (no pipelining) or 1 (double buffer)"

@@ -201,6 +201,7 @@ class Engine:
         this engine's schedule at the given shape."""
         kw.setdefault("n_microbatches", self.exec_cfg.n_microbatches)
         kw.setdefault("offload_stash", self.exec_cfg.offload_stash)
+        kw.setdefault("prefetch_depth", self.exec_cfg.prefetch_depth)
         return estimate(self.model, batch=batch, seq=seq,
                         mode=self.memory_mode, **kw)
 

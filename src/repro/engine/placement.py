@@ -23,6 +23,11 @@ def placements_for(model, exec_cfg, mesh=None, rules=None,
     With a mesh, per-layer-slice pspecs are derived from the model's param
     specs and the sharding ``rules`` (defaulting to the production train
     rules for the config).
+
+    The same per-slice placements serve both relay depths: with
+    ``exec_cfg.prefetch_depth == 1`` the L2L scans build a two-slot
+    ``eps.Relay`` view over them (compute slot + in-flight DMA slot), so
+    nothing here grows — only how often a slice is in HBM at once.
     """
     if mesh is None:
         return make_placements(exec_cfg, len(model.groups))

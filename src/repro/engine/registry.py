@@ -13,7 +13,8 @@ same decorator without touching any caller::
 """
 from __future__ import annotations
 
-from typing import Callable, Dict
+import dataclasses
+from typing import Callable, Dict, Optional
 
 _REGISTRY: Dict[str, Callable] = {}
 
@@ -40,12 +41,20 @@ def get(name: str) -> Callable:
             f"{', '.join(available()) or '(none registered)'}") from None
 
 
-def create(name: str, model, exec_cfg=None, **kwargs):
+def create(name: str, model, exec_cfg=None, *,
+           exec_overrides: Optional[dict] = None, **kwargs):
     """Build a registered Engine.
 
     ``model`` is a ModelConfig (a LayeredModel is built internally) or an
-    already-built LayeredModel.  Keyword args are forwarded to the engine
-    constructor (``optimizer=``, ``mesh=``, ``rules=``, ``placements=``,
-    ``donate=``).
+    already-built LayeredModel.  ``exec_overrides`` patches fields onto
+    ``exec_cfg`` (or the default config) without the caller rebuilding a
+    frozen ExecutionConfig — e.g. ``exec_overrides={"prefetch_depth": 1}``
+    for the double-buffered relay.  Remaining keyword args are forwarded
+    to the engine constructor (``optimizer=``, ``mesh=``, ``rules=``,
+    ``placements=``, ``donate=``).
     """
+    if exec_overrides:
+        from repro.core.schedule import ExecutionConfig
+        exec_cfg = dataclasses.replace(exec_cfg or ExecutionConfig(),
+                                       **exec_overrides)
     return get(name)(model, exec_cfg, **kwargs)

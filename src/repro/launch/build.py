@@ -119,6 +119,10 @@ def make_exec_cfg(shape: InputShape, cfg: ModelConfig, mesh,
         offload_stash=(shape.kind == "train"),
         weight_stream=True,
         eager_optimizer=True,
+        # production relays are double-buffered: layer l+1's EPS DMA is in
+        # flight while layer l computes (override {"prefetch_depth": 0}
+        # for the serialized A/B baseline)
+        prefetch_depth=1,
         decode_window=decode_window(cfg, shape),
     )
     if overrides:

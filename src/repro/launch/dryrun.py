@@ -263,11 +263,22 @@ def main():
                     help="apply the §Perf beyond-paper fixes (grouped GQA "
                          "decode + local MoE dispatch) on top of the "
                          "paper-faithful schedule")
+    ap.add_argument("--prefetch", type=int, default=None, choices=[0, 1],
+                    help="override ExecutionConfig.prefetch_depth (the "
+                         "build default is 1: double-buffered EPS relay); "
+                         "0 compiles the serialized fetch-in-iteration "
+                         "schedule for A/B HLO comparison")
     args = ap.parse_args()
     cfg_patch = ({"grouped_decode_attn": True, "moe_ep_constraint": True}
                  if args.optimized else None)
+    exec_overrides = ({"prefetch_depth": args.prefetch}
+                      if args.prefetch is not None else None)
     if args.optimized and args.tag == "baseline":
         args.tag = "optimized"
+    if args.prefetch == 0:
+        # compose with --optimized / custom tags so the A/B never
+        # overwrites the prefetch-on records under the same directory
+        args.tag += "-noprefetch"
 
     archs = list_archs() if args.arch == "all" else args.arch.split(",")
     archs = [a for a in archs if a != "bert-large"]
@@ -287,6 +298,7 @@ def main():
                 try:
                     rec = run_one(arch, shape_name, multi,
                                   variant=args.variant,
+                                  exec_overrides=exec_overrides,
                                   cfg_patch=cfg_patch)
                     if rec["status"] == "ok":
                         cfg = get_config(arch, args.variant)

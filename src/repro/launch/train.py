@@ -50,6 +50,9 @@ def main(argv=None):
                          "instead of the eager L2L-p schedule")
     ap.add_argument("--offload-stash", action="store_true")
     ap.add_argument("--weight-stream", action="store_true")
+    ap.add_argument("--prefetch", type=int, default=0, choices=[0, 1],
+                    help="1 = double-buffered EPS relay (layer l+1 "
+                         "streams in while l computes)")
     ap.add_argument("--host-optimizer", action="store_true",
                     help="run the optimizer on the EPS host "
                          "(compute_on 'device_host')")
@@ -91,6 +94,7 @@ def main(argv=None):
         n_microbatches=args.ub,
         offload_stash=args.offload_stash,
         weight_stream=args.weight_stream,
+        prefetch_depth=args.prefetch,
         host_optimizer=args.host_optimizer,
         clip_mode="per_layer" if args.clip > 0 else "none",
         clip_norm=args.clip)
