@@ -1,6 +1,6 @@
 PY ?= python
 
-.PHONY: verify test bench bench-relay quickstart
+.PHONY: verify test bench bench-relay bench-pack quickstart
 
 # tier-1 verification (quick: slow multi-device subprocess tests deselected)
 verify:
@@ -17,6 +17,12 @@ bench:
 # just the relay-overlap A/B; writes BENCH_relay.json at the repo root
 bench-relay:
 	PYTHONPATH=src $(PY) benchmarks/fig_overlap.py --tiny
+
+# packed-relay A/B (pack x weight_stream x prefetch); writes
+# BENCH_pack.json at the repo root and fails on a >10% packed-vs-unpacked
+# throughput regression
+bench-pack:
+	PYTHONPATH=src $(PY) benchmarks/fig_pack.py --tiny
 
 quickstart:
 	PYTHONPATH=src $(PY) examples/quickstart.py

@@ -20,6 +20,27 @@ def timeit(fn, *args, iters=3, warmup=1):
     return (time.perf_counter() - t0) / iters
 
 
+def time_train_step(eng, batch, *, iters, rounds=3):
+    """Compile + best-of-N-rounds steady-state timing of an engine's
+    train step (shared by the fig_overlap / fig_pack A/B harnesses).
+    Best-of-rounds: a background spike on a shared runner slows one
+    round, not the minimum.  Returns (best_s_per_step, compile_s,
+    final_loss)."""
+    state = eng.init(jax.random.PRNGKey(0))
+    t0 = time.perf_counter()
+    state, m = eng.train_step(state, batch)          # compile + step 0
+    jax.block_until_ready(m["loss"])
+    compile_s = time.perf_counter() - t0
+    best = float("inf")
+    for _ in range(rounds):
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            state, m = eng.train_step(state, batch)
+        jax.block_until_ready(m["loss"])
+        best = min(best, (time.perf_counter() - t0) / iters)
+    return best, compile_s, float(m["loss"])
+
+
 def bert_model(n_layers=24, d_model=1024, variant="full"):
     cfg = get_config("bert-large", variant).replace(
         n_layers=n_layers, d_model=d_model,

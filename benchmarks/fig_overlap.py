@@ -29,7 +29,6 @@ import argparse
 import json
 import os
 import sys
-import time
 
 if __package__ in (None, ""):                       # `python benchmarks/...`
     sys.path.insert(0, os.path.dirname(os.path.dirname(
@@ -37,7 +36,7 @@ if __package__ in (None, ""):                       # `python benchmarks/...`
 
 import jax
 
-from benchmarks.common import lm_batch
+from benchmarks.common import lm_batch, time_train_step
 from repro import engine as engines
 from repro.configs.base import get_config
 from repro.core.eps import memories_supported
@@ -59,25 +58,13 @@ def time_combo(cfg, batch, *, ub, prefetch, weight_stream, iters,
                         offload_stash=weight_stream,
                         prefetch_depth=prefetch),
         optimizer=adam(lr=1e-4), donate=False)
-    state = eng.init(jax.random.PRNGKey(0))
-    t0 = time.perf_counter()
-    state, m = eng.train_step(state, batch)          # compile + step 0
-    jax.block_until_ready(m["loss"])
-    compile_s = time.perf_counter() - t0
-    # best-of-N rounds: a background spike on a shared runner slows one
-    # round, not the minimum
-    best = float("inf")
-    for _ in range(rounds):
-        t0 = time.perf_counter()
-        for _ in range(iters):
-            state, m = eng.train_step(state, batch)
-        jax.block_until_ready(m["loss"])
-        best = min(best, (time.perf_counter() - t0) / iters)
+    best, compile_s, loss = time_train_step(eng, batch, iters=iters,
+                                            rounds=rounds)
     return {"prefetch_depth": prefetch, "weight_stream": weight_stream,
             "s_per_step": best,
             "steps_per_s": 1.0 / max(best, 1e-12),
             "compile_s": round(compile_s, 3),
-            "loss": float(m["loss"])}
+            "loss": loss}
 
 
 # a real scheduling regression (e.g. accidentally doubled compute) tanks

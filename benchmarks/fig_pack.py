@@ -1,0 +1,177 @@
+"""Packed-relay A/B: pack_params x weight_stream x prefetch_depth.
+
+BENCH_relay.json showed the PR-2 double-buffered prefetch pays off with
+``weight_stream=off`` but is a wash-to-regression with the real EPS path
+on (``weight_stream=on``): the per-leaf relay issues dozens of SMALL
+host<->HBM copies per layer, so the transfer side is latency-bound and a
+second in-flight slot mostly adds scheduling pressure.  ``pack_params``
+attacks exactly that — one large DMA per layer per direction + the fused
+flat-segment optimizer — so this benchmark times the l2l-p train step
+over all eight {pack, weight_stream, prefetch} combos and writes
+``BENCH_pack.json`` at the repo root.
+
+What each axis means by backend:
+
+* CPU (this container / CI): ``weight_stream`` placements are logical
+  no-ops (``eps.memories_supported``), so the A/B isolates the pure
+  schedule+layout restructuring cost — packed must not regress beyond
+  the gate below (the math is bit-identical, tests/test_packing.py).
+* TPU: the packed combos replace N-per-leaf host-offload copies with one
+  annotate-copy per dtype segment; the ``pack=1, prefetch=1,
+  weight_stream=on`` row is the configuration the latency-bound
+  BENCH_relay regression should turn into a win.
+
+Usage::
+
+    PYTHONPATH=src python benchmarks/fig_pack.py --tiny
+    PYTHONPATH=src python -m benchmarks.fig_pack --steps 10
+"""
+import argparse
+import itertools
+import json
+import os
+import sys
+
+if __package__ in (None, ""):                       # `python benchmarks/...`
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+
+import jax
+
+from benchmarks.common import lm_batch, time_train_step
+from repro import engine as engines
+from repro.configs.base import get_config
+from repro.core.eps import memories_supported
+from repro.core.schedule import ExecutionConfig
+from repro.optim import adam
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_OUT = os.path.join(REPO_ROOT, "BENCH_pack.json")
+
+# (pack_params, weight_stream, prefetch_depth)
+COMBOS = list(itertools.product((False, True), (False, True), (0, 1)))
+
+# CI gate: a >10% packed-vs-unpacked throughput regression fails the run.
+# (Packing is supposed to be free-to-winning; on CPU the placements are
+# no-ops so this bounds the pure pack/unpack/fused-optimizer overhead.)
+REGRESSION_FLOOR = 0.9
+
+
+def time_combo(cfg, batch, *, ub, pack, weight_stream, prefetch, iters,
+               rounds=5):
+    # rounds=5 (vs fig_overlap's 3): this benchmark backs a HARD 10% CI
+    # gate, so the best-of-rounds minimum gets more shots at a quiet
+    # window on shared runners
+    eng = engines.create(
+        "l2l-p", cfg,
+        ExecutionConfig(n_microbatches=ub, weight_stream=weight_stream,
+                        offload_stash=weight_stream,
+                        prefetch_depth=prefetch, pack_params=pack),
+        optimizer=adam(lr=1e-4), donate=False)
+    best, compile_s, loss = time_train_step(eng, batch, iters=iters,
+                                            rounds=rounds)
+    return {"pack_params": pack, "weight_stream": weight_stream,
+            "prefetch_depth": prefetch,
+            "s_per_step": best,
+            "steps_per_s": 1.0 / max(best, 1e-12),
+            "compile_s": round(compile_s, 3),
+            "loss": loss}
+
+
+def run(quick=False, *, arch="bert-large", steps=None, batch=None,
+        seq=None, ub=None, out_path=DEFAULT_OUT):
+    iters = steps or (5 if quick else 8)
+    B = batch or (8 if quick else 16)
+    S = seq or (64 if quick else 128)
+    UB = ub or (4 if quick else 8)
+    cfg = get_config(arch, "smoke")
+    data = lm_batch(cfg, B, S)
+
+    results = [time_combo(cfg, data, ub=UB, pack=pk, weight_stream=ws,
+                          prefetch=pf, iters=iters)
+               for pk, ws, pf in COMBOS]
+
+    def rate(pk, ws, pf):
+        return next(r["steps_per_s"] for r in results
+                    if r["pack_params"] == pk
+                    and r["weight_stream"] == ws
+                    and r["prefetch_depth"] == pf)
+
+    # packed vs unpacked at each (weight_stream, prefetch) point — the CI
+    # regression gate reads these
+    speedup_pack = {
+        f"ws_{int(ws)}_pf_{pf}": rate(True, ws, pf) / rate(False, ws, pf)
+        for ws, pf in itertools.product((False, True), (0, 1))}
+    # prefetch on/off WITHIN each layout — diagnoses the BENCH_relay.json
+    # `prefetch=1, weight_stream=on` wash: with per-leaf relays the
+    # prefetch has only latency-bound small copies to hide; packed gives
+    # it one large DMA per layer to overlap
+    speedup_prefetch = {
+        f"pack_{int(pk)}_ws_{int(ws)}": rate(pk, ws, 1) / rate(pk, ws, 0)
+        for pk, ws in itertools.product((False, True), (False, True))}
+    record = {
+        "benchmark": "fig_pack_relay",
+        "backend": jax.default_backend(),
+        "memories_supported": memories_supported(),
+        "arch": arch, "variant": "smoke",
+        "batch": B, "seq": S, "n_microbatches": UB, "timed_steps": iters,
+        "results": results,
+        "speedup_packed_vs_unpacked": speedup_pack,
+        "speedup_prefetch_on_vs_off": speedup_prefetch,
+        "diagnosis": (
+            "BENCH_relay.json's prefetch wash at weight_stream=on is the "
+            "per-leaf relay's DMA-issue latency: N small copies per layer "
+            "leave nothing bandwidth-shaped for the double buffer to "
+            "overlap. pack_params coalesces each layer to one copy per "
+            "dtype segment; compare speedup_prefetch_on_vs_off pack_1_* "
+            "vs pack_0_* (CPU bounds schedule overhead only; the DMA "
+            "effect itself is a TPU observable)."),
+    }
+    with open(out_path, "w") as f:
+        json.dump(record, f, indent=1)
+
+    print("\n# Packed relay A/B (l2l-p train step)")
+    print("pack,weight_stream,prefetch,s_per_step,steps_per_s,compile_s")
+    for r in results:
+        print(f"{int(r['pack_params'])},{int(r['weight_stream'])},"
+              f"{r['prefetch_depth']},{r['s_per_step']:.4f},"
+              f"{r['steps_per_s']:.2f},{r['compile_s']}")
+    for k, v in speedup_pack.items():
+        tag = "ok" if v >= REGRESSION_FLOOR else "REGRESSION"
+        print(f"# packed/unpacked steps/s ({k}): {v:.3f} [{tag}]")
+    for k, v in speedup_prefetch.items():
+        print(f"# prefetch-on/off steps/s ({k}): {v:.3f}")
+    if not memories_supported():
+        print("# NOTE: backend drops memory-space transfers — this A/B "
+              "bounds schedule/layout overhead; the one-DMA-per-layer "
+              "win needs TPU")
+    print(f"# wrote {out_path}")
+    bad = {k: round(v, 3) for k, v in speedup_pack.items()
+           if v < REGRESSION_FLOOR}
+    if bad:
+        # RuntimeError (not SystemExit) so benchmarks/run.py's
+        # collect-and-continue harness records the failure and keeps going
+        raise RuntimeError(
+            f"pack_params regressed beyond the 10% gate "
+            f"(floor {REGRESSION_FLOOR}): {bad}")
+    return record
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="smoke shapes + 5 timed steps x3 rounds (CI)")
+    ap.add_argument("--arch", default="bert-large")
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--batch", type=int, default=None)
+    ap.add_argument("--seq", type=int, default=None)
+    ap.add_argument("--ub", type=int, default=None)
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args(argv)
+    return run(quick=args.tiny, arch=args.arch, steps=args.steps,
+               batch=args.batch, seq=args.seq, ub=args.ub,
+               out_path=args.out)
+
+
+if __name__ == "__main__":
+    main()

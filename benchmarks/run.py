@@ -17,7 +17,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (cost_model, fig5_time_vs_batch, fig6_breakdown,
-                            fig_overlap, roofline, table2_memory,
+                            fig_overlap, fig_pack, roofline, table2_memory,
                             table3_convergence, table45_memory_batch)
     benches = [
         ("cost_model_eq5_7", cost_model.run),
@@ -27,6 +27,7 @@ def main() -> None:
         ("fig5_time_vs_batch", fig5_time_vs_batch.run),
         ("fig6_breakdown", fig6_breakdown.run),
         ("fig_overlap_relay", fig_overlap.run),
+        ("fig_pack_relay", fig_pack.run),
         ("roofline_from_dryrun", roofline.run),
     ]
     failures = []

@@ -7,6 +7,12 @@ dtypes, and restores into the exact structure (verifying shapes/dtypes).
 Device arrays are gathered to host before save; restore optionally
 device_puts onto provided shardings (so a multi-pod job can restore straight
 into its EPS placement).
+
+Layout stability: checkpoints are ALWAYS the unpacked per-leaf pytree.
+Engines running the packed relay (``ExecutionConfig.pack_params``) convert
+their flat buffers through ``repro.core.packing``'s PackSpec converters in
+``Engine.save``/``restore``, so a checkpoint written with packing on
+restores with packing off and vice versa (tests/test_packing.py).
 """
 from __future__ import annotations
 

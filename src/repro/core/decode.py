@@ -17,6 +17,7 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import packing
 from repro.core.eps import EPSPlacements, make_placements
 from repro.core.schedule import ExecutionConfig
 from repro.models.common import materialize, abstract
@@ -33,6 +34,7 @@ def make_serve_step(model, exec_cfg: ExecutionConfig,
     if placements is None:
         placements = make_placements(exec_cfg, len(model.groups))
     PF = exec_cfg.prefetch_depth
+    PK = exec_cfg.pack_params
 
     dgroups = model.decode_groups()
     # map decode-group index -> model group index (for placements)
@@ -56,7 +58,8 @@ def make_serve_step(model, exec_cfg: ExecutionConfig,
                     x_c, w_cur = carry
                     i, cache_l = xs
                     w_nxt = _r.prefetch(i)
-                    x2, cache2 = _g.decode(w_cur, x_c, cache_l, None, ctx)
+                    w = packing.unpack(w_cur) if PK else w_cur
+                    x2, cache2 = _g.decode(w, x_c, cache_l, None, ctx)
                     return (x2, w_nxt), cache2
 
                 (x, _), nc = jax.lax.scan(
@@ -67,6 +70,8 @@ def make_serve_step(model, exec_cfg: ExecutionConfig,
                 def body(x_c, wc, _g=group, _wp=wp):
                     w, cache_l = wc
                     w = _wp.dev(w)
+                    if PK:
+                        w = packing.unpack(w)
                     x2, cache2 = _g.decode(w, x_c, cache_l, None, ctx)
                     return x2, cache2
 
@@ -152,6 +157,9 @@ def prefill(model, params, tokens, live_seq: int,
 def encode_cross_kv(model, params, frames, caches):
     """Run the whisper encoder once and fill the decoder caches' xk/xv."""
     from repro.models.common import apply_norm
+    # this one-shot pass walks the param tree by name — view packed groups
+    # through their unpacked layout
+    params = packing.unpack_params(params)
     cfg = model.cfg
     static = {"embed": params["embed"], "head": params["head"]}
     batch = {"frames": frames}

@@ -109,6 +109,12 @@ def layer_slice(stacked, i):
 class Relay:
     """Async-aware two-slot relay over one group's stacked host tree.
 
+    The relayed "tree" is whatever the schedule streams: the per-leaf
+    pytree, or — with ``ExecutionConfig.pack_params`` — a
+    ``packing.Packed`` node whose leaves are the per-dtype flat segments,
+    so each ``prefetch`` issues ONE large host->HBM DMA per segment
+    instead of one per param leaf.
+
     The schedule is issue-early / consume-late: ``warmup()`` starts the
     DMA for the first layer before the scan, and inside iteration ``i``
     the body calls ``prefetch(i)`` — a ``jax.device_put`` into device HBM

@@ -29,6 +29,18 @@ so the EPS DMA overlaps compute instead of serializing with it (paper
 §3.1's "the executing layer(s)", plural).  Depth 0 keeps the historical
 fetch-inside-the-iteration schedule.  Both depths compute bit-identical
 results (asserted by tests/test_prefetch.py).
+
+Packed relay (``ExecutionConfig.pack_params``): the stacked group params
+(and, in L2L-p, the optimizer slots) arrive as ``packing.Packed`` flat
+buffers — one contiguous segment per dtype — so each relay above moves
+ONE large array per layer per direction instead of N per-leaf copies.
+The scans unpack a zero-copy device-side view for the layer apply, keep
+every gradient-side reduction (scale, clip, finiteness) on the original
+tree so the math is bit-identical to the unpacked schedule, and run the
+eager optimizer directly on the flat segments through
+``Optimizer.flat_update`` (the fused Pallas kernel) when available,
+falling back to unpack -> per-leaf update -> repack otherwise
+(tests/test_packing.py asserts bit-identity both ways).
 """
 from __future__ import annotations
 
@@ -38,6 +50,7 @@ from typing import Any, Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import packing
 from repro.core.eps import (EPSPlacements, Relay, make_placements,
                             noop_placement)
 from repro.core.schedule import ExecutionConfig
@@ -60,6 +73,42 @@ def _tree_zeros_f32(tree):
     return jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), tree)
 
 
+def _make_packed_update(optimizer: Optimizer, exec_cfg: ExecutionConfig,
+                        run_opt) -> Callable:
+    """Per-layer optimizer step on ``Packed`` flat buffers.
+
+    Fused path: when the optimizer exposes ``flat_update`` (adam/adamw ->
+    kernels/fused_adam_flat) and the slots are Adam-shaped, the update
+    runs ONCE per dtype segment — one kernel over the whole layer instead
+    of a per-leaf chain — reading the (possibly low-precision) weight
+    segment and the f32 master moments that stay EPS-resident.  Fallback
+    (lamb/sgd/collector, or host_optimizer which must run on the EPS
+    host): unpack -> per-leaf ``run_opt`` -> repack.  Both paths are
+    bit-identical to the unpacked schedule."""
+    def packed_update(dw, opt_l, w_pk, step_i):
+        spec = w_pk.spec
+        slots = tuple(sorted(opt_l))
+        if (optimizer.flat_update is not None and slots == ("m", "v")
+                and not exec_cfg.host_optimizer):
+            g_pk = dw if packing.is_packed(dw) \
+                else packing.pack(dw, spec=spec, stacked=False)
+            new_p, new_m, new_v = {}, {}, {}
+            for key in sorted(w_pk.segs):
+                p2, m2, v2 = optimizer.flat_update(
+                    w_pk.segs[key], g_pk.segs[key],
+                    opt_l["m"].segs[key], opt_l["v"].segs[key], step_i)
+                new_p[key], new_m[key], new_v[key] = p2, m2, v2
+            return (packing.Packed(new_p, spec),
+                    {"m": packing.Packed(new_m, spec),
+                     "v": packing.Packed(new_v, spec)})
+        dw_t = packing.unpack(dw) if packing.is_packed(dw) else dw
+        nw, no = run_opt(dw_t, packing.unpack_opt(spec, opt_l),
+                         packing.unpack(w_pk), step_i)
+        return (packing.pack(nw, spec=spec, stacked=False),
+                packing.pack_opt(spec, no, stacked=False))
+    return packed_update
+
+
 # ===========================================================================
 # Training step factory
 # ===========================================================================
@@ -72,6 +121,7 @@ def make_train_step(model, optimizer: Optimizer, exec_cfg: ExecutionConfig,
         placements = make_placements(exec_cfg, len(model.groups))
     UB = exec_cfg.n_microbatches
     PF = exec_cfg.prefetch_depth
+    PK = exec_cfg.pack_params
 
     def run_opt(grads, opt_l, w, step_i):
         """Apply the optimizer — on the EPS host when host_optimizer (the
@@ -81,6 +131,8 @@ def make_train_step(model, optimizer: Optimizer, exec_cfg: ExecutionConfig,
             with compute_on("device_host"):
                 return optimizer.update(grads, opt_l, w, step_i)
         return optimizer.update(grads, opt_l, w, step_i)
+
+    packed_update = _make_packed_update(optimizer, exec_cfg, run_opt)
 
     def step(params, opt_state, batch):
         cfg = model.cfg
@@ -125,6 +177,8 @@ def make_train_step(model, optimizer: Optimizer, exec_cfg: ExecutionConfig,
 
             def fwd_compute(x_c, w, _g=group, _ctx=ctx, _mem=mem_ub):
                 """Microbatch loop of one layer (w already in HBM)."""
+                if PK:
+                    w = packing.unpack(w)   # zero-copy views on the buffer
                 def ub_body(aux_c, args):
                     if _mem is None:
                         x_i = args
@@ -206,8 +260,12 @@ def make_train_step(model, optimizer: Optimizer, exec_cfg: ExecutionConfig,
             def bwd_compute(core, w_dev, stash_l, opt_l, _g=group, _ctx=ctx,
                             _mem=mem_ub, _wp=wp, _op=op, _has_mem=has_mem):
                 """Recompute-vjp microbatch loop (+ eager opt) of one layer;
-                ``w_dev``/``opt_l`` are already the HBM-resident slices."""
+                ``w_dev``/``opt_l`` are already the HBM-resident slices.
+                With pack_params the vjp differentiates the UNPACKED view
+                and every gradient-side reduction below stays on the tree,
+                so the packed schedule's math is bit-identical."""
                 dx_c, dmem_c, gn_c, nf_c = core
+                w_tree = packing.unpack(w_dev) if PK else w_dev
                 stash_dev = placements.stash.dev(stash_l)
 
                 def ub_body(dw_acc, args):
@@ -215,14 +273,14 @@ def make_train_step(model, optimizer: Optimizer, exec_cfg: ExecutionConfig,
                         x_in, dx_i, m_i = args
                         def f(ww, xx, mm):
                             return _g.apply(ww, xx, mm, _ctx)
-                        _, vjp = jax.vjp(f, w_dev, x_in, m_i)
+                        _, vjp = jax.vjp(f, w_tree, x_in, m_i)
                         dw_i, dxin_i, dmem_i = vjp(
                             (dx_i, S_loss / UB))
                     else:
                         x_in, dx_i = args
                         def f(ww, xx):
                             return _g.apply(ww, xx, None, _ctx)
-                        _, vjp = jax.vjp(f, w_dev, x_in)
+                        _, vjp = jax.vjp(f, w_tree, x_in)
                         dw_i, dxin_i = vjp((dx_i, S_loss / UB))
                         dmem_i = None
                     dw_acc = _tree_add(dw_acc, jax.tree.map(
@@ -233,7 +291,7 @@ def make_train_step(model, optimizer: Optimizer, exec_cfg: ExecutionConfig,
                 args = (stash_dev, dx_c, _mem) if _has_mem \
                     else (stash_dev, dx_c)
                 dw, ys = jax.lax.scan(
-                    ub_body, _tree_zeros_f32(w_dev), args)
+                    ub_body, _tree_zeros_f32(w_tree), args)
                 if _has_mem:
                     dxin_ub, dmem_ub_l = ys
                     dmem_c = _tree_add(dmem_c, dmem_ub_l)
@@ -247,7 +305,8 @@ def make_train_step(model, optimizer: Optimizer, exec_cfg: ExecutionConfig,
                 gn_c = gn_c + jnp.where(finite_l,
                                         tree_global_norm(dw) ** 2, 0.0)
                 if exec_cfg.eager_optimizer:
-                    new_w, new_opt = run_opt(dw, opt_l, w_dev, opt_step)
+                    new_w, new_opt = (packed_update if PK else run_opt)(
+                        dw, opt_l, w_dev, opt_step)
                     if amp:
                         # L2L-adapted AMP: a non-finite layer skips ITS
                         # update (eager updates can't await a global check)
@@ -260,8 +319,12 @@ def make_train_step(model, optimizer: Optimizer, exec_cfg: ExecutionConfig,
                     out = (_wp.host(new_w), _op.host(new_opt))
                 else:
                     # Alg 3: gradients are shipped to the EPS (host) and the
-                    # update happens in a trailing layer loop.
-                    out = _wp.host(dw)
+                    # update happens in a trailing layer loop — packed, the
+                    # shipment is one flat f32 segment aligned to the
+                    # weight layout instead of N leaf copies.
+                    out = _wp.host(packing.pack(dw, spec=w_dev.spec,
+                                                stacked=False)
+                                   if PK else dw)
                 nf_c = nf_c + jnp.where(finite_l, 0, 1)
                 return (dxin_ub, dmem_c, gn_c, nf_c), out
 
@@ -396,7 +459,8 @@ def make_train_step(model, optimizer: Optimizer, exec_cfg: ExecutionConfig,
                         w_cur, g_cur, o_cur = carry
                         nxt = (_wr.prefetch(i), _gr.prefetch(i),
                                _or.prefetch(i))
-                        nw, no = run_opt(g_cur, o_cur, w_cur, opt_step)
+                        nw, no = (packed_update if PK else run_opt)(
+                            g_cur, o_cur, w_cur, opt_step)
                         return nxt, (_wp.host(nw), _op.host(no))
 
                     _, (nw_g, no_g) = jax.lax.scan(
@@ -406,8 +470,8 @@ def make_train_step(model, optimizer: Optimizer, exec_cfg: ExecutionConfig,
                 else:
                     def upd_layer(_, xs, _wp=wp, _op=op):
                         w, g, o = xs
-                        nw, no = run_opt(_wp.dev(g), _op.dev(o), _wp.dev(w),
-                                         opt_step)
+                        nw, no = (packed_update if PK else run_opt)(
+                            _wp.dev(g), _op.dev(o), _wp.dev(w), opt_step)
                         return None, (_wp.host(nw), _op.host(no))
                     _, (nw_g, no_g) = jax.lax.scan(
                         upd_layer, None,
@@ -456,6 +520,7 @@ def make_prefill_fn(model, exec_cfg: ExecutionConfig,
         placements = make_placements(exec_cfg, len(model.groups))
     UB = exec_cfg.n_microbatches
     PF = exec_cfg.prefetch_depth
+    PK = exec_cfg.pack_params
 
     def prefill(params, batch):
         static = {"embed": params["embed"], "head": params["head"]}
@@ -483,6 +548,8 @@ def make_prefill_fn(model, exec_cfg: ExecutionConfig,
             wp = placements.weights[gi]
 
             def fwd_compute(x_c, w, _g=group, _ctx=ctx, _mem=mem_ub):
+                if PK:
+                    w = packing.unpack(w)
                 def ub_body(_, args):
                     if _mem is None:
                         y, _aux = _g.apply(w, args, None, _ctx)
@@ -535,6 +602,7 @@ def make_grads_fn(model, exec_cfg: ExecutionConfig,
         offload_stash=exec_cfg.offload_stash,
         weight_stream=exec_cfg.weight_stream,
         prefetch_depth=exec_cfg.prefetch_depth,
+        pack_params=exec_cfg.pack_params,
         eager_optimizer=False, clip_mode="none")
     return _make_loss_and_grads(model, cfg_noeager, placements)
 
@@ -551,12 +619,16 @@ def _make_loss_and_grads(model, exec_cfg, placements=None):
         opt = init_opt_state(_grad_collector(), params)
         new_params, new_opt, metrics = base_step(params, opt, batch)
         # _grad_collector stores grads in the "m" slot of the opt state
+        # (packed groups hold it as one weight-aligned flat f32 segment —
+        # unpack so callers always see the plain grad pytree)
         is_slot = lambda x: isinstance(x, dict) and set(x.keys()) == {"m"}
         unwrap = lambda t: jax.tree.map(lambda s: s["m"], t, is_leaf=is_slot)
         grads = {
             "embed": unwrap(new_opt["embed"]),
             "head": unwrap(new_opt["head"]),
-            "groups": tuple(unwrap(g) for g in new_opt["groups"]),
+            "groups": tuple(
+                packing.unpack(g) if packing.is_packed(g) else g
+                for g in (unwrap(g) for g in new_opt["groups"])),
         }
         return metrics["loss"], grads
 
@@ -584,11 +656,17 @@ def _grad_collector() -> Optimizer:
 # ===========================================================================
 def init_opt_state(optimizer: Optimizer, params,
                    exec_cfg: Optional[ExecutionConfig] = None) -> dict:
+    def group_opt(g):
+        # packed group: slot-major flat buffers aligned to the weight spec
+        if packing.is_packed(g):
+            return packing.pack_opt(g.spec, optimizer.init(packing.unpack(g)))
+        return optimizer.init(g)
+
     state = {
         "step": jnp.zeros((), jnp.int32),
         "embed": optimizer.init(params["embed"]),
         "head": optimizer.init(params["head"]),
-        "groups": tuple(optimizer.init(g) for g in params["groups"]),
+        "groups": tuple(group_opt(g) for g in params["groups"]),
     }
     if exec_cfg is not None and exec_cfg.loss_scale_init > 0:
         state["loss_scale"] = {

@@ -13,9 +13,10 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Optional
 
+import jax
 import numpy as np
 
-from repro.models.common import param_bytes
+from repro.models.common import is_spec, param_bytes
 from repro.models.model import LayeredModel
 
 
@@ -34,6 +35,16 @@ class MemoryReport:
     stash_on_host: bool
     total_device: int = 0
     total_host: int = 0
+    # DMA issue counts per relayed layer per direction (l2l modes).  The
+    # BYTES of eq. (2)/(3)'s transit terms are layout-independent; what
+    # pack_params changes is how many host<->HBM copies carry them: the
+    # per-leaf relay issues one copy per param leaf (and per optimizer
+    # slot leaf in l2l_p), the packed relay one copy per dtype segment
+    # (weights) / per optimizer slot (m, v).  Small copies are
+    # latency-bound, so this count — not the byte total — is the eq. (6)
+    # relay-term driver the packed layout attacks.
+    relay_copies_weights: int = 0
+    relay_copies_opt: int = 0
 
     def finalize(self):
         self.total_device = (self.params_device + self.activations
@@ -54,7 +65,8 @@ def estimate(model: LayeredModel, *, batch: int, seq: int,
              n_microbatches: int = 1, mode: str = "l2l",
              offload_stash: bool = False, opt_slots: int = 2,
              act_dtype_bytes: int = 2, param_dtype_bytes: int = 4,
-             prefetch_depth: int = 0) -> MemoryReport:
+             prefetch_depth: int = 0,
+             pack_params: bool = False) -> MemoryReport:
     """Modes:
       baseline      eq. (1): everything device-resident
       baseline_remat eq. (1) with the N*L*mb*X term reduced to boundaries
@@ -68,6 +80,16 @@ def estimate(model: LayeredModel, *, batch: int, seq: int,
     a second full layer slot set in HBM (compute slot + in-flight DMA
     slot), so the device weight-transit footprint is (1+depth)x eq. (2)/(3)
     — still O(1) in depth N.
+
+    ``pack_params`` (l2l modes only) does NOT change any byte term — the
+    transit buffers of eq. (2)/(3) hold the same elements whether they
+    arrive as one flat segment or N leaf arrays.  What it changes is the
+    reported ``relay_copies_*`` DMA issue counts: per-leaf relay pays one
+    host<->HBM copy per param leaf per layer per direction (plus one per
+    optimizer-slot leaf in l2l_p), the packed relay one copy per dtype
+    segment (weights) and one per optimizer slot (m, v) — the
+    latency-bound small-transfer term eq. (6) hides inside its bandwidth
+    model.
     """
     cfg = model.cfg
     d = cfg.d_model
@@ -93,13 +115,23 @@ def estimate(model: LayeredModel, *, batch: int, seq: int,
 
     transit = 2 if mode == "l2l" else 4            # eq.(2) vs eq.(3)
     transit *= 1 + prefetch_depth                  # double-buffered relay
+    # DMA issues per relayed layer per direction (largest group): the
+    # per-leaf relay pays one copy per leaf; the packed relay one per
+    # dtype segment (a single param_dtype here) / per optimizer slot.
+    n_leaves = max(len(jax.tree.leaves(g.spec, is_leaf=is_spec))
+                   for g in model.groups)
+    copies_w = 1 if pack_params else n_leaves
+    copies_o = ((opt_slots if pack_params else n_leaves * opt_slots)
+                if mode == "l2l_p" else 0)
     return MemoryReport(
         params_device=transit * L_max,
         params_host=L_total,
         opt_state=(1 + opt_slots) * L_total,       # EPS-resident
         activations=ub * X,                        # recompute working set
         stash=n_layers * batch * A,
-        stash_on_host=offload_stash).finalize()
+        stash_on_host=offload_stash,
+        relay_copies_weights=copies_w,
+        relay_copies_opt=copies_o).finalize()
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,253 @@
+"""Packed flat-buffer parameter relay (ExecutionConfig.pack_params).
+
+The EPS bottleneck is not bandwidth alone — it is the *shape* of the
+traffic.  An unpacked layer crosses the host<->HBM boundary as a pytree of
+dozens of small per-leaf copies, each paying DMA issue latency; profiling
+(BENCH_relay.json) shows those small transfers stay latency-bound, which
+is why the double-buffered relay (PR 2) only pays off with
+``weight_stream=off``.  This module coalesces each layer into ONE
+contiguous flat buffer per dtype, so every relay — forward, reverse
+backward, trailing update, prefill, decode — issues one large DMA per
+layer per direction instead of N leaf copies.
+
+Representation
+--------------
+``Packed`` is a registered pytree node holding dtype-segregated segments::
+
+    Packed(segs={"float32": (seg_f32,), "bfloat16": (seg_bf16,)},
+           spec=PackSpec(...))
+
+A *stacked* group packs to ``(N_layers, seg)`` arrays; a *layer slice*
+(what the relay moves) to ``(seg,)``.  The ``PackSpec`` — static metadata
+carried in the pytree aux data, so it survives scans, jit and eval_shape —
+records, per original leaf, its segment key (the leaf's dtype), element
+offset, size and shape.  Unpacking is a static slice + reshape per leaf:
+XLA resolves these to zero-copy views of the relayed buffer, so the layer
+apply reads straight out of the DMA destination.
+
+Optimizer state packs *slot-major* and **aligned with the weight spec**:
+``{"m": Packed, "v": Packed}`` where each slot buffer uses the SAME
+segment keys and offsets as the weights (slot arrays are f32 but grouped
+by their parent parameter's dtype).  Element i of the "m"/"v" segment
+therefore corresponds to element i of the weight segment — exactly the
+layout ``kernels.fused_adam_flat`` consumes: fp32 master moments stay
+EPS-resident while the (possibly bf16/fp16) weight segment streams to the
+device, the paper's EPS mixed-precision split.
+
+Bit-identity: packing is concatenation of reshaped leaves and unpacking is
+the inverse slice — byte-for-byte lossless, asserted across every arch by
+tests/test_packing.py.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class LeafSlot(NamedTuple):
+    """Where one original leaf lives inside its dtype segment."""
+    key: str                      # segment key == str(leaf.dtype)
+    offset: int                   # element offset within the segment
+    size: int                     # element count
+    shape: Tuple[int, ...]        # ONE layer's shape (no stacked axis)
+
+
+class PackSpec(NamedTuple):
+    """Static layout of a packed tree (hashable: lives in pytree aux)."""
+    treedef: Any                  # treedef of the original (unpacked) tree
+    leaves: Tuple[LeafSlot, ...]  # one per original leaf, flatten order
+    seg_sizes: Tuple[Tuple[str, int], ...]   # (key, total elements)
+
+    @property
+    def keys(self):
+        return tuple(k for k, _ in self.seg_sizes)
+
+
+@jax.tree_util.register_pytree_with_keys_class
+class Packed:
+    """Pytree node: dict of dtype-keyed flat segments + its PackSpec."""
+    __slots__ = ("segs", "spec")
+
+    def __init__(self, segs: dict, spec: PackSpec):
+        self.segs = dict(segs)
+        self.spec = spec
+
+    def tree_flatten_with_keys(self):
+        keys = sorted(self.segs)
+        return ([(jax.tree_util.DictKey(k), self.segs[k]) for k in keys],
+                (tuple(keys), self.spec))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        keys, spec = aux
+        return cls(dict(zip(keys, children)), spec)
+
+    def __repr__(self):
+        segs = {k: getattr(v, "shape", v) for k, v in self.segs.items()}
+        return f"Packed({segs})"
+
+
+def is_packed(x) -> bool:
+    return isinstance(x, Packed)
+
+
+def _leaf_layer_shape(leaf, stacked: bool):
+    return tuple(leaf.shape[1:] if stacked else leaf.shape)
+
+
+def build_spec(tree, stacked: bool = True) -> PackSpec:
+    """Derive the static layout from a (stacked) tree of arrays or
+    ShapeDtypeStructs.  Segment assignment and offsets follow pytree
+    flatten order, segregated by leaf dtype."""
+    leaves, treedef = jax.tree.flatten(tree)
+    offsets: dict = {}
+    slots = []
+    for leaf in leaves:
+        key = str(jnp.dtype(leaf.dtype))
+        shape = _leaf_layer_shape(leaf, stacked)
+        size = 1
+        for d in shape:
+            size *= int(d)
+        off = offsets.get(key, 0)
+        slots.append(LeafSlot(key, off, size, shape))
+        offsets[key] = off + size
+    seg_sizes = tuple(sorted(offsets.items()))
+    return PackSpec(treedef, tuple(slots), seg_sizes)
+
+
+def _assert_layout(spec: PackSpec, leaves, stacked: bool):
+    assert len(leaves) == len(spec.leaves), \
+        f"tree has {len(leaves)} leaves, spec describes {len(spec.leaves)}"
+    for leaf, slot in zip(leaves, spec.leaves):
+        got = _leaf_layer_shape(leaf, stacked)
+        assert tuple(got) == tuple(slot.shape), \
+            f"leaf shape {got} != spec {slot.shape}"
+
+
+def pack(tree, spec: PackSpec = None, stacked: bool = True) -> Packed:
+    """Coalesce a pytree into per-dtype flat segments.
+
+    With an explicit ``spec`` the SEGMENT ASSIGNMENT of the spec is used
+    regardless of the actual leaf dtypes — this is how f32 gradient/moment
+    trees pack into weight-aligned segments (the slot-major layout the
+    fused optimizer needs).  Without one, the spec is derived from the
+    tree itself."""
+    if spec is None:
+        spec = build_spec(tree, stacked=stacked)
+    leaves = spec.treedef.flatten_up_to(tree)
+    _assert_layout(spec, leaves, stacked)
+    by_key: dict = {k: [] for k in spec.keys}
+    for leaf, slot in zip(leaves, spec.leaves):
+        flat = leaf.reshape(leaf.shape[0], -1) if stacked \
+            else leaf.reshape(-1)
+        by_key[slot.key].append(flat)
+    segs = {}
+    for key, parts in by_key.items():
+        if not parts:
+            continue
+        dts = {str(p.dtype) for p in parts}
+        assert len(dts) == 1, \
+            f"segment {key!r} mixes dtypes {sorted(dts)} — cannot coalesce"
+        segs[key] = jnp.concatenate(parts, axis=-1)
+    return Packed(segs, spec)
+
+
+def unpack(packed: Packed):
+    """Inverse of ``pack``: static slice + reshape per leaf (zero-copy
+    views on the relayed buffer once XLA folds them)."""
+    spec = packed.spec
+    out = []
+    for slot in spec.leaves:
+        seg = packed.segs[slot.key]
+        stacked = seg.ndim == 2
+        if stacked:
+            piece = jax.lax.slice_in_dim(seg, slot.offset,
+                                         slot.offset + slot.size, axis=1)
+            out.append(piece.reshape((seg.shape[0],) + slot.shape))
+        else:
+            piece = jax.lax.slice_in_dim(seg, slot.offset,
+                                         slot.offset + slot.size, axis=0)
+            out.append(piece.reshape(slot.shape))
+    return jax.tree.unflatten(spec.treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# Optimizer-state packing (slot-major, weight-aligned)
+# ---------------------------------------------------------------------------
+def opt_slot_names(opt_tree, spec: PackSpec) -> Tuple[str, ...]:
+    """Slot keys of a per-leaf optimizer state ({leaf: {"m":..,"v":..}}).
+    Asserted uniform across leaves; () for stateless optimizers (sgd)."""
+    dicts = spec.treedef.flatten_up_to(opt_tree)
+    if not dicts:
+        return ()
+    first = tuple(sorted(dicts[0]))
+    for d in dicts:
+        assert isinstance(d, dict) and tuple(sorted(d)) == first, \
+            f"non-uniform optimizer slots: {sorted(d)} vs {list(first)}"
+    return first
+
+
+def pack_opt(spec: PackSpec, opt_tree, stacked: bool = True) -> dict:
+    """{slot: Packed} with segments ALIGNED to the weight spec (same keys,
+    same offsets), so slot element i pairs with weight element i."""
+    dicts = spec.treedef.flatten_up_to(opt_tree)
+    slots = opt_slot_names(opt_tree, spec)
+    out = {}
+    for s in slots:
+        tree = jax.tree.unflatten(spec.treedef, [d[s] for d in dicts])
+        out[s] = pack(tree, spec=spec, stacked=stacked)
+    return out
+
+
+def unpack_opt(spec: PackSpec, packed_slots: dict):
+    """Inverse of ``pack_opt``: rebuild {leaf: {slot: arr}}."""
+    slots = tuple(sorted(packed_slots))
+    unpacked = {s: spec.treedef.flatten_up_to(unpack(packed_slots[s]))
+                for s in slots}
+    n = len(spec.leaves)
+    per_leaf = [{s: unpacked[s][i] for s in slots} for i in range(n)]
+    return jax.tree.unflatten(spec.treedef, per_leaf)
+
+
+def opt_is_packed(group_opt) -> bool:
+    return (isinstance(group_opt, dict)
+            and all(is_packed(v) for v in group_opt.values()))
+
+
+# ---------------------------------------------------------------------------
+# Whole-params / legacy-opt converters (the checkpoint + facade boundary)
+# ---------------------------------------------------------------------------
+def pack_params(params: dict) -> dict:
+    """Pack the stacked layer groups of a legacy params dict; ``embed`` /
+    ``head`` stay plain pytrees (they are never relayed)."""
+    return {**params,
+            "groups": tuple(g if is_packed(g) else pack(g)
+                            for g in params["groups"])}
+
+
+def unpack_params(params: dict) -> dict:
+    return {**params,
+            "groups": tuple(unpack(g) if is_packed(g) else g
+                            for g in params["groups"])}
+
+
+def pack_opt_state(opt: dict, params_packed: dict) -> dict:
+    """Pack the ``groups`` of a legacy opt-state dict against the packed
+    params' specs (slot-major, weight-aligned)."""
+    groups = []
+    for g_opt, g_p in zip(opt["groups"], params_packed["groups"]):
+        groups.append(pack_opt(g_p.spec, g_opt)
+                      if is_packed(g_p) and not opt_is_packed(g_opt)
+                      else g_opt)
+    return {**opt, "groups": tuple(groups)}
+
+
+def unpack_opt_state(opt: dict, params_packed: dict) -> dict:
+    groups = []
+    for g_opt, g_p in zip(opt["groups"], params_packed["groups"]):
+        groups.append(unpack_opt(g_p.spec, g_opt)
+                      if is_packed(g_p) and opt_is_packed(g_opt)
+                      else g_opt)
+    return {**opt, "groups": tuple(groups)}

@@ -34,6 +34,15 @@ class ExecutionConfig:
     #     overlaps compute and the device holds "the executing layer(s)"
     #     (paper §3.1, plural): one compute slot + one transfer slot.
     prefetch_depth: int = 0
+    # --- packed relay -----------------------------------------------------
+    # Coalesce each layer's weight pytree (and, with eager_optimizer, its
+    # optimizer-slot pytree) into contiguous per-dtype flat buffers
+    # (core/packing.py), so every EPS relay issues ONE large DMA per layer
+    # per direction instead of N small per-leaf copies, and the eager
+    # optimizer runs as a fused flat-segment kernel
+    # (kernels/fused_adam_flat) when the optimizer provides one.
+    # Bit-identical to the unpacked schedule (tests/test_packing.py).
+    pack_params: bool = False
     # --- L2L-p ----------------------------------------------------------
     eager_optimizer: bool = True    # Alg 4 (False = Alg 3)
     host_optimizer: bool = False    # run the optimizer on the EPS host

@@ -36,6 +36,7 @@ import jax
 from repro.checkpoint import io as ckpt_io
 from repro.configs.base import ModelConfig
 from repro.core import baseline as _baseline, decode as _decode, l2l as _l2l
+from repro.core import packing
 from repro.core.memory_model import MemoryReport, estimate
 from repro.core.schedule import ExecutionConfig
 from repro.engine.placement import placements_for
@@ -90,33 +91,70 @@ class Engine:
                 optimizer=self.optimizer)
         return self._placements
 
+    # -- packed relay (ExecutionConfig.pack_params) -------------------------
+    def _relay_params(self, params):
+        """Params in the layout the relay kernels expect: with
+        ``pack_params`` the stacked layer groups are coalesced into
+        per-dtype flat buffers (``core.packing``) so each EPS relay is one
+        large DMA per layer.  Idempotent — already-packed groups pass
+        through, so callers may hand either layout to ``grads`` /
+        ``prefill`` / ``decode_*``.  The last conversion is cached by
+        object identity: a serving loop that calls ``decode_step`` with
+        the same unpacked params every token packs once, not per token
+        (params trees are never mutated in place anywhere in this repo)."""
+        if not self.exec_cfg.pack_params:
+            return params
+        if all(packing.is_packed(g) for g in params["groups"]):
+            return params
+        cached = self._fns.get("_pack_cache")
+        if cached is not None and cached[0] is params:
+            return cached[1]
+        packed = packing.pack_params(params)
+        self._fns["_pack_cache"] = (params, packed)
+        return packed
+
     # -- state lifecycle ----------------------------------------------------
     def init(self, rng) -> TrainState:
         """Materialize parameters + optimizer state from a PRNG key."""
-        params = self.model.init_params(rng)
+        params = self._relay_params(self.model.init_params(rng))
         return TrainState.from_legacy(params, self._init_opt_legacy(params))
 
     def abstract_state(self) -> TrainState:
         """ShapeDtypeStruct TrainState (for lowering / restore targets)."""
-        params_abs = self.model.abstract_params()
+        params_abs = jax.eval_shape(self._relay_params,
+                                    self.model.abstract_params())
         opt_abs = jax.eval_shape(self._init_opt_legacy, params_abs)
         return TrainState.from_legacy(params_abs, opt_abs)
 
     def save(self, directory: str, state: TrainState,
              step: Optional[int] = None, prefix: str = "ckpt") -> str:
+        """Checkpoints are always written in the UNPACKED pytree layout —
+        a packed engine's flat buffers are converted through their
+        PackSpecs first, so checkpoints interchange freely between
+        pack_params on/off (tests/test_packing.py)."""
         step = int(state.step) if step is None else int(step)
-        return ckpt_io.save_train_state(directory, state.params,
-                                        state.legacy_opt(), step,
+        params, opt = state.params, state.legacy_opt()
+        if self.exec_cfg.pack_params:
+            opt = packing.unpack_opt_state(opt, params)
+            params = packing.unpack_params(params)
+        return ckpt_io.save_train_state(directory, params, opt, step,
                                         prefix=prefix)
 
     def restore(self, directory: str, step: Optional[int] = None,
                 like: Optional[TrainState] = None, prefix: str = "ckpt"):
         """Returns (TrainState, step).  ``like`` defaults to the engine's
-        abstract state."""
+        abstract state; packed engines restore the unpacked checkpoint
+        layout and re-pack."""
         like = like if like is not None else self.abstract_state()
+        like_p, like_o = like.params, like.legacy_opt()
+        if self.exec_cfg.pack_params:
+            like_o = jax.eval_shape(packing.unpack_opt_state, like_o, like_p)
+            like_p = jax.eval_shape(packing.unpack_params, like_p)
         params, opt, step = ckpt_io.restore_train_state(
-            directory, like.params, like.legacy_opt(), step=step,
-            prefix=prefix)
+            directory, like_p, like_o, step=step, prefix=prefix)
+        if self.exec_cfg.pack_params:
+            params = packing.pack_params(params)
+            opt = packing.pack_opt_state(opt, params)
         return TrainState.from_legacy(params, opt), step
 
     # -- training -----------------------------------------------------------
@@ -155,7 +193,7 @@ class Engine:
         if "grads" not in self._fns:
             self._fns["grads"] = jax.jit(self.grads_fn)
         params = getattr(state_or_params, "params", state_or_params)
-        return self._fns["grads"](params, batch)
+        return self._fns["grads"](self._relay_params(params), batch)
 
     # -- inference ----------------------------------------------------------
     @property
@@ -170,7 +208,7 @@ class Engine:
         if "prefill" not in self._fns:
             self._fns["prefill"] = jax.jit(self.prefill_fn)
         params = getattr(state_or_params, "params", state_or_params)
-        return self._fns["prefill"](params, batch)
+        return self._fns["prefill"](self._relay_params(params), batch)
 
     @property
     def decode_step_fn(self):
@@ -185,14 +223,16 @@ class Engine:
         """Prefill the decode caches from a prompt.
         Returns (caches, last_logits)."""
         params = getattr(state_or_params, "params", state_or_params)
-        return _decode.prefill(self.model, params, tokens, live_seq,
+        return _decode.prefill(self.model, self._relay_params(params),
+                               tokens, live_seq,
                                exec_cfg=self.exec_cfg, frames=frames)
 
     def decode_step(self, state_or_params, caches, token, cur_pos):
         if "decode_step" not in self._fns:
             self._fns["decode_step"] = jax.jit(self.decode_step_fn)
         params = getattr(state_or_params, "params", state_or_params)
-        return self._fns["decode_step"](params, caches, token, cur_pos)
+        return self._fns["decode_step"](self._relay_params(params), caches,
+                                        token, cur_pos)
 
     # -- analysis -----------------------------------------------------------
     def memory_estimate(self, *, batch: int, seq: int,
@@ -202,6 +242,7 @@ class Engine:
         kw.setdefault("n_microbatches", self.exec_cfg.n_microbatches)
         kw.setdefault("offload_stash", self.exec_cfg.offload_stash)
         kw.setdefault("prefetch_depth", self.exec_cfg.prefetch_depth)
+        kw.setdefault("pack_params", self.exec_cfg.pack_params)
         return estimate(self.model, batch=batch, seq=seq,
                         mode=self.memory_mode, **kw)
 
@@ -219,6 +260,11 @@ class BaselineEngine(Engine):
     """Algorithms 1/2: conventional execution; Alg 2 (gradient
     accumulation) when ``n_microbatches > 1``."""
     name = "baseline"
+
+    def _normalize_cfg(self, exec_cfg):
+        # conventional execution has no relay — the packed flat-buffer
+        # layout is an L2L concern and the baseline kernels speak pytrees
+        return dataclasses.replace(exec_cfg, pack_params=False)
 
     @property
     def memory_mode(self):

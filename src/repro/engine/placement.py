@@ -28,6 +28,14 @@ def placements_for(model, exec_cfg, mesh=None, rules=None,
     ``exec_cfg.prefetch_depth == 1`` the L2L scans build a two-slot
     ``eps.Relay`` view over them (compute slot + in-flight DMA slot), so
     nothing here grows — only how often a slice is in HBM at once.
+
+    With ``exec_cfg.pack_params`` the relayed trees are ``packing.Packed``
+    flat buffers (one leaf per dtype segment), which cannot reuse the
+    per-leaf tensor-parallel specs: packed relay buffers are placed
+    replicated over the model axes (P() broadcast).  Data-parallel meshes
+    are unaffected; on model-parallel meshes packing trades the sharded
+    weight residency for one-DMA-per-layer relays (sharded packing —
+    per-shard segments — is future work).
     """
     if mesh is None:
         return make_placements(exec_cfg, len(model.groups))
@@ -38,6 +46,12 @@ def placements_for(model, exec_cfg, mesh=None, rules=None,
 
     if rules is None:
         rules = shd.make_rules(model.cfg, mesh, kind="train")
+    if exec_cfg.pack_params:
+        n = len(model.groups)
+        return make_placements(exec_cfg, n, mesh=mesh,
+                               weight_pspecs=(P(),) * n,
+                               opt_pspecs=(P(),) * n,
+                               stash_pspec=P(None, rules.get("batch")))
     optimizer = optimizer or adam()
     slice_pspecs = shd.layer_slice_pspecs(model, mesh, rules)
     opt_slice_pspecs = []

@@ -49,7 +49,9 @@ def create(name: str, model, exec_cfg=None, *,
     already-built LayeredModel.  ``exec_overrides`` patches fields onto
     ``exec_cfg`` (or the default config) without the caller rebuilding a
     frozen ExecutionConfig — e.g. ``exec_overrides={"prefetch_depth": 1}``
-    for the double-buffered relay.  Remaining keyword args are forwarded
+    for the double-buffered relay or ``{"pack_params": True}`` for the
+    packed flat-buffer relay + fused optimizer.  Remaining keyword args
+    are forwarded
     to the engine constructor (``optimizer=``, ``mesh=``, ``rules=``,
     ``placements=``, ``donate=``).
     """

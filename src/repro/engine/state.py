@@ -25,6 +25,13 @@ class TrainState:
                       "groups"}), WITHOUT the step counter.
     ``step``        — scalar int32 update counter.
     ``loss_scale``  — {"scale", "good_steps"} when AMP is enabled, else None.
+
+    With ``ExecutionConfig.pack_params`` the ``groups`` entries hold
+    ``core.packing.Packed`` flat buffers (and ``{slot: Packed}`` for the
+    optimizer) instead of per-leaf pytrees; both are ordinary pytree
+    nodes, so this dataclass, jit donation and the legacy converters are
+    layout-agnostic.  Checkpoints always use the unpacked layout — the
+    conversion lives in ``Engine.save``/``restore``.
     """
     params: Any
     opt_state: Any

@@ -69,7 +69,7 @@ def flash_attention(q, k, v, *, causal=True, window=0, soft_cap=0.0,
 
 
 def fused_adam(p, g, m, v, a, clip_scale, *, b1=0.9, b2=0.999, eps=1e-8,
-               wd=0.0, interpret=None):
+               wd=0.0, wd_form=None, interpret=None):
     """Arbitrary-shaped params: flattens, pads to the block size, runs the
     fused kernel, restores shape.  Returns (p', m', v')."""
     interpret = _interpret_default() if interpret is None else interpret
@@ -84,13 +84,14 @@ def fused_adam(p, g, m, v, a, clip_scale, *, b1=0.9, b2=0.999, eps=1e-8,
         prep(p, p.dtype), prep(g, jnp.float32), prep(m, jnp.float32),
         prep(v, jnp.float32), jnp.asarray(a, jnp.float32),
         jnp.asarray(clip_scale, jnp.float32),
-        b1=b1, b2=b2, eps=eps, wd=wd, block=block, interpret=interpret)
+        b1=b1, b2=b2, eps=eps, wd=wd, wd_form=wd_form, block=block,
+        interpret=interpret)
     unpad = lambda x: x[:n].reshape(shape)
     return unpad(p2), unpad(m2), unpad(v2)
 
 
 def rmsnorm(x, scale, *, eps=1e-6, interpret=None):
-    """x: (..., d) -> same shape."""
+    """x: (..., d) -> same shape.  Forward only — see ``rmsnorm_diff``."""
     interpret = _interpret_default() if interpret is None else interpret
     shape = x.shape
     x2 = x.reshape(-1, shape[-1])
@@ -102,3 +103,44 @@ def rmsnorm(x, scale, *, eps=1e-6, interpret=None):
         x2 = jnp.pad(x2, ((0, pad), (0, 0)))
     o = rmsnorm_2d(x2, scale, eps=eps, block_rows=block, interpret=interpret)
     return o[:r].reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# Differentiable fused RMSNorm: Pallas forward, reference-recompute backward
+# (pallas_call has no transpose rule; the bwd re-derives from (x, scale) —
+# the same recompute discipline the flash-attention VJP above uses).  This
+# is what models/common.apply_norm dispatches to when the fused path is
+# enabled (REPRO_PALLAS_RMSNORM / use_pallas_rmsnorm).
+# ---------------------------------------------------------------------------
+def _rmsnorm_reference(x, scale, eps):
+    # must mirror models.common.apply_norm's rmsnorm branch exactly — the
+    # backward below differentiates THIS
+    xf = x.astype(jnp.float32)
+    ms = (xf * xf).mean(-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _rmsnorm_ad(x, scale, eps, interpret):
+    return rmsnorm(x, scale, eps=eps, interpret=interpret)
+
+
+def _rmsnorm_ad_fwd(x, scale, eps, interpret):
+    return rmsnorm(x, scale, eps=eps, interpret=interpret), (x, scale)
+
+
+def _rmsnorm_ad_bwd(eps, interpret, res, g):
+    x, scale = res
+    _, vjp = jax.vjp(lambda xx, ss: _rmsnorm_reference(xx, ss, eps),
+                     x, scale)
+    return vjp(g)
+
+
+_rmsnorm_ad.defvjp(_rmsnorm_ad_fwd, _rmsnorm_ad_bwd)
+
+
+def rmsnorm_diff(x, scale, *, eps=1e-6, interpret=None):
+    """Differentiable fused RMSNorm: x (..., d), scale (d,) -> (..., d)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    return _rmsnorm_ad(x, scale, eps, interpret)

@@ -25,7 +25,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro import engine as engines
 from repro.configs.base import (INPUT_SHAPES, InputShape, ModelConfig,
                                 get_config)
-from repro.core.eps import pspecs_like
+from repro.core import packing
+from repro.core.eps import memories_supported, pspecs_like
 from repro.core.schedule import ExecutionConfig
 from repro.distributed import sharding as shd
 from repro.engine import TrainState
@@ -94,7 +95,9 @@ def _batch_shardings(cfg, shape, mesh, rules):
 
 
 def _opt_shardings_legacy(param_sh, opt_abs, mesh):
-    """NamedShardings for the flat opt dict, mirroring the param ones."""
+    """NamedShardings for the flat opt dict, mirroring the param ones.
+    Packed groups ({slot: Packed} flat buffers) mirror the group buffers'
+    replicated placement instead of the per-leaf pspec derivation."""
     def like(sh_tree, state_tree):
         pspecs = jax.tree.map(lambda s: s.spec, sh_tree)
         kinds = jax.tree.leaves(sh_tree)[0].memory_kind if jax.tree.leaves(
@@ -103,12 +106,21 @@ def _opt_shardings_legacy(param_sh, opt_abs, mesh):
         return jax.tree.map(
             lambda p: NamedSharding(mesh, p, memory_kind=kinds), ps,
             is_leaf=lambda x: isinstance(x, P))
+
+    def group(i):
+        g_opt = opt_abs["groups"][i]
+        if packing.opt_is_packed(g_opt):
+            sh_leaves = jax.tree.leaves(param_sh["groups"][i])
+            kind = sh_leaves[0].memory_kind if sh_leaves else "device"
+            return jax.tree.map(
+                lambda _: NamedSharding(mesh, P(), memory_kind=kind), g_opt)
+        return like(param_sh["groups"][i], g_opt)
+
     return {
         "step": NamedSharding(mesh, P()),
         "embed": like(param_sh["embed"], opt_abs["embed"]),
         "head": like(param_sh["head"], opt_abs["head"]),
-        "groups": tuple(like(param_sh["groups"][i], opt_abs["groups"][i])
-                        for i in range(len(opt_abs["groups"]))),
+        "groups": tuple(group(i) for i in range(len(opt_abs["groups"]))),
     }
 
 
@@ -123,6 +135,11 @@ def make_exec_cfg(shape: InputShape, cfg: ModelConfig, mesh,
         # flight while layer l computes (override {"prefetch_depth": 0}
         # for the serialized A/B baseline)
         prefetch_depth=1,
+        # packed relay is opt-in here (override {"pack_params": True} /
+        # dryrun --pack 1): flat buffers replicate over model axes, so on
+        # tensor-parallel meshes it trades sharded weight residency for
+        # one-DMA-per-layer relays
+        pack_params=False,
         decode_window=decode_window(cfg, shape),
     )
     if overrides:
@@ -160,6 +177,20 @@ def build(arch: str, shape_name: str, mesh, *, variant: str = "full",
     params_abs = model.abstract_params()
     param_sh = shd.param_shardings(model, mesh, rules,
                                    weight_stream=exec_cfg.weight_stream)
+    if exec_cfg.pack_params:
+        # packed relay: the stacked groups become per-dtype flat buffers,
+        # placed replicated over the model axes (see placements_for) in
+        # the same memory space the unpacked groups used
+        params_abs = jax.eval_shape(packing.pack_params, params_abs)
+        # None (default space) for device residency — an explicit "device"
+        # kind emits annotate custom calls the partitioner rejects (see
+        # distributed.sharding.shardings)
+        gkind = ("pinned_host"
+                 if exec_cfg.weight_stream and memories_supported()
+                 else None)
+        param_sh = {**param_sh, "groups": jax.tree.map(
+            lambda _: NamedSharding(mesh, P(), memory_kind=gkind),
+            params_abs["groups"])}
     meta = {"arch": arch, "shape": shape_name, "kind": shape.kind,
             "engine": eng.name,
             "exec": dataclasses.asdict(eng.exec_cfg),

@@ -268,17 +268,28 @@ def main():
                          "build default is 1: double-buffered EPS relay); "
                          "0 compiles the serialized fetch-in-iteration "
                          "schedule for A/B HLO comparison")
+    ap.add_argument("--pack", type=int, default=None, choices=[0, 1],
+                    help="override ExecutionConfig.pack_params (build "
+                         "default 0): 1 compiles the packed flat-buffer "
+                         "relay — one host<->HBM copy per layer per "
+                         "direction — for A/B HLO comparison")
     args = ap.parse_args()
     cfg_patch = ({"grouped_decode_attn": True, "moe_ep_constraint": True}
                  if args.optimized else None)
-    exec_overrides = ({"prefetch_depth": args.prefetch}
-                      if args.prefetch is not None else None)
+    exec_overrides = {}
+    if args.prefetch is not None:
+        exec_overrides["prefetch_depth"] = args.prefetch
+    if args.pack is not None:
+        exec_overrides["pack_params"] = bool(args.pack)
+    exec_overrides = exec_overrides or None
     if args.optimized and args.tag == "baseline":
         args.tag = "optimized"
     if args.prefetch == 0:
         # compose with --optimized / custom tags so the A/B never
         # overwrites the prefetch-on records under the same directory
         args.tag += "-noprefetch"
+    if args.pack == 1:
+        args.tag += "-packed"
 
     archs = list_archs() if args.arch == "all" else args.arch.split(",")
     archs = [a for a in archs if a != "bert-large"]

@@ -32,6 +32,9 @@ def main(argv=None):
     ap.add_argument("--weight-stream", action="store_true")
     ap.add_argument("--prefetch", type=int, default=0, choices=[0, 1],
                     help="1 = double-buffered decode weight relay")
+    ap.add_argument("--pack", action="store_true",
+                    help="packed decode relay: one flat buffer per layer "
+                         "per dtype instead of per-leaf copies")
     ap.add_argument("--window", type=int, default=0,
                     help="ring-buffer window (long-context mode)")
     ap.add_argument("--seed", type=int, default=0)
@@ -40,7 +43,7 @@ def main(argv=None):
     cfg = get_config(args.arch, args.variant)
     eng = engines.create("l2l", cfg, ExecutionConfig(
         weight_stream=args.weight_stream, prefetch_depth=args.prefetch,
-        decode_window=args.window))
+        pack_params=args.pack, decode_window=args.window))
     params = eng.model.init_params(jax.random.PRNGKey(args.seed))
 
     live = args.cache_len or (args.window if args.window

@@ -53,6 +53,11 @@ def main(argv=None):
     ap.add_argument("--prefetch", type=int, default=0, choices=[0, 1],
                     help="1 = double-buffered EPS relay (layer l+1 "
                          "streams in while l computes)")
+    ap.add_argument("--pack", action="store_true",
+                    help="packed relay: coalesce each layer into one "
+                         "flat buffer per dtype (one DMA per layer per "
+                         "direction) and run the eager optimizer fused "
+                         "on the flat segments")
     ap.add_argument("--host-optimizer", action="store_true",
                     help="run the optimizer on the EPS host "
                          "(compute_on 'device_host')")
@@ -95,6 +100,7 @@ def main(argv=None):
         offload_stash=args.offload_stash,
         weight_stream=args.weight_stream,
         prefetch_depth=args.prefetch,
+        pack_params=args.pack,
         host_optimizer=args.host_optimizer,
         clip_mode="per_layer" if args.clip > 0 else "none",
         clip_norm=args.clip)

@@ -24,6 +24,7 @@ Logical axis names used across the repo::
 from __future__ import annotations
 
 import math
+import os
 from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax
@@ -104,7 +105,27 @@ def norm_spec(cfg) -> dict:
             else rmsnorm_spec(cfg.d_model))
 
 
+# Flag gate for the fused Pallas RMSNorm (kernels/rmsnorm_2d through
+# ops.rmsnorm_diff: Pallas forward in interpret mode on CPU, reference-
+# recompute backward).  Off by default — the jnp path below stays the
+# numerics baseline; enable via env REPRO_PALLAS_RMSNORM=1 or
+# use_pallas_rmsnorm(True).  Parity vs the jnp reference is asserted by
+# tests/test_kernels.py::test_apply_norm_pallas_gate_parity.
+_PALLAS_RMSNORM = os.environ.get("REPRO_PALLAS_RMSNORM", "0") == "1"
+
+
+def use_pallas_rmsnorm(enabled: bool) -> bool:
+    """Toggle the fused RMSNorm path; returns the previous setting."""
+    global _PALLAS_RMSNORM
+    prev = _PALLAS_RMSNORM
+    _PALLAS_RMSNORM = bool(enabled)
+    return prev
+
+
 def apply_norm(w, x, eps: float = 1e-6):
+    if "bias" not in w and _PALLAS_RMSNORM:   # fused rmsnorm
+        from repro.kernels import ops as kops
+        return kops.rmsnorm_diff(x, w["scale"], eps=eps)
     xf = x.astype(jnp.float32)
     if "bias" in w:  # layernorm
         mu = xf.mean(-1, keepdims=True)
@@ -169,8 +190,14 @@ def head_spec(cfg) -> dict:
 
 
 def embed_tokens(w, tokens, cfg, dtype):
-    x = jnp.take(w["tok"], tokens, axis=0).astype(dtype)
-    return x * (1.0 if cfg.norm_type == "rmsnorm" else 1.0)
+    """Plain embedding row lookup — NO scaling for either norm type.
+
+    Pinned behavior (tests/test_packing.py::test_embed_tokens_unscaled):
+    a historical dead expression multiplied by 1.0 on both norm branches;
+    the lookup is intentionally unscaled so this helper, ``model.prepare``
+    (train/prefill) and ``model.decode_embed`` (decode) all agree on the
+    same embedding values."""
+    return jnp.take(w["tok"], tokens, axis=0).astype(dtype)
 
 
 def logits_fn(head_w, embed_w, x, cfg):

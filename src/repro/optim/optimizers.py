@@ -19,7 +19,7 @@ optimizer [10]), sgd(+momentum).  All support an ``lr`` schedule function of
 from __future__ import annotations
 
 import math
-from typing import Callable, NamedTuple
+from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -29,6 +29,13 @@ class Optimizer(NamedTuple):
     name: str
     init: Callable        # params_subtree -> state_subtree
     update: Callable      # (grads, state, params, step) -> (new_params, new_state)
+    # Optional fused update over FLAT 1-D segments (the packed relay's
+    # pack_params path): (p, g, m, v, step) -> (p', m', v') where all
+    # arrays are same-length 1-D buffers (g/m/v f32, p any dtype).  Must
+    # be bit-identical to ``update`` applied leaf-wise — asserted by
+    # tests/test_packing.py.  None = no fused form; the packed path then
+    # falls back to unpack -> per-leaf update -> repack.
+    flat_update: Optional[Callable] = None
 
 
 def make_schedule(base_lr: float, warmup: int = 0, total: int = 0,
@@ -95,7 +102,42 @@ def adam(lr=1e-3, b1=0.9, b2=0.999, eps=1e-8,
         new_s = jax.tree.unflatten(treedef, [o[1] for o in out])
         return new_p, new_s
 
-    return Optimizer("adam", init, update)
+    return Optimizer("adam", init, update,
+                     flat_update=_fused_flat_update(sched, b1, b2, eps, 0.0,
+                                                    wd_form=False))
+
+
+def _fused_flat_update(sched, b1, b2, eps, wd, wd_form) -> Callable:
+    """Flat-segment Adam/AdamW: the fused Pallas kernel
+    (kernels/fused_adam_flat through ops.fused_adam — one read and one
+    write per (p, g, m, v) stream) on TPU; the kernel's exact elementwise
+    chain in plain jnp elsewhere (interpret-mode Pallas pays a grid-loop
+    tax XLA-compiled elementwise code doesn't — same split as
+    eps.memories_supported).  The effective step size ``a`` and each
+    elementwise term mirror the per-leaf path exactly, so packed and
+    unpacked updates are bit-identical (tests/test_packing.py; the kernel
+    itself is parity-tested in tests/test_kernels.py).  ``wd_form`` keys
+    the update association on the optimizer FAMILY — adamw keeps its
+    `a*(m/d + wd*p)` form even at weight_decay=0, where adam's `(a*m)/d`
+    differs in the last ulp."""
+    def flat_update(p, g, m, v, step):
+        t = step.astype(jnp.float32) + 1.0
+        a = sched(step) * jnp.sqrt(1.0 - b2 ** t) / (1.0 - b1 ** t)
+        if jax.default_backend() == "tpu":
+            from repro.kernels import ops as kops
+            return kops.fused_adam(p, g, m, v, a, jnp.float32(1.0),
+                                   b1=b1, b2=b2, eps=eps, wd=wd,
+                                   wd_form=wd_form)
+        gf = g.astype(jnp.float32)
+        m2 = b1 * m + (1 - b1) * gf
+        v2 = b2 * v + (1 - b2) * gf * gf
+        pf = p.astype(jnp.float32)
+        if wd_form:
+            newp = pf - a * (m2 / (jnp.sqrt(v2) + eps) + wd * pf)
+        else:
+            newp = pf - a * m2 / (jnp.sqrt(v2) + eps)
+        return _cast_like(newp, p), m2, v2
+    return flat_update
 
 
 def adamw(lr=1e-3, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.01,
@@ -122,7 +164,10 @@ def adamw(lr=1e-3, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.01,
         return (jax.tree.unflatten(treedef, [o[0] for o in out]),
                 jax.tree.unflatten(treedef, [o[1] for o in out]))
 
-    return Optimizer("adamw", base.init, update)
+    return Optimizer("adamw", base.init, update,
+                     flat_update=_fused_flat_update(sched, b1, b2, eps,
+                                                    weight_decay,
+                                                    wd_form=True))
 
 
 def lamb(lr=1e-3, b1=0.9, b2=0.999, eps=1e-6, weight_decay=0.01,

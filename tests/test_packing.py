@@ -1,0 +1,321 @@
+"""Packed flat-buffer relay (ExecutionConfig.pack_params) invariants.
+
+Packing coalesces each layer's weight pytree (and optimizer slots) into
+contiguous per-dtype flat buffers so the EPS relay issues one large DMA
+per layer per direction.  That must be a pure LAYOUT change: pack->unpack
+is bit-lossless for every arch, the fused flat-segment optimizer
+(kernels/fused_adam_flat) matches the per-leaf optim.adam/adamw exactly,
+and pack_params=True computes bit-identical grads, updates, prefill and
+decode outputs to pack_params=False for both l2l and l2l-p (mirroring
+tests/test_prefetch.py for the relay-depth knob)."""
+import functools
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_batch
+from repro import engine as engines
+from repro.configs.base import get_config, list_archs
+from repro.core import packing
+from repro.core.memory_model import estimate
+from repro.core.schedule import ExecutionConfig
+from repro.models.model import LayeredModel
+from repro.optim import adam, adamw, lamb, sgd
+
+
+def _cfg(arch="bert-large"):
+    return get_config(arch, "smoke").replace(dtype="float32")
+
+
+def _assert_trees_bitwise(a, b, what):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb), f"{what}: leaf count {len(la)} vs {len(lb)}"
+    mismatched = [k for k, (x, y) in enumerate(zip(la, lb))
+                  if not bool(jnp.all(x == y))]
+    assert not mismatched, f"{what}: leaves {mismatched} differ"
+
+
+# ---------------------------------------------------------------------------
+# pack -> unpack roundtrip, every arch of the smoke config set
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch", list_archs())
+def test_pack_roundtrip_bit_identity(arch):
+    cfg = get_config(arch, "smoke")
+    model = LayeredModel(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    packed = packing.pack_params(params)
+    for g in packed["groups"]:
+        assert packing.is_packed(g)
+        # one buffer per dtype: the relay moves len(segs) arrays per layer
+        assert all(b.ndim == 2 for b in g.segs.values())
+    restored = packing.unpack_params(packed)
+    assert jax.tree.structure(params) == jax.tree.structure(restored)
+    _assert_trees_bitwise(params, restored, f"{arch} roundtrip")
+    # opt-state roundtrip rides the same specs (slot-major, aligned)
+    opt = {"step": jnp.int32(0),
+           "embed": adam().init(params["embed"]),
+           "head": adam().init(params["head"]),
+           "groups": tuple(adam().init(g) for g in params["groups"])}
+    opt_packed = packing.pack_opt_state(opt, packed)
+    for g in opt_packed["groups"]:
+        assert packing.opt_is_packed(g) and sorted(g) == ["m", "v"]
+    _assert_trees_bitwise(opt, packing.unpack_opt_state(opt_packed, packed),
+                          f"{arch} opt roundtrip")
+
+
+def test_pack_mixed_dtype_segregation():
+    """dtype-segregated segments: mixed trees split into one buffer per
+    dtype, with odd (non-power-of-two) leaf sizes preserved exactly."""
+    tree = {"a": jnp.arange(3 * 7, dtype=jnp.float32).reshape(3, 7),
+            "b": (jnp.arange(3 * 5, dtype=jnp.bfloat16).reshape(3, 5),
+                  jnp.arange(3 * 13, dtype=jnp.float32).reshape(3, 13, 1)),
+            "c": jnp.ones((3,), jnp.bfloat16)}
+    pk = packing.pack(tree)            # stacked: leading axis 3
+    assert sorted(pk.segs) == ["bfloat16", "float32"]
+    assert pk.segs["float32"].shape == (3, 7 + 13)
+    assert pk.segs["bfloat16"].shape == (3, 5 + 1)
+    _assert_trees_bitwise(tree, packing.unpack(pk), "mixed roundtrip")
+    # slice packing (one layer) through the same spec
+    sl = jax.tree.map(lambda a: a[1], tree)
+    pk_sl = packing.pack(sl, spec=pk.spec, stacked=False)
+    _assert_trees_bitwise(sl, packing.unpack(pk_sl), "slice roundtrip")
+
+
+# ---------------------------------------------------------------------------
+# fused flat optimizer vs per-leaf optim.adam/adamw: bit parity on
+# mixed-dtype trees with odd leaf sizes
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("make_opt", [
+    adam, adamw,
+    # adamw at weight_decay=0 must keep adamw's update association
+    # (a*(m/d + 0*p)), which differs from adam's (a*m)/d in the last ulp
+    functools.partial(adamw, weight_decay=0.0),
+])
+def test_flat_update_bit_matches_per_leaf(make_opt):
+    ks = jax.random.split(jax.random.PRNGKey(3), 8)
+    tree = {
+        "w": jax.random.normal(ks[0], (37, 11), jnp.float32),
+        "scale": jnp.abs(jax.random.normal(ks[1], (129,), jnp.float32)),
+        "half": (jax.random.normal(ks[2], (7, 3, 5)) / 8).astype(
+            jnp.bfloat16),
+    }
+    opt = make_opt(lr=3e-3)
+    state = opt.init(tree)
+    grads = jax.tree.map(
+        lambda p, k: jax.random.normal(k, p.shape, jnp.float32),
+        tree, jax.tree.unflatten(jax.tree.structure(tree),
+                                 list(jax.random.split(ks[3], 3))))
+    # two chained steps so the parity covers zero AND warm moments; both
+    # sides run under jit — that is how the engines execute them, and
+    # XLA's fusion choices (FMA contraction) must agree for bitwise
+    # comparison to be meaningful
+    spec = packing.build_spec(tree, stacked=False)
+
+    @jax.jit
+    def ref_step(p, s, step):
+        return opt.update(grads, s, p, step)
+
+    @jax.jit
+    def flat_step(p, s, step):
+        w_pk = packing.pack(p, spec=spec, stacked=False)
+        g_pk = packing.pack(grads, spec=spec, stacked=False)
+        s_pk = packing.pack_opt(spec, s, stacked=False)
+        new_p, new_m, new_v = {}, {}, {}
+        for key in sorted(w_pk.segs):
+            p2, m2, v2 = opt.flat_update(
+                w_pk.segs[key], g_pk.segs[key],
+                s_pk["m"].segs[key], s_pk["v"].segs[key], step)
+            new_p[key], new_m[key], new_v[key] = p2, m2, v2
+        return (packing.unpack(packing.Packed(new_p, spec)),
+                packing.unpack_opt(
+                    spec, {"m": packing.Packed(new_m, spec),
+                           "v": packing.Packed(new_v, spec)}))
+
+    ref_p, ref_s = tree, opt.init(tree)
+    got_p, got_s = tree, opt.init(tree)
+    for step in (jnp.int32(0), jnp.int32(1)):
+        ref_p, ref_s = ref_step(ref_p, ref_s, step)
+        got_p, got_s = flat_step(got_p, got_s, step)
+        _assert_trees_bitwise(ref_p, got_p, f"{opt.name} flat params")
+        _assert_trees_bitwise(ref_s, got_s, f"{opt.name} flat slots")
+
+
+def test_flat_update_absent_for_non_adam():
+    assert lamb().flat_update is None
+    assert sgd().flat_update is None
+    assert adam().flat_update is not None
+    assert adamw().flat_update is not None
+
+
+# ---------------------------------------------------------------------------
+# packed vs unpacked: bit-identical schedules (mirrors test_prefetch.py)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", ["l2l", "l2l-p"])
+def test_pack_grads_bit_identical(name, make_engine):
+    cfg = _cfg()
+    batch = make_batch(cfg, 4, 16)
+    params = LayeredModel(cfg).init_params(jax.random.PRNGKey(0))
+    outs = {}
+    for pk in (False, True):
+        eng = make_engine(name, exec_cfg=ExecutionConfig(
+            n_microbatches=2, pack_params=pk))
+        outs[pk] = eng.grads(params, batch)
+    assert float(outs[False][0]) == float(outs[True][0])
+    _assert_trees_bitwise(outs[False][1], outs[True][1], f"{name} grads")
+
+
+@pytest.mark.parametrize("name", ["l2l", "l2l-p"])
+@pytest.mark.parametrize("make_opt", [adam, lamb])
+def test_pack_updates_bit_identical(name, make_opt, make_engine):
+    """Full train step: the fused flat-segment optimizer (adam) and the
+    unpack->per-leaf->repack fallback (lamb) must both produce new params
+    and opt state bitwise equal to the unpacked schedule."""
+    cfg = _cfg()
+    batch = make_batch(cfg, 4, 16)
+    states = {}
+    for pk in (False, True):
+        eng = make_engine(name, optimizer=make_opt(lr=1e-3),
+                          exec_cfg=ExecutionConfig(n_microbatches=2,
+                                                   pack_params=pk))
+        state, m = eng.train_step(eng.init(jax.random.PRNGKey(0)), batch)
+        params, opt = state.params, state.legacy_opt()
+        if pk:
+            opt = packing.unpack_opt_state(opt, params)
+            params = packing.unpack_params(params)
+        states[pk] = (params, opt, float(m["loss"]))
+    assert states[False][2] == states[True][2]
+    _assert_trees_bitwise(states[False][0], states[True][0],
+                          f"{name}/{make_opt().name} params")
+    _assert_trees_bitwise(states[False][1], states[True][1],
+                          f"{name}/{make_opt().name} opt state")
+
+
+def test_pack_covers_multi_group_and_mem_archs(make_engine):
+    """Transition/mem handling (whisper enc-dec) and MoE/MLA layers relay
+    through the same packed scans; composed with prefetch_depth=1 the
+    double buffer carries the flat segments."""
+    for arch in ("whisper-base", "deepseek-v2-lite-16b"):
+        cfg = _cfg(arch)
+        batch = make_batch(cfg, 4, 16)
+        params = LayeredModel(cfg).init_params(jax.random.PRNGKey(0))
+        outs = {}
+        for pk in (False, True):
+            eng = make_engine("l2l-p", arch, exec_cfg=ExecutionConfig(
+                n_microbatches=2, prefetch_depth=1, pack_params=pk))
+            outs[pk] = eng.grads(params, batch)
+        _assert_trees_bitwise(outs[False][1], outs[True][1], arch)
+
+
+def test_pack_prefill_and_decode_bit_identical(make_engine):
+    cfg = _cfg("granite-3-8b")
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                              cfg.vocab_size)
+    outs = {}
+    for pk in (False, True):
+        eng = make_engine("l2l", "granite-3-8b", exec_cfg=ExecutionConfig(
+            n_microbatches=2, pack_params=pk))
+        params = eng.model.init_params(jax.random.PRNGKey(0))
+        logits = eng.prefill(params, {"tokens": make_batch(cfg, 4, 16)[
+            "tokens"]})
+        caches, last = eng.decode_init(params, toks, live_seq=16)
+        step_logits, _ = eng.decode_step(
+            params, caches, jnp.argmax(last, -1)[:, None].astype(jnp.int32),
+            jnp.int32(8))
+        outs[pk] = (logits, last, step_logits)
+    for a, b in zip(outs[False], outs[True]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# facade boundary: checkpoints stay unpacked; states interchange
+# ---------------------------------------------------------------------------
+def test_pack_checkpoint_interchange(make_engine):
+    cfg = _cfg()
+    batch = make_batch(cfg, 4, 16)
+    e_pk = make_engine("l2l-p", optimizer=adam(lr=1e-3),
+                       exec_cfg=ExecutionConfig(n_microbatches=2,
+                                                pack_params=True))
+    e_up = make_engine("l2l-p", optimizer=adam(lr=1e-3),
+                       exec_cfg=ExecutionConfig(n_microbatches=2))
+    state, _ = e_pk.train_step(e_pk.init(jax.random.PRNGKey(0)), batch)
+    with tempfile.TemporaryDirectory() as d:
+        e_pk.save(d, state, step=1)
+        st_up, step_up = e_up.restore(d)       # packed ckpt -> unpacked run
+        st_pk, step_pk = e_pk.restore(d)       # ... -> packed run
+    assert step_up == step_pk == 1
+    _assert_trees_bitwise(packing.unpack_params(state.params),
+                          st_up.params, "ckpt params (unpacked view)")
+    _assert_trees_bitwise(state.params, st_pk.params,
+                          "ckpt params (packed view)")
+    _assert_trees_bitwise(state.opt_state, st_pk.opt_state,
+                          "ckpt opt state (packed view)")
+
+
+def test_baseline_engine_ignores_pack(make_engine):
+    eng = make_engine("baseline", exec_cfg=ExecutionConfig(
+        n_microbatches=2, pack_params=True))
+    assert not eng.exec_cfg.pack_params
+    state = eng.init(jax.random.PRNGKey(0))
+    assert not any(packing.is_packed(g) for g in state.params["groups"])
+
+
+# ---------------------------------------------------------------------------
+# memory model: packed transit changes the DMA issue counts, not bytes
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("mode", ["l2l", "l2l_p"])
+def test_memory_estimate_packed_transit_counts(mode):
+    model = LayeredModel(get_config("bert-large"))
+    r0 = estimate(model, batch=32, seq=512, n_microbatches=8, mode=mode,
+                  offload_stash=True)
+    r1 = estimate(model, batch=32, seq=512, n_microbatches=8, mode=mode,
+                  offload_stash=True, pack_params=True)
+    # bytes are layout-independent ...
+    assert r1.total_device == r0.total_device
+    assert r1.total_host == r0.total_host
+    # ... the DMA issue count per relayed layer is what collapses
+    assert r0.relay_copies_weights > 1
+    assert r1.relay_copies_weights == 1
+    if mode == "l2l_p":
+        assert r0.relay_copies_opt == 2 * r0.relay_copies_weights
+        assert r1.relay_copies_opt == 2   # one copy per (m, v) slot
+    else:
+        assert r0.relay_copies_opt == r1.relay_copies_opt == 0
+
+
+def test_engine_memory_estimate_threads_pack(make_engine):
+    e0 = make_engine("l2l-p", exec_cfg=ExecutionConfig(n_microbatches=2))
+    e1 = make_engine("l2l-p", exec_cfg=ExecutionConfig(n_microbatches=2,
+                                                       pack_params=True))
+    r0 = e0.memory_estimate(batch=8, seq=64)
+    r1 = e1.memory_estimate(batch=8, seq=64)
+    assert r0.relay_copies_weights > 1 and r1.relay_copies_weights == 1
+    assert r1.total_device == r0.total_device
+
+
+# ---------------------------------------------------------------------------
+# satellite regression pin: embedding lookup is unscaled (the historical
+# `x * (1.0 if rmsnorm else 1.0)` dead expression is gone)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("norm_type", ["rmsnorm", "layernorm"])
+def test_embed_tokens_unscaled(norm_type):
+    from repro.models.common import embed_tokens
+    cfg = get_config("bert-large", "smoke").replace(norm_type=norm_type)
+    model = LayeredModel(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                              cfg.vocab_size)
+    dt = jnp.dtype(cfg.dtype)
+    got = embed_tokens(params["embed"], toks, cfg, dt)
+    raw = jnp.take(params["embed"]["tok"], toks, axis=0).astype(dt)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(raw))
+    # train/prefill (prepare) and decode (decode_embed) agree on the same
+    # unscaled rows
+    static = {"embed": params["embed"], "head": params["head"]}
+    x_train, _ = model.prepare(static, {"tokens": toks})
+    np.testing.assert_array_equal(np.asarray(x_train), np.asarray(raw))
+    x_dec = model.decode_embed(static, toks[:, :1], jnp.int32(0))
+    np.testing.assert_array_equal(np.asarray(x_dec),
+                                  np.asarray(raw[:, :1]))
