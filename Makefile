@@ -1,6 +1,6 @@
 PY ?= python
 
-.PHONY: verify test bench bench-relay bench-pack quickstart
+.PHONY: verify test bench bench-relay bench-pack bench-group quickstart
 
 # tier-1 verification (quick: slow multi-device subprocess tests deselected)
 verify:
@@ -19,10 +19,16 @@ bench-relay:
 	PYTHONPATH=src $(PY) benchmarks/fig_overlap.py --tiny
 
 # packed-relay A/B (pack x weight_stream x prefetch); writes
-# BENCH_pack.json at the repo root and fails on a >10% packed-vs-unpacked
-# throughput regression
+# BENCH_pack.json at the repo root and fails on a >10% geometric-mean
+# packed-vs-unpacked throughput regression across the combos
 bench-pack:
 	PYTHONPATH=src $(PY) benchmarks/fig_pack.py --tiny
+
+# layer-group relay sweep (layers_per_relay x prefetch x pack) with the
+# analytic G*(1+k) footprint per point; writes BENCH_group.json at the
+# repo root — the footprint-vs-throughput curve
+bench-group:
+	PYTHONPATH=src $(PY) benchmarks/fig_group.py --tiny
 
 quickstart:
 	PYTHONPATH=src $(PY) examples/quickstart.py

@@ -3,7 +3,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import get_config
 from repro.data.synthetic import DataConfig, SyntheticLM

@@ -1,0 +1,163 @@
+"""Layer-group relay sweep: layers_per_relay x prefetch_depth x pack.
+
+The paper's §3.1 device footprint is "the executing **layer(s)**" —
+plural: the unified relay executor makes that a free knob.  Relaying G
+stacked layers per stop trades a G·(1 + prefetch_depth) layer-slot HBM
+footprint for ceil(N/G) relay stops (fewer, larger DMAs — the
+MegaTrain-style transfer-batching axis), while k-deep prefetch overlaps
+up to k of those transfers with compute.  This benchmark times the l2l-p
+train step over the {layers_per_relay} x {prefetch_depth} x {pack_params}
+grid (weight_stream on — the EPS scenario where the tradeoff exists),
+pairs every point with its analytic device/EPS footprint from
+``memory_estimate`` (eqs. 2/3 with the G·(1+k) transit term), and writes
+``BENCH_group.json`` at the repo root — the paper's
+footprint-vs-throughput curve in one artifact.
+
+Backend notes: on CPU (this container / CI) memory-space placements are
+logical no-ops (``eps.memories_supported``), so the sweep bounds the pure
+schedule/layout restructuring cost and checks nothing regresses; the DMA
+batching effect itself is a TPU observable.
+
+Usage::
+
+    PYTHONPATH=src python benchmarks/fig_group.py --tiny
+    PYTHONPATH=src python -m benchmarks.fig_group --steps 10
+"""
+import argparse
+import itertools
+import json
+import os
+import sys
+
+if __package__ in (None, ""):                       # `python benchmarks/...`
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+
+import jax
+
+from benchmarks.common import lm_batch, time_train_step
+from repro import engine as engines
+from repro.configs.base import get_config
+from repro.core.eps import memories_supported
+from repro.core.schedule import ExecutionConfig
+from repro.optim import adam
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_OUT = os.path.join(REPO_ROOT, "BENCH_group.json")
+
+GROUPS = (1, 2, 4)
+PREFETCH = (0, 1, 2)
+PACKS = (False, True)
+
+
+def time_combo(cfg, batch, *, ub, group, prefetch, pack, iters, rounds=3):
+    eng = engines.create(
+        "l2l-p", cfg,
+        ExecutionConfig(n_microbatches=ub, weight_stream=True,
+                        offload_stash=True, prefetch_depth=prefetch,
+                        layers_per_relay=group, pack_params=pack),
+        optimizer=adam(lr=1e-4), donate=False)
+    best, compile_s, loss = time_train_step(eng, batch, iters=iters,
+                                            rounds=rounds)
+    B, S = batch["tokens"].shape
+    mem = eng.memory_estimate(batch=B, seq=S)
+    return {"layers_per_relay": group, "prefetch_depth": prefetch,
+            "pack_params": pack,
+            "s_per_step": best,
+            "steps_per_s": 1.0 / max(best, 1e-12),
+            "compile_s": round(compile_s, 3),
+            "loss": loss,
+            # the footprint side of the curve (analytic, eqs. 2/3):
+            # G*(1+k) layer slots on device, ceil(N/G) relay stops
+            "params_device_bytes": mem.params_device,
+            "total_device_bytes": mem.total_device,
+            "total_host_bytes": mem.total_host,
+            "relay_stops": mem.relay_stops,
+            "relay_copies_weights": mem.relay_copies_weights,
+            "relay_copies_opt": mem.relay_copies_opt}
+
+
+def run(quick=False, *, arch="bert-large", steps=None, batch=None,
+        seq=None, ub=None, out_path=DEFAULT_OUT):
+    iters = steps or (5 if quick else 8)
+    B = batch or (8 if quick else 16)
+    S = seq or (64 if quick else 128)
+    UB = ub or (4 if quick else 8)
+    # n_layers=6 keeps the smoke sweep honest: G=4 leaves a remainder
+    # stop (6 = 4 + 2) and G=2 divides evenly
+    cfg = get_config(arch, "smoke").replace(n_layers=6)
+    data = lm_batch(cfg, B, S)
+    prefetches = PREFETCH[:2] if quick else PREFETCH
+
+    results = [time_combo(cfg, data, ub=UB, group=g, prefetch=k, pack=pk,
+                          iters=iters)
+               for g, k, pk in itertools.product(GROUPS, prefetches, PACKS)]
+
+    def rate(g, k, pk):
+        return next(r["steps_per_s"] for r in results
+                    if r["layers_per_relay"] == g
+                    and r["prefetch_depth"] == k
+                    and r["pack_params"] == pk)
+
+    # grouping speedup at each (prefetch, pack) point: G vs G=1 — the
+    # throughput side of the footprint-vs-throughput curve
+    speedup_group = {
+        f"g{g}_pf{k}_pack{int(pk)}": rate(g, k, pk) / rate(1, k, pk)
+        for g, k, pk in itertools.product(GROUPS[1:], prefetches, PACKS)}
+    record = {
+        "benchmark": "fig_group_relay",
+        "backend": jax.default_backend(),
+        "memories_supported": memories_supported(),
+        "arch": arch, "variant": "smoke", "n_layers": cfg.n_layers,
+        "batch": B, "seq": S, "n_microbatches": UB, "timed_steps": iters,
+        "results": results,
+        "speedup_group_vs_single": speedup_group,
+        "notes": (
+            "Each row pairs measured steps/s with the analytic "
+            "G*(1+prefetch) device footprint and ceil(N/G) relay-stop "
+            "count — plot params_device_bytes vs steps_per_s for the "
+            "paper's footprint-vs-throughput curve.  On CPU the "
+            "placements are no-ops, so ratios bound schedule/layout "
+            "overhead only; the fewer-larger-DMAs win is a TPU "
+            "observable."),
+    }
+    with open(out_path, "w") as f:
+        json.dump(record, f, indent=1)
+
+    print("\n# Layer-group relay sweep (l2l-p train step)")
+    print("group,prefetch,pack,s_per_step,steps_per_s,"
+          "params_device_MiB,relay_stops,compile_s")
+    for r in results:
+        print(f"{r['layers_per_relay']},{r['prefetch_depth']},"
+              f"{int(r['pack_params'])},{r['s_per_step']:.4f},"
+              f"{r['steps_per_s']:.2f},"
+              f"{r['params_device_bytes']/2**20:.1f},{r['relay_stops']},"
+              f"{r['compile_s']}")
+    for k, v in sorted(speedup_group.items()):
+        print(f"# group/single steps/s ({k}): {v:.3f}")
+    if not memories_supported():
+        print("# NOTE: backend drops memory-space transfers — this sweep "
+              "bounds schedule/layout overhead; the one-DMA-per-G-layers "
+              "win needs TPU")
+    print(f"# wrote {out_path}")
+    return record
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="smoke shapes + 5 timed steps x3 rounds (CI)")
+    ap.add_argument("--arch", default="bert-large")
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--batch", type=int, default=None)
+    ap.add_argument("--seq", type=int, default=None)
+    ap.add_argument("--ub", type=int, default=None)
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args(argv)
+    return run(quick=args.tiny, arch=args.arch, steps=args.steps,
+               batch=args.batch, seq=args.seq, ub=args.ub,
+               out_path=args.out)
+
+
+if __name__ == "__main__":
+    main()

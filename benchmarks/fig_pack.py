@@ -54,6 +54,11 @@ COMBOS = list(itertools.product((False, True), (False, True), (0, 1)))
 # CI gate: a >10% packed-vs-unpacked throughput regression fails the run.
 # (Packing is supposed to be free-to-winning; on CPU the placements are
 # no-ops so this bounds the pure pack/unpack/fused-optimizer overhead.)
+# Gated on the GEOMETRIC MEAN across the (weight_stream, prefetch)
+# combos, not the per-combo minimum: on CPU ``weight_stream`` is a no-op
+# axis (same program twice), so per-combo ratios carry ~5pp of paired
+# measurement noise on shared runners — the PR-3-era record sat at 0.903
+# on one combo — while a REAL pack regression moves every combo at once.
 REGRESSION_FLOOR = 0.9
 
 
@@ -127,18 +132,23 @@ def run(quick=False, *, arch="bert-large", steps=None, batch=None,
             "vs pack_0_* (CPU bounds schedule overhead only; the DMA "
             "effect itself is a TPU observable)."),
     }
-    with open(out_path, "w") as f:
-        json.dump(record, f, indent=1)
-
     print("\n# Packed relay A/B (l2l-p train step)")
     print("pack,weight_stream,prefetch,s_per_step,steps_per_s,compile_s")
     for r in results:
         print(f"{int(r['pack_params'])},{int(r['weight_stream'])},"
               f"{r['prefetch_depth']},{r['s_per_step']:.4f},"
               f"{r['steps_per_s']:.2f},{r['compile_s']}")
+    geomean = 1.0
+    for v in speedup_pack.values():
+        geomean *= v
+    geomean **= 1.0 / len(speedup_pack)
+    record["speedup_packed_geomean"] = geomean
+    with open(out_path, "w") as f:
+        json.dump(record, f, indent=1)
     for k, v in speedup_pack.items():
-        tag = "ok" if v >= REGRESSION_FLOOR else "REGRESSION"
-        print(f"# packed/unpacked steps/s ({k}): {v:.3f} [{tag}]")
+        print(f"# packed/unpacked steps/s ({k}): {v:.3f}")
+    gate = "ok" if geomean >= REGRESSION_FLOOR else "REGRESSION"
+    print(f"# packed/unpacked geomean: {geomean:.3f} [{gate}]")
     for k, v in speedup_prefetch.items():
         print(f"# prefetch-on/off steps/s ({k}): {v:.3f}")
     if not memories_supported():
@@ -146,14 +156,13 @@ def run(quick=False, *, arch="bert-large", steps=None, batch=None,
               "bounds schedule/layout overhead; the one-DMA-per-layer "
               "win needs TPU")
     print(f"# wrote {out_path}")
-    bad = {k: round(v, 3) for k, v in speedup_pack.items()
-           if v < REGRESSION_FLOOR}
-    if bad:
+    if geomean < REGRESSION_FLOOR:
         # RuntimeError (not SystemExit) so benchmarks/run.py's
         # collect-and-continue harness records the failure and keeps going
         raise RuntimeError(
             f"pack_params regressed beyond the 10% gate "
-            f"(floor {REGRESSION_FLOOR}): {bad}")
+            f"(geomean {geomean:.3f} < floor {REGRESSION_FLOOR}): "
+            f"{ {k: round(v, 3) for k, v in speedup_pack.items()} }")
     return record
 
 

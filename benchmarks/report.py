@@ -18,8 +18,8 @@ def load_dir(path):
 def dryrun_table(mesh):
     recs = load_dir(f"experiments/dryrun/baseline/{mesh}")
     out = []
-    out.append(f"| arch | shape | status | compile (s) | device temp (GiB) |"
-               f" device args (GiB) | collectives (count) |")
+    out.append("| arch | shape | status | compile (s) | device temp (GiB) |"
+               " device args (GiB) | collectives (count) |")
     out.append("|---|---|---|---|---|---|---|")
     for _, r in recs:
         if r.get("status") == "skip":

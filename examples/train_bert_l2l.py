@@ -9,7 +9,6 @@ driver (repro.launch.train) with a width override that lands at ~100M
 parameters, and saves a checkpoint at the end.
 """
 import argparse
-import sys
 
 
 def main():

@@ -8,8 +8,7 @@ config (``full()``) plus a reduced smoke-test variant (``smoke()``).
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import Optional, Tuple
+from dataclasses import dataclass
 
 # ---------------------------------------------------------------------------
 # Architecture families

@@ -10,7 +10,7 @@ asserted bit-comparable (Fig 3/4's learning-curve equivalence claim).
 """
 from __future__ import annotations
 
-from typing import Callable, Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 
 from repro.core import packing
 from repro.core.eps import EPSPlacements, make_placements
+from repro.core.relay import Stream, relay_scan
 from repro.core.schedule import ExecutionConfig
 from repro.models.common import materialize, abstract
 
@@ -30,11 +31,17 @@ def make_serve_step(model, exec_cfg: ExecutionConfig,
 
     ``caches``: tuple over decode groups of stacked per-layer cache trees.
     ``token``: (B, 1) int32;  ``cur_pos``: scalar int32 absolute position.
+
+    The serving weight relay (EPS streaming, prefetch ring, packed slots,
+    G-layer groups) is the same ``relay_scan`` the training scans use:
+    with ``prefetch_depth >= 1`` the next slot's weights stream from the
+    EPS while the current layers attend against their caches.
     """
     if placements is None:
         placements = make_placements(exec_cfg, len(model.groups))
     PF = exec_cfg.prefetch_depth
     PK = exec_cfg.pack_params
+    G = exec_cfg.layers_per_relay
 
     dgroups = model.decode_groups()
     # map decode-group index -> model group index (for placements)
@@ -48,37 +55,17 @@ def make_serve_step(model, exec_cfg: ExecutionConfig,
         for di, group in enumerate(dgroups):
             wp = placements.weights[gidx[di]]
 
-            if PF:
-                # double-buffered serving relay: layer l+1's weights stream
-                # from the EPS while layer l attends against its cache
-                relay, _ = placements.relay(gidx[di],
-                                            params["groups"][gidx[di]])
+            def body(x_c, slots, cache_l, _g=group):
+                (w,) = slots
+                if PK:
+                    w = packing.unpack(w)
+                x2, cache2 = _g.decode(w, x_c, cache_l, None, ctx)
+                return x2, cache2
 
-                def body_pf(carry, xs, _g=group, _r=relay):
-                    x_c, w_cur = carry
-                    i, cache_l = xs
-                    w_nxt = _r.prefetch(i)
-                    w = packing.unpack(w_cur) if PK else w_cur
-                    x2, cache2 = _g.decode(w, x_c, cache_l, None, ctx)
-                    return (x2, w_nxt), cache2
-
-                (x, _), nc = jax.lax.scan(
-                    body_pf, (x, relay.warmup()),
-                    (jnp.arange(relay.n), caches[di]),
-                    unroll=exec_cfg.unroll_layers)
-            else:
-                def body(x_c, wc, _g=group, _wp=wp):
-                    w, cache_l = wc
-                    w = _wp.dev(w)
-                    if PK:
-                        w = packing.unpack(w)
-                    x2, cache2 = _g.decode(w, x_c, cache_l, None, ctx)
-                    return x2, cache2
-
-                x, nc = jax.lax.scan(body, x,
-                                     (params["groups"][gidx[di]],
-                                      caches[di]),
-                                     unroll=exec_cfg.unroll_layers)
+            x, nc = relay_scan(
+                body, x, (Stream(wp, params["groups"][gidx[di]]),),
+                xs=caches[di], group=G, prefetch=PF,
+                unroll=exec_cfg.unroll_layers)
             new_caches.append(nc)
         logits = model.decode_logits(static, x)
         return logits, tuple(new_caches)

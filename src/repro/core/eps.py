@@ -6,8 +6,15 @@ two tiers are XLA memory spaces: ``pinned_host`` (host DRAM behind the
 chip's DMA engines) and ``device`` (HBM).  A ``Placement`` bundles the
 device_put helpers the L2L scans use:
 
-* ``host(tree)``   — put a pytree into pinned_host, preserving sharding
-* ``dev(tree)``    — fetch into device HBM (the per-layer "relay")
+* ``host(tree)``       — put a pytree into pinned_host, preserving sharding
+* ``dev(tree)``        — fetch into device HBM (the per-layer "relay")
+* ``dev_grouped(tree)`` — fetch a G-layer relay SLOT (leading stop axis)
+  into HBM; on a mesh the layer-slice pspecs shift one dim right
+  (``P(None, *spec)``), elsewhere it is ``dev``.
+
+This module only builds placements; the scan-level relay logic — which
+layer/group a slot holds, how many DMAs are in flight — lives entirely in
+``repro.core.relay`` (the one module issuing relay DMAs).
 
 Shardings are explicit NamedShardings derived from the param/activation
 PartitionSpecs because ``jax.device_put`` inside jit needs a concrete
@@ -18,19 +25,19 @@ from __future__ import annotations
 from typing import Callable, NamedTuple, Optional
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P, SingleDeviceSharding
 
 
 class Placement(NamedTuple):
-    host: Callable   # tree -> tree (pinned_host)
-    dev: Callable    # tree -> tree (device HBM)
+    host: Callable                           # tree -> tree (pinned_host)
+    dev: Callable                            # tree -> tree (device HBM)
+    dev_grouped: Optional[Callable] = None   # G-layer slot -> device HBM
     enabled: bool = True
 
 
 def noop_placement() -> Placement:
     ident = lambda t: t
-    return Placement(ident, ident, enabled=False)
+    return Placement(ident, ident, ident, enabled=False)
 
 
 def memories_supported() -> bool:
@@ -57,15 +64,20 @@ def single_device_placement(device=None) -> Placement:
     def to(tree, sh):
         return jax.tree.map(lambda a: jax.device_put(a, sh), tree)
 
-    return Placement(lambda t: to(t, h), lambda t: to(t, d))
+    dev = lambda t: to(t, d)
+    return Placement(lambda t: to(t, h), dev, dev)
 
 
 def mesh_placement(mesh, pspec_tree) -> Placement:
     """Sharded placement: pspec_tree mirrors the trees that will be moved
-    (or is a single P applied to every leaf)."""
+    (or is a single P applied to every leaf).  ``dev_grouped`` moves a
+    G-layer relay slot: the per-layer-slice specs apply one dim to the
+    right of the (never sharded) leading stop axis."""
 
-    def build(tree, kind):
+    def build(tree, kind, lead=False):
         def one(a, spec):
+            if lead:
+                spec = P(None, *spec)
             sh = NamedSharding(mesh, spec, memory_kind=kind)
             return jax.device_put(a, sh)
         if isinstance(pspec_tree, P):
@@ -73,79 +85,21 @@ def mesh_placement(mesh, pspec_tree) -> Placement:
         return jax.tree.map(one, tree, pspec_tree)
 
     return Placement(lambda t: build(t, "pinned_host"),
-                     lambda t: build(t, "device"))
+                     lambda t: build(t, "device"),
+                     lambda t: build(t, "device", lead=True))
 
 
 class EPSPlacements(NamedTuple):
     """Per-use-site placements for one training/serving setup.
 
-    ``weights[g]`` / ``opts[g]`` move one *layer slice* of group g (trees
-    without the stacked leading axis); ``stash`` moves boundary-activation
-    trees (a single P is broadcast to every leaf)."""
+    ``weights[g]`` / ``opts[g]`` move one relay slot of group g (a layer
+    slice, or a G-layer sub-stack via ``dev_grouped``); ``stash`` moves
+    boundary-activation trees (a single P is broadcast to every leaf).
+    The slot schedule itself (prefetch ring, layer groups) is
+    ``repro.core.relay``'s job."""
     weights: tuple           # tuple[Placement], one per layer group
     opts: tuple              # tuple[Placement], one per layer group
     stash: Placement
-
-    def relay(self, gi: int, stacked, *, reverse: bool = False,
-              opt_stacked=None):
-        """Two-slot (double-buffered) view over group ``gi``'s stacked
-        host-resident trees — the ``prefetch_depth=1`` relay."""
-        opt_relay = (Relay(self.opts[gi], opt_stacked, reverse=reverse)
-                     if opt_stacked is not None else None)
-        return Relay(self.weights[gi], stacked, reverse=reverse), opt_relay
-
-
-# ---------------------------------------------------------------------------
-# Double-buffered relay (prefetch_depth = 1)
-# ---------------------------------------------------------------------------
-def layer_slice(stacked, i):
-    """Slice layer ``i`` out of a stacked ``(N, ...)`` tree with a traced
-    index (the same dynamic-slice class of op the scan itself emits)."""
-    return jax.tree.map(
-        lambda a: jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False),
-        stacked)
-
-
-class Relay:
-    """Async-aware two-slot relay over one group's stacked host tree.
-
-    The relayed "tree" is whatever the schedule streams: the per-leaf
-    pytree, or — with ``ExecutionConfig.pack_params`` — a
-    ``packing.Packed`` node whose leaves are the per-dtype flat segments,
-    so each ``prefetch`` issues ONE large host->HBM DMA per segment
-    instead of one per param leaf.
-
-    The schedule is issue-early / consume-late: ``warmup()`` starts the
-    DMA for the first layer before the scan, and inside iteration ``i``
-    the body calls ``prefetch(i)`` — a ``jax.device_put`` into device HBM
-    whose *result is only consumed by the next iteration* (through the
-    scan carry).  Nothing blocks inside jit: there is no
-    ``jax.block_until_ready`` anywhere on this path, so XLA's
-    latency-hiding scheduler is free to keep the copy for slot B in
-    flight while slot A's microbatch loop computes.  On backends that
-    drop memory-space transfers (CPU — see ``memories_supported``) the
-    restructured scan computes bit-identical results with no-op moves.
-    """
-
-    def __init__(self, placement: Placement, stacked, *,
-                 reverse: bool = False):
-        self.placement = placement
-        self.stacked = stacked
-        self.n = jax.tree.leaves(stacked)[0].shape[0]
-        self.reverse = reverse
-
-    def warmup(self):
-        """Fetch the first slot (layer 0, or N-1 for a reverse scan)."""
-        return self.placement.dev(
-            layer_slice(self.stacked, self.n - 1 if self.reverse else 0))
-
-    def prefetch(self, i):
-        """Issue the DMA for the layer the NEXT iteration will consume
-        (l+1 forward, l-1 reverse; the final iteration re-fetches its own
-        edge layer so shapes stay uniform — that copy is dropped)."""
-        nxt = (jnp.maximum(i - 1, 0) if self.reverse
-               else jnp.minimum(i + 1, self.n - 1))
-        return self.placement.dev(layer_slice(self.stacked, nxt))
 
 
 def pspecs_like(pspec_tree, target_tree):

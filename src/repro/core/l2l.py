@@ -1,58 +1,57 @@
 """L2L (layer-to-layer) execution engine — Algorithms 3 and 4 of the paper.
 
 The loop inversion is the whole trick: the LAYER loop is outer, the
-MICROBATCH loop is inner.  In JAX the outer loop is a ``lax.scan`` over the
+MICROBATCH loop is inner.  In JAX the outer loop is a relay scan over the
 group's stacked ``(N_layers, ...)`` parameters — when those live in
-``pinned_host`` (ExecutionConfig.weight_stream) each iteration's slice is a
-host->HBM relay, i.e. the EPS feeding the device one layer at a time.
+``pinned_host`` (ExecutionConfig.weight_stream) each relay stop is a
+host->HBM copy, i.e. the EPS feeding the device one slot at a time.
 
 Forward (Alg 3 lines 2-6):   for l in layers: for u in microbatches:
     run layer l on microbatch u; stash ONLY the layer-boundary activation
     (optionally offloaded to pinned_host — eq. (4) constant memory).
 
-Backward (Alg 3 lines 7-11 / Alg 4): reverse scan over layers; per
+Backward (Alg 3 lines 7-11 / Alg 4): reverse relay over layers; per
 microbatch, RECOMPUTE the layer forward via ``jax.vjp`` from the stashed
 boundary input (the paper's rematerialization), accumulate (dw, dx, dmem).
 With ``eager_optimizer`` (Alg 4 / L2L-p) the optimizer for layer l runs
-inside the same reverse-scan step, overlapping the backward of layer l-1 —
-and because the scan body's dw is produced under pjit, the per-layer
-gradient all-reduce is issued layer-by-layer too ("parallel reduce").
+inside the same reverse step, overlapping the backward of layer l-1 —
+and because the body's dw is produced under pjit, the per-layer gradient
+all-reduce is issued layer-by-layer too ("parallel reduce").
 
 Gradient identity: this computes exactly the gradients of
 baseline-with-accumulated-gradients (Algorithm 2) — asserted by tests.
 
-Relay pipelining (``ExecutionConfig.prefetch_depth``): with depth 1 every
-layer scan here is double-buffered — the scan carry holds a prefetched HBM
-slot for the NEXT layer's weights (and optimizer slice in L2L-p) whose
-host->device copy was issued before the current layer's microbatch loop,
-so the EPS DMA overlaps compute instead of serializing with it (paper
-§3.1's "the executing layer(s)", plural).  Depth 0 keeps the historical
-fetch-inside-the-iteration schedule.  Both depths compute bit-identical
-results (asserted by tests/test_prefetch.py).
+Relay transport: every layer scan here (train forward, reverse backward,
+Alg-3 trailing update, prefill) is a per-layer body handed to
+``repro.core.relay.relay_scan``, which owns the EPS transport exactly
+once — weight streaming, the ``prefetch_depth``-deep ring of in-flight
+HBM slots, ``pack_params`` flat-buffer slots, and ``layers_per_relay``
+G-layer relay groups (one DMA covers G stacked layers; the paper §3.1's
+"the executing layer(s)", plural).  Every (G, prefetch_depth,
+pack_params) combination computes bit-identical results
+(tests/test_relay.py, tests/test_prefetch.py, tests/test_packing.py).
 
 Packed relay (``ExecutionConfig.pack_params``): the stacked group params
 (and, in L2L-p, the optimizer slots) arrive as ``packing.Packed`` flat
-buffers — one contiguous segment per dtype — so each relay above moves
-ONE large array per layer per direction instead of N per-leaf copies.
-The scans unpack a zero-copy device-side view for the layer apply, keep
-every gradient-side reduction (scale, clip, finiteness) on the original
-tree so the math is bit-identical to the unpacked schedule, and run the
-eager optimizer directly on the flat segments through
-``Optimizer.flat_update`` (the fused Pallas kernel) when available,
-falling back to unpack -> per-leaf update -> repack otherwise
-(tests/test_packing.py asserts bit-identity both ways).
+buffers — one contiguous segment per dtype — so each relay stop moves
+ONE large array per direction instead of N per-leaf copies.  The bodies
+unpack a zero-copy device-side view for the layer apply, keep every
+gradient-side reduction (scale, clip, finiteness) on the original tree
+so the math is bit-identical to the unpacked schedule, and run the eager
+optimizer directly on the flat segments through ``Optimizer.flat_update``
+(the fused Pallas kernel) when available, falling back to unpack ->
+per-leaf update -> repack otherwise (tests/test_packing.py).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import packing
-from repro.core.eps import (EPSPlacements, Relay, make_placements,
-                            noop_placement)
+from repro.core.eps import EPSPlacements, make_placements
+from repro.core.relay import Stream, relay_scan
 from repro.core.schedule import ExecutionConfig
 from repro.optim import Optimizer, clip_by_norm, tree_global_norm
 
@@ -122,6 +121,8 @@ def make_train_step(model, optimizer: Optimizer, exec_cfg: ExecutionConfig,
     UB = exec_cfg.n_microbatches
     PF = exec_cfg.prefetch_depth
     PK = exec_cfg.pack_params
+    G = exec_cfg.layers_per_relay
+    UNROLL = exec_cfg.unroll_layers
 
     def run_opt(grads, opt_l, w, step_i):
         """Apply the optimizer — on the EPS host when host_optimizer (the
@@ -135,7 +136,6 @@ def make_train_step(model, optimizer: Optimizer, exec_cfg: ExecutionConfig,
     packed_update = _make_packed_update(optimizer, exec_cfg, run_opt)
 
     def step(params, opt_state, batch):
-        cfg = model.cfg
         static = {"embed": params["embed"], "head": params["head"]}
         batch_ub = _reshape_ub(batch, UB)
         W_total = jnp.maximum(batch["mask"].sum(), 1.0)
@@ -175,8 +175,9 @@ def make_train_step(model, optimizer: Optimizer, exec_cfg: ExecutionConfig,
             ctx = model.train_ctx(ub_slice, group)
             wp = placements.weights[gi]
 
-            def fwd_compute(x_c, w, _g=group, _ctx=ctx, _mem=mem_ub):
-                """Microbatch loop of one layer (w already in HBM)."""
+            def fwd_body(x_c, slots, _x, _g=group, _ctx=ctx, _mem=mem_ub):
+                """Microbatch loop of one layer (slot already in HBM)."""
+                (w,) = slots
                 if PK:
                     w = packing.unpack(w)   # zero-copy views on the buffer
                 def ub_body(aux_c, args):
@@ -188,31 +189,12 @@ def make_train_step(model, optimizer: Optimizer, exec_cfg: ExecutionConfig,
                         y, aux = _g.apply(w, x_i, m_i, _ctx)
                     return aux_c + aux.astype(jnp.float32), y
                 xs = x_c if _mem is None else (x_c, _mem)
-                return jax.lax.scan(ub_body, jnp.float32(0.0), xs)
+                aux_g, y_ub = jax.lax.scan(ub_body, jnp.float32(0.0), xs)
+                return y_ub, (placements.stash.host(x_c), aux_g)
 
-            if PF:
-                # double buffer: layer l+1's host->HBM DMA is issued at the
-                # top of iteration l (no data dependence on x_c, so it
-                # overlaps the microbatch loop); the slot arrives via carry
-                relay, _ = placements.relay(gi, params["groups"][gi])
-
-                def fwd_layer_pf(carry, i, _fc=fwd_compute, _r=relay):
-                    x_c, w_cur = carry
-                    w_nxt = _r.prefetch(i)
-                    aux_g, y_ub = _fc(x_c, w_cur)
-                    return (y_ub, w_nxt), (placements.stash.host(x_c), aux_g)
-
-                (x_ub, _), (stash_g, aux_per_layer) = jax.lax.scan(
-                    fwd_layer_pf, (x_ub, relay.warmup()),
-                    jnp.arange(relay.n), unroll=exec_cfg.unroll_layers)
-            else:
-                def fwd_layer(x_c, w, _fc=fwd_compute, _wp=wp):
-                    aux_g, y_ub = _fc(x_c, _wp.dev(w))
-                    return y_ub, (placements.stash.host(x_c), aux_g)
-
-                x_ub, (stash_g, aux_per_layer) = jax.lax.scan(
-                    fwd_layer, x_ub, params["groups"][gi],
-                    unroll=exec_cfg.unroll_layers)
+            x_ub, (stash_g, aux_per_layer) = relay_scan(
+                fwd_body, x_ub, (Stream(wp, params["groups"][gi]),),
+                group=G, prefetch=PF, unroll=UNROLL)
             stashes.append(stash_g)
             aux_total = aux_total + aux_per_layer.sum() / UB
 
@@ -257,13 +239,22 @@ def make_train_step(model, optimizer: Optimizer, exec_cfg: ExecutionConfig,
                 lambda a: jnp.zeros(a.shape, a.dtype), mem_ub)
                 if has_mem else None)
 
-            def bwd_compute(core, w_dev, stash_l, opt_l, _g=group, _ctx=ctx,
-                            _mem=mem_ub, _wp=wp, _op=op, _has_mem=has_mem):
-                """Recompute-vjp microbatch loop (+ eager opt) of one layer;
-                ``w_dev``/``opt_l`` are already the HBM-resident slices.
+            streams = [Stream(wp, params["groups"][gi])]
+            if exec_cfg.eager_optimizer:
+                # L2L-p: the optimizer slice rides the same relay ring;
+                # the updated-weight write-back (stacked ys) is consumed
+                # only after the scan — it overlaps the next backward.
+                streams.append(Stream(op, opt_state["groups"][gi]))
+
+            def bwd_body(core, slots, stash_l, _g=group, _ctx=ctx,
+                         _mem=mem_ub, _wp=wp, _op=op, _has_mem=has_mem):
+                """Recompute-vjp microbatch loop (+ eager opt) of one
+                layer; the slots are already the HBM-resident slices.
                 With pack_params the vjp differentiates the UNPACKED view
                 and every gradient-side reduction below stays on the tree,
                 so the packed schedule's math is bit-identical."""
+                w_dev = slots[0]
+                opt_l = slots[1] if len(slots) > 1 else None
                 dx_c, dmem_c, gn_c, nf_c = core
                 w_tree = packing.unpack(w_dev) if PK else w_dev
                 stash_dev = placements.stash.dev(stash_l)
@@ -329,42 +320,9 @@ def make_train_step(model, optimizer: Optimizer, exec_cfg: ExecutionConfig,
                 return (dxin_ub, dmem_c, gn_c, nf_c), out
 
             core0 = (dx_ub, dmem_ub, gnorm_sq, nonfinite)
-            if PF:
-                # reverse relay: iteration l's carry already holds layer
-                # l's slot; issue layer l-1's DMA before the vjp loop.  For
-                # L2L-p the optimizer slice rides the same double buffer,
-                # and the updated-weight write-back (``out``, a stacked
-                # device->pinned_host ys) is consumed only after the scan —
-                # it overlaps the backward of layer l-1.
-                w_relay, o_relay = placements.relay(
-                    gi, params["groups"][gi], reverse=True,
-                    opt_stacked=(opt_state["groups"][gi]
-                                 if exec_cfg.eager_optimizer else None))
-
-                def bwd_layer_pf(carry, xs, _bc=bwd_compute, _wr=w_relay,
-                                 _or=o_relay):
-                    core, w_cur, opt_cur = carry
-                    i, stash_l = xs
-                    w_nxt = _wr.prefetch(i)
-                    opt_nxt = _or.prefetch(i) if _or is not None else None
-                    core, out = _bc(core, w_cur, stash_l, opt_cur)
-                    return (core, w_nxt, opt_nxt), out
-
-                opt0 = o_relay.warmup() if o_relay is not None else None
-                (core0, _, _), outs = jax.lax.scan(
-                    bwd_layer_pf, (core0, w_relay.warmup(), opt0),
-                    (jnp.arange(w_relay.n), stashes[gi]),
-                    reverse=True, unroll=exec_cfg.unroll_layers)
-            else:
-                def bwd_layer(carry, xs, _bc=bwd_compute, _wp=wp):
-                    w, stash_l, opt_l = xs
-                    return _bc(carry, _wp.dev(w), stash_l, opt_l)
-
-                core0, outs = jax.lax.scan(
-                    bwd_layer, core0,
-                    (params["groups"][gi], stashes[gi],
-                     opt_state["groups"][gi]),
-                    reverse=True, unroll=exec_cfg.unroll_layers)
+            core0, outs = relay_scan(
+                bwd_body, core0, streams, xs=stashes[gi], reverse=True,
+                group=G, prefetch=PF, unroll=UNROLL)
             dx_ub, dmem_ub, gnorm_sq, nonfinite = core0
             if exec_cfg.eager_optimizer:
                 new_group_params[gi], new_group_opt[gi] = outs
@@ -442,42 +400,25 @@ def make_train_step(model, optimizer: Optimizer, exec_cfg: ExecutionConfig,
                 {"embed": opt_state["embed"], "head": opt_state["head"]})
 
         if not exec_cfg.eager_optimizer:
-            # Alg 3: separate trailing loop over layers (still layer-major)
+            # Alg 3: separate trailing loop over layers (still layer-major).
+            # Triple relay: weight, gradient (shipped to the EPS by the
+            # backward, same placement as weights) and optimizer slots of
+            # the NEXT stop stream in while this one updates.
             for gi, group in enumerate(model.groups):
                 wp, op = placements.weights[gi], placements.opts[gi]
-                if PF:
-                    # triple relay: weight, gradient (shipped to the EPS by
-                    # the backward, same placement as weights) and opt
-                    # slices of layer l+1 stream in while l updates
-                    w_r, o_r = placements.relay(
-                        gi, params["groups"][gi],
-                        opt_stacked=opt_state["groups"][gi])
-                    g_r = Relay(wp, group_grads[gi])
+                streams = (Stream(wp, params["groups"][gi]),
+                           Stream(wp, group_grads[gi]),
+                           Stream(op, opt_state["groups"][gi]))
 
-                    def upd_layer_pf(carry, i, _wp=wp, _op=op, _wr=w_r,
-                                     _gr=g_r, _or=o_r):
-                        w_cur, g_cur, o_cur = carry
-                        nxt = (_wr.prefetch(i), _gr.prefetch(i),
-                               _or.prefetch(i))
-                        nw, no = (packed_update if PK else run_opt)(
-                            g_cur, o_cur, w_cur, opt_step)
-                        return nxt, (_wp.host(nw), _op.host(no))
+                def upd_body(_, slots, _x, _wp=wp, _op=op):
+                    w, g, o = slots
+                    nw, no = (packed_update if PK else run_opt)(
+                        g, o, w, opt_step)
+                    return None, (_wp.host(nw), _op.host(no))
 
-                    _, (nw_g, no_g) = jax.lax.scan(
-                        upd_layer_pf,
-                        (w_r.warmup(), g_r.warmup(), o_r.warmup()),
-                        jnp.arange(w_r.n), unroll=exec_cfg.unroll_layers)
-                else:
-                    def upd_layer(_, xs, _wp=wp, _op=op):
-                        w, g, o = xs
-                        nw, no = (packed_update if PK else run_opt)(
-                            _wp.dev(g), _op.dev(o), _wp.dev(w), opt_step)
-                        return None, (_wp.host(nw), _op.host(no))
-                    _, (nw_g, no_g) = jax.lax.scan(
-                        upd_layer, None,
-                        (params["groups"][gi], group_grads[gi],
-                         opt_state["groups"][gi]),
-                        unroll=exec_cfg.unroll_layers)
+                _, (nw_g, no_g) = relay_scan(
+                    upd_body, None, streams,
+                    group=G, prefetch=PF, unroll=UNROLL)
                 new_group_params[gi] = nw_g
                 new_group_opt[gi] = no_g
 
@@ -521,6 +462,7 @@ def make_prefill_fn(model, exec_cfg: ExecutionConfig,
     UB = exec_cfg.n_microbatches
     PF = exec_cfg.prefetch_depth
     PK = exec_cfg.pack_params
+    G = exec_cfg.layers_per_relay
 
     def prefill(params, batch):
         static = {"embed": params["embed"], "head": params["head"]}
@@ -547,7 +489,8 @@ def make_prefill_fn(model, exec_cfg: ExecutionConfig,
             ctx = model.train_ctx(ub_slice, group)
             wp = placements.weights[gi]
 
-            def fwd_compute(x_c, w, _g=group, _ctx=ctx, _mem=mem_ub):
+            def fwd_body(x_c, slots, _x, _g=group, _ctx=ctx, _mem=mem_ub):
+                (w,) = slots
                 if PK:
                     w = packing.unpack(w)
                 def ub_body(_, args):
@@ -559,26 +502,11 @@ def make_prefill_fn(model, exec_cfg: ExecutionConfig,
                     return None, y
                 xs = x_c if _mem is None else (x_c, _mem)
                 _, y_ub = jax.lax.scan(ub_body, None, xs)
-                return y_ub
+                return y_ub, None
 
-            if PF:
-                relay, _ = placements.relay(gi, params["groups"][gi])
-
-                def fwd_layer_pf(carry, i, _fc=fwd_compute, _r=relay):
-                    x_c, w_cur = carry
-                    w_nxt = _r.prefetch(i)
-                    return (_fc(x_c, w_cur), w_nxt), None
-
-                (x_ub, _), _ = jax.lax.scan(
-                    fwd_layer_pf, (x_ub, relay.warmup()),
-                    jnp.arange(relay.n), unroll=exec_cfg.unroll_layers)
-            else:
-                def fwd_layer(x_c, w, _fc=fwd_compute, _wp=wp):
-                    return _fc(x_c, _wp.dev(w)), None
-
-                x_ub, _ = jax.lax.scan(fwd_layer, x_ub,
-                                       params["groups"][gi],
-                                       unroll=exec_cfg.unroll_layers)
+            x_ub, _ = relay_scan(
+                fwd_body, x_ub, (Stream(wp, params["groups"][gi]),),
+                group=G, prefetch=PF, unroll=exec_cfg.unroll_layers)
 
         # last-position logits per microbatch
         def head_one(x_i):
@@ -603,6 +531,7 @@ def make_grads_fn(model, exec_cfg: ExecutionConfig,
         weight_stream=exec_cfg.weight_stream,
         prefetch_depth=exec_cfg.prefetch_depth,
         pack_params=exec_cfg.pack_params,
+        layers_per_relay=exec_cfg.layers_per_relay,
         eager_optimizer=False, clip_mode="none")
     return _make_loss_and_grads(model, cfg_noeager, placements)
 

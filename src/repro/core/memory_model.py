@@ -11,11 +11,9 @@ computed from exact layer/activation shapes, not hand-waving.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional
-
 import jax
-import numpy as np
 
+from repro.core.relay import n_stops
 from repro.models.common import is_spec, param_bytes
 from repro.models.model import LayeredModel
 
@@ -35,16 +33,21 @@ class MemoryReport:
     stash_on_host: bool
     total_device: int = 0
     total_host: int = 0
-    # DMA issue counts per relayed layer per direction (l2l modes).  The
+    # DMA issue counts per relay STOP per direction (l2l modes).  The
     # BYTES of eq. (2)/(3)'s transit terms are layout-independent; what
     # pack_params changes is how many host<->HBM copies carry them: the
     # per-leaf relay issues one copy per param leaf (and per optimizer
     # slot leaf in l2l_p), the packed relay one copy per dtype segment
-    # (weights) / per optimizer slot (m, v).  Small copies are
-    # latency-bound, so this count — not the byte total — is the eq. (6)
-    # relay-term driver the packed layout attacks.
+    # (weights) / per optimizer slot (m, v).  A stop covers
+    # ``layers_per_relay`` stacked layers in the SAME copies (the slice
+    # just grows a leading axis), so ``relay_stops`` — total stops one
+    # pass makes over the depth, sum of ceil(n_layers/G) per group — is
+    # the trip-count multiplier.  Small copies are latency-bound, so
+    # relay_stops * relay_copies_* — not the byte total — is the eq. (6)
+    # relay-term driver the packed/grouped layouts attack.
     relay_copies_weights: int = 0
     relay_copies_opt: int = 0
+    relay_stops: int = 0
 
     def finalize(self):
         self.total_device = (self.params_device + self.activations
@@ -61,12 +64,21 @@ def _layer_bytes(model: LayeredModel, dtype_bytes: int):
     return max(per_layer), sum(totals)
 
 
+def _slot_bytes(model: LayeredModel, dtype_bytes: int, group: int) -> int:
+    """Largest relay-slot bytes: a slot holds min(G, n_layers) stacked
+    layers (G may exceed a shallow group's depth — the slot is then just
+    that group's whole stack), so the peak is over groups of that."""
+    return max(param_bytes(g.spec, dtype_bytes) * min(group, g.n_layers)
+               for g in model.groups)
+
+
 def estimate(model: LayeredModel, *, batch: int, seq: int,
              n_microbatches: int = 1, mode: str = "l2l",
              offload_stash: bool = False, opt_slots: int = 2,
              act_dtype_bytes: int = 2, param_dtype_bytes: int = 4,
              prefetch_depth: int = 0,
-             pack_params: bool = False) -> MemoryReport:
+             pack_params: bool = False,
+             layers_per_relay: int = 1) -> MemoryReport:
     """Modes:
       baseline      eq. (1): everything device-resident
       baseline_remat eq. (1) with the N*L*mb*X term reduced to boundaries
@@ -75,17 +87,21 @@ def estimate(model: LayeredModel, *, batch: int, seq: int,
       l2l_p         eq. (3)/(4): + weight/grad transit buffers; stash to
                     host when offload_stash (the constant-memory variant)
 
-    ``prefetch_depth`` (l2l modes only) makes the paper's "the executing
-    layer(s)'s footprint" plural explicit: the double-buffered relay keeps
-    a second full layer slot set in HBM (compute slot + in-flight DMA
-    slot), so the device weight-transit footprint is (1+depth)x eq. (2)/(3)
-    — still O(1) in depth N.
+    ``prefetch_depth`` (k) and ``layers_per_relay`` (G) — l2l modes only —
+    make the paper's "the executing layer(s)'s footprint" plural explicit:
+    the relay ring keeps G·(1 + k) full layer slots in HBM (one G-layer
+    compute slot + k in-flight DMA slots), so the device weight-transit
+    footprint is G·(1 + k) × eq. (2)/(3)'s — still O(1) in depth N.  A
+    slot never holds more than a group's whole stack, so G is capped at
+    the deepest group's depth in the footprint.  G also divides the
+    relay trip count: one pass makes ``relay_stops`` = sum over groups
+    of ceil(n_layers / G) stops instead of N.
 
     ``pack_params`` (l2l modes only) does NOT change any byte term — the
     transit buffers of eq. (2)/(3) hold the same elements whether they
     arrive as one flat segment or N leaf arrays.  What it changes is the
     reported ``relay_copies_*`` DMA issue counts: per-leaf relay pays one
-    host<->HBM copy per param leaf per layer per direction (plus one per
+    host<->HBM copy per param leaf per stop per direction (plus one per
     optimizer-slot leaf in l2l_p), the packed relay one copy per dtype
     segment (weights) and one per optimizer slot (m, v) — the
     latency-bound small-transfer term eq. (6) hides inside its bandwidth
@@ -113,25 +129,34 @@ def estimate(model: LayeredModel, *, batch: int, seq: int,
             activations=act,
             stash=stash, stash_on_host=False).finalize()
 
+    G = max(1, layers_per_relay)
     transit = 2 if mode == "l2l" else 4            # eq.(2) vs eq.(3)
-    transit *= 1 + prefetch_depth                  # double-buffered relay
-    # DMA issues per relayed layer per direction (largest group): the
+    transit *= 1 + prefetch_depth                  # ring of G-layer slots
+    # a slot holds min(G, group depth) layers — G beyond the deepest
+    # group adds no residency (the remainder-only pass)
+    slot = _slot_bytes(model, param_dtype_bytes, G)
+    # DMA issues per relay stop per direction (largest group): the
     # per-leaf relay pays one copy per leaf; the packed relay one per
     # dtype segment (a single param_dtype here) / per optimizer slot.
+    # Grouping keeps these counts (the slice grows a leading G axis) but
+    # divides the trip count: relay_stops = sum ceil(n_layers / G)
+    # (relay.n_stops — the executor's own arithmetic).
     n_leaves = max(len(jax.tree.leaves(g.spec, is_leaf=is_spec))
                    for g in model.groups)
     copies_w = 1 if pack_params else n_leaves
     copies_o = ((opt_slots if pack_params else n_leaves * opt_slots)
                 if mode == "l2l_p" else 0)
+    stops = sum(n_stops(g.n_layers, G) for g in model.groups)
     return MemoryReport(
-        params_device=transit * L_max,
+        params_device=transit * slot,
         params_host=L_total,
         opt_state=(1 + opt_slots) * L_total,       # EPS-resident
         activations=ub * X,                        # recompute working set
         stash=n_layers * batch * A,
         stash_on_host=offload_stash,
         relay_copies_weights=copies_w,
-        relay_copies_opt=copies_o).finalize()
+        relay_copies_opt=copies_o,
+        relay_stops=stops).finalize()
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,225 @@
+"""Unified relay executor — the ONE place that issues layer-relay DMAs.
+
+Every layer-major scan in the repo (L2L train forward, reverse backward,
+Alg-3 trailing update, prefill, serve-decode) is the same composition:
+
+* one or more **streams** — stacked ``(N, ...)`` host-resident trees
+  (weights, shipped gradients, optimizer slots; plain pytrees or
+  ``packing.Packed`` flat buffers) relayed stop-by-stop into device HBM,
+* a **prefetch ring** — ``prefetch_depth + 1`` HBM slots, generalizing
+  the old two-slot double buffer: the DMA for stop ``i + k`` is issued at
+  the top of stop ``i``'s body, so up to ``k`` transfers are in flight
+  while one slot computes (``prefetch_depth = 0`` keeps the historical
+  fetch-inside-the-iteration schedule),
+* **layer groups** — ``layers_per_relay = G`` relays G stacked layers per
+  stop: ONE dynamic-slice + ``device_put`` per stream covers G layers
+  (one copy per leaf, or one per dtype segment when packed), and the body
+  runs per layer over the G-layer sub-stack inside the stop.  The paper's
+  §3.1 "the executing **layer(s)**" is plural exactly here: the device
+  footprint is G·(1 + prefetch_depth) layer slots, traded against
+  ceil(N/G) relay stops instead of N.
+
+``relay_scan`` owns all of that; consumers only write a per-layer body.
+The composition is a pure SCHEDULE/layout change: for any (G,
+prefetch_depth, pack_params) the math is bit-identical to the G=1,
+depth-0, unpacked scan (asserted by tests/test_relay.py).
+
+Mechanics worth knowing:
+
+* The main scan runs over the ``N // G`` full stops; a depth not
+  divisible by G leaves a short remainder stop of ``N mod G`` layers that
+  is executed outside the scan (after it in a forward pass, before it in
+  a reverse pass, preserving layer order) with its own — unoverlapped —
+  fetch.  With G = 1 there is never a remainder and the emitted program
+  is exactly the historical per-layer scan.
+* Nothing blocks inside jit: fetches are plain ``jax.device_put`` whose
+  results are consumed one-or-more iterations later through the scan
+  carry, so XLA's latency-hiding scheduler keeps ring copies in flight
+  while the current slot computes.  On backends that drop memory-space
+  transfers (CPU — see ``eps.memories_supported``) the restructured scan
+  computes identical results with no-op moves.
+* ``ys`` keep layer order: a reverse scan stacks a layer's outputs at its
+  forward index (matching ``lax.scan(reverse=True)`` semantics), and
+  grouped stops stack their G per-layer outputs in forward order before
+  the scan stacks the stops.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.eps import Placement
+
+
+class Stream(NamedTuple):
+    """One stacked host-resident tree relayed by a ``relay_scan``."""
+    placement: Placement
+    stacked: Any                 # (N, ...) tree (possibly packing.Packed)
+
+
+def layer_slice(stacked, i):
+    """Slice layer ``i`` out of a stacked ``(N, ...)`` tree with a traced
+    index (the same dynamic-slice class of op the scan itself emits)."""
+    return jax.tree.map(
+        lambda a: jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False),
+        stacked)
+
+
+def group_slice(stacked, start, size: int):
+    """Slice ``size`` consecutive layers starting at ``start`` (traced or
+    static) — the G-layer relay slot, leading axis kept."""
+    return jax.tree.map(
+        lambda a: jax.lax.dynamic_slice_in_dim(a, start, size, axis=0),
+        stacked)
+
+
+def _index(tree, j: int):
+    return jax.tree.map(lambda a: a[j], tree)
+
+
+def _stack(ys_list):
+    return jax.tree.map(lambda *ls: jnp.stack(ls), *ys_list)
+
+
+def n_stops(n_layers: int, group: int) -> int:
+    """Relay stops one pass makes over ``n_layers`` (ceil division)."""
+    g = max(1, group)
+    return -(-n_layers // g)
+
+
+def relay_scan(body: Callable, init, streams: Sequence[Stream], *,
+               xs=None, reverse: bool = False, group: int = 1,
+               prefetch: int = 0, unroll=False):
+    """Run ``body`` once per layer under the unified relay schedule.
+
+    ``body(carry, slots, x) -> (carry, ys)`` is PER LAYER:
+
+    * ``slots`` — tuple of HBM-resident single-layer trees, one per
+      stream (already fetched; no leading axis),
+    * ``x`` — the layer's slice of ``xs`` (None when ``xs`` is None),
+    * ``ys`` — per-layer outputs, stacked to ``(N, ...)`` in layer order
+      (or None).
+
+    Returns ``(carry, ys)`` like ``lax.scan``; ``reverse=True`` walks
+    layers N-1..0 but still stacks ``ys`` in forward order.
+    """
+    streams = tuple(streams)
+    assert streams, "relay_scan needs at least one stream"
+    n = jax.tree.leaves(streams[0].stacked)[0].shape[0]
+    G = max(1, int(group))
+    K = max(0, int(prefetch))
+    S = n // G                    # full stops covered by the main scan
+    R = n - S * G                 # remainder stop (0 when G divides N)
+
+    def fetch(start, size: int):
+        """ONE host->HBM copy per stream (per leaf / dtype segment) for a
+        ``size``-layer slot — the only DMA issue site in the repo."""
+        if G == 1:
+            return tuple(s.placement.dev(layer_slice(s.stacked, start))
+                         for s in streams)
+        return tuple(
+            (s.placement.dev_grouped or s.placement.dev)(
+                group_slice(s.stacked, start, size))
+            for s in streams)
+
+    def run_stop(carry, slots, start, size: int):
+        """Per-layer loop over one fetched G-layer slot (static trips)."""
+        x_stop = None if xs is None else group_slice(xs, start, size)
+        ys = [None] * size
+        order = range(size - 1, -1, -1) if reverse else range(size)
+        for j in order:
+            slot_j = tuple(_index(s, j) for s in slots)
+            x_j = None if x_stop is None else _index(x_stop, j)
+            carry, ys[j] = body(carry, slot_j, x_j)
+        if all(y is None for y in ys):
+            return carry, None
+        return carry, _stack(ys)
+
+    def run_remainder(carry):
+        return run_stop(carry, fetch(S * G, R), S * G, R)
+
+    ys_rem = None
+    if reverse and R:
+        # reverse execution visits the trailing short stop first
+        carry, ys_rem = run_remainder(init)
+        init = carry
+
+    ys_main = None
+    if S > 0:
+        idxs = jnp.arange(S)
+        if K == 0 and G == 1:
+            # historical per-layer scan, reproduced exactly: streams and
+            # xs ride the scan's native xs slicing; the fetch happens at
+            # the top of the consuming iteration
+            def stop_body(carry, scan_x):
+                host_slots, x = scan_x
+                slots = tuple(s.placement.dev(t)
+                              for s, t in zip(streams, host_slots))
+                return body(carry, slots, x)
+
+            carry, ys_main = jax.lax.scan(
+                stop_body, init, (tuple(s.stacked for s in streams), xs),
+                reverse=reverse, unroll=unroll)
+        elif K == 0:
+            def stop_body(carry, i):
+                return run_stop(carry, fetch(i * G, G), i * G, G)
+
+            carry, ys_main = jax.lax.scan(stop_body, init, idxs,
+                                          reverse=reverse, unroll=unroll)
+        else:
+            # K-deep ring: the carry holds the slots for stops i..i+K-1
+            # (i-K+1..i reversed); the body consumes ring[0] and issues
+            # the DMA for stop i+K (i-K) before the per-layer loop, so up
+            # to K transfers overlap compute.  Edge iterations re-fetch a
+            # clamped edge stop; those copies are dropped.
+            def nxt(i):
+                return (jnp.maximum(i - K, 0) if reverse
+                        else jnp.minimum(i + K, S - 1))
+
+            if G == 1:
+                # per-layer xs still ride the scan's native slicing
+                def stop_body(carry_ring, scan_x):
+                    i, x = scan_x
+                    carry, ring = carry_ring
+                    fetched = fetch(nxt(i) * G, G)
+                    carry, ys = body(carry, ring[0], x)
+                    return (carry, ring[1:] + (fetched,)), ys
+
+                scan_xs = (idxs, xs)
+            else:
+                def stop_body(carry_ring, i):
+                    carry, ring = carry_ring
+                    fetched = fetch(nxt(i) * G, G)
+                    carry, ys = run_stop(carry, ring[0], i * G, G)
+                    return (carry, ring[1:] + (fetched,)), ys
+
+                scan_xs = idxs
+
+            first, step = (S - 1, -1) if reverse else (0, 1)
+            ring0 = tuple(
+                fetch(min(max(first + step * d, 0), S - 1) * G, G)
+                for d in range(K))
+            (carry, _), ys_main = jax.lax.scan(
+                stop_body, (init, ring0), scan_xs, reverse=reverse,
+                unroll=unroll)
+    else:
+        carry = init
+
+    if not reverse and R:
+        carry, ys_rem = run_remainder(carry)
+
+    return carry, _combine_ys(ys_main, ys_rem, S, G)
+
+
+def _combine_ys(ys_main, ys_rem, n_full_stops: int, group: int):
+    """(S, G, ...) main-scan ys + (R, ...) remainder ys -> (N, ...)."""
+    if group == 1 or ys_main is None:
+        return ys_main if ys_rem is None else ys_rem
+    flat = jax.tree.map(
+        lambda a: a.reshape((n_full_stops * group,) + a.shape[2:]), ys_main)
+    if ys_rem is None:
+        return flat
+    return jax.tree.map(lambda a, b: jnp.concatenate([a, b], axis=0),
+                        flat, ys_rem)

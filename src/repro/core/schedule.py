@@ -11,8 +11,22 @@ Maps the paper's knobs onto one frozen config (consumed through the
 
 ``offload_stash`` is eq. (4): boundary activations live in pinned_host
 between forward and backward.  ``weight_stream`` is the EPS proper: the
-stacked layer params (and optimizer state) are resident in pinned_host and
-relayed to device memory one layer at a time by the scan.
+stacked layer params (and optimizer state) are resident in pinned_host
+and relayed to device memory by the unified relay executor
+(``repro.core.relay``).  Three orthogonal knobs shape that relay:
+
+* ``layers_per_relay`` (G) — layers moved per relay stop: one DMA (or one
+  packed segment copy) covers G stacked layers, and the microbatch loop
+  runs the G-layer sub-stack before the next stop;
+* ``prefetch_depth`` (k) — in-flight HBM slots beyond the executing one:
+  a ring of k + 1 slots whose host->device copies are issued k stops
+  ahead of their consumer (0 = historical fetch-in-iteration);
+* ``pack_params`` — slot transport layout: per-dtype flat segments
+  (one copy per segment) vs per-leaf pytrees (one copy per leaf).
+
+The device weight footprint is G·(1 + k) layer slots — the paper §3.1's
+"the executing **layer(s)**", plural, made tunable — while every (G, k,
+pack) combination computes bit-identical results (tests/test_relay.py).
 """
 from __future__ import annotations
 
@@ -26,14 +40,22 @@ class ExecutionConfig:
     offload_stash: bool = False     # eq.(4): stash -> pinned_host
     weight_stream: bool = False     # EPS: params/opt live in pinned_host
     # --- relay pipelining -------------------------------------------------
-    # 0 = fetch layer l's weights at the top of its own scan iteration
-    #     (the copy is serialized with the layer's compute);
-    # 1 = double buffer: the scan carry holds a prefetched HBM slot for
-    #     layer l+1 (l-1 in the reverse scan) whose host->device DMA was
-    #     issued BEFORE layer l's microbatch loop ran, so the transfer
-    #     overlaps compute and the device holds "the executing layer(s)"
-    #     (paper §3.1, plural): one compute slot + one transfer slot.
+    # 0 = fetch a relay stop's weights at the top of its own scan
+    #     iteration (the copy is serialized with the stop's compute);
+    # k >= 1: the scan carry holds a ring of k prefetched HBM slots whose
+    #     host->device DMAs were issued k stops BEFORE their consumer
+    #     iteration (stop i+k forward, i-k reverse), so up to k transfers
+    #     overlap compute: one compute slot + k transfer slots in HBM.
+    #     k = 1 is the historical double buffer.
     prefetch_depth: int = 0
+    # --- layer-group scheduling -------------------------------------------
+    # G >= 1 stacked layers relayed per stop: one DMA (one copy per leaf,
+    # or per dtype segment with pack_params) covers G layers, the inner
+    # microbatch loop runs the G-layer sub-stack, and reverse/trailing/
+    # decode relays iterate group-wise (ceil(N/G) stops).  Device weight
+    # footprint becomes G * (1 + prefetch_depth) layer slots — the
+    # paper's "executing layer(s)" footprint traded against relay stops.
+    layers_per_relay: int = 1
     # --- packed relay -----------------------------------------------------
     # Coalesce each layer's weight pytree (and, with eager_optimizer, its
     # optimizer-slot pytree) into contiguous per-dtype flat buffers
@@ -72,5 +94,7 @@ class ExecutionConfig:
     def __post_init__(self):
         assert self.n_microbatches >= 1
         assert self.clip_mode in ("none", "per_layer")
-        assert self.prefetch_depth in (0, 1), \
-            "prefetch_depth: 0 (no pipelining) or 1 (double buffer)"
+        assert self.prefetch_depth >= 0, \
+            "prefetch_depth: k in-flight relay slots (0 = no pipelining)"
+        assert self.layers_per_relay >= 1, \
+            "layers_per_relay: G >= 1 layers moved per relay stop"

@@ -27,7 +27,7 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.models.common import ParamSpec, is_spec
+from repro.models.common import is_spec
 
 
 def _axis_size(mesh: Mesh, name) -> int:

@@ -243,6 +243,7 @@ class Engine:
         kw.setdefault("offload_stash", self.exec_cfg.offload_stash)
         kw.setdefault("prefetch_depth", self.exec_cfg.prefetch_depth)
         kw.setdefault("pack_params", self.exec_cfg.pack_params)
+        kw.setdefault("layers_per_relay", self.exec_cfg.layers_per_relay)
         return estimate(self.model, batch=batch, seq=seq,
                         mode=self.memory_mode, **kw)
 

@@ -24,10 +24,13 @@ def placements_for(model, exec_cfg, mesh=None, rules=None,
     specs and the sharding ``rules`` (defaulting to the production train
     rules for the config).
 
-    The same per-slice placements serve both relay depths: with
-    ``exec_cfg.prefetch_depth == 1`` the L2L scans build a two-slot
-    ``eps.Relay`` view over them (compute slot + in-flight DMA slot), so
-    nothing here grows — only how often a slice is in HBM at once.
+    The same per-slice placements serve every relay schedule: the
+    unified executor (``repro.core.relay``) builds its
+    ``prefetch_depth + 1``-slot ring and ``layers_per_relay``-layer
+    group slots over them (grouped slots fetch through
+    ``Placement.dev_grouped``, which shifts the layer-slice pspecs one
+    dim right of the leading stop axis), so nothing here grows with G or
+    k — only how many slices are in HBM at once.
 
     With ``exec_cfg.pack_params`` the relayed trees are ``packing.Packed``
     flat buffers (one leaf per dtype segment), which cannot reuse the

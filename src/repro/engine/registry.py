@@ -48,10 +48,12 @@ def create(name: str, model, exec_cfg=None, *,
     ``model`` is a ModelConfig (a LayeredModel is built internally) or an
     already-built LayeredModel.  ``exec_overrides`` patches fields onto
     ``exec_cfg`` (or the default config) without the caller rebuilding a
-    frozen ExecutionConfig — e.g. ``exec_overrides={"prefetch_depth": 1}``
-    for the double-buffered relay or ``{"pack_params": True}`` for the
-    packed flat-buffer relay + fused optimizer.  Remaining keyword args
-    are forwarded
+    frozen ExecutionConfig — e.g. ``exec_overrides={"prefetch_depth": 2}``
+    for a deeper relay prefetch ring, ``{"pack_params": True}`` for the
+    packed flat-buffer relay + fused optimizer, or
+    ``{"layers_per_relay": 4}`` to relay four stacked layers per stop
+    (one DMA covers the group; device weight footprint G·(1 + k) layer
+    slots).  Remaining keyword args are forwarded
     to the engine constructor (``optimizer=``, ``mesh=``, ``rules=``,
     ``placements=``, ``donate=``).
     """

@@ -11,8 +11,7 @@ import jax.numpy as jnp
 
 import functools
 
-from repro.kernels.flash_attention import (flash_attention_bhsd,
-                                           flash_attention_bwd_bhsd,
+from repro.kernels.flash_attention import (flash_attention_bwd_bhsd,
                                            flash_attention_fwd_bhsd)
 from repro.kernels.fused_adam import fused_adam_flat
 from repro.kernels.rmsnorm import rmsnorm_2d

@@ -131,10 +131,15 @@ def make_exec_cfg(shape: InputShape, cfg: ModelConfig, mesh,
         offload_stash=(shape.kind == "train"),
         weight_stream=True,
         eager_optimizer=True,
-        # production relays are double-buffered: layer l+1's EPS DMA is in
-        # flight while layer l computes (override {"prefetch_depth": 0}
-        # for the serialized A/B baseline)
+        # production relays are double-buffered: the next stop's EPS DMA
+        # is in flight while the current one computes (override
+        # {"prefetch_depth": 0} for the serialized A/B baseline, k > 1
+        # for a deeper ring)
         prefetch_depth=1,
+        # one layer per relay stop by default; {"layers_per_relay": G} /
+        # dryrun --group G relays G stacked layers per DMA, trading a
+        # G*(1+prefetch) device footprint for ceil(N/G) relay stops
+        layers_per_relay=1,
         # packed relay is opt-in here (override {"pack_params": True} /
         # dryrun --pack 1): flat buffers replicate over model axes, so on
         # tensor-parallel meshes it trades sharded weight residency for

@@ -27,7 +27,7 @@ import numpy as np
 
 from repro.configs.base import INPUT_SHAPES, get_config, list_archs
 from repro.launch import mesh as mesh_mod
-from repro.launch.build import SKIPS, SkipCombo, build
+from repro.launch.build import SkipCombo, build
 
 COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                "collective-permute")
@@ -263,15 +263,23 @@ def main():
                     help="apply the §Perf beyond-paper fixes (grouped GQA "
                          "decode + local MoE dispatch) on top of the "
                          "paper-faithful schedule")
-    ap.add_argument("--prefetch", type=int, default=None, choices=[0, 1],
+    ap.add_argument("--prefetch", type=int, default=None,
                     help="override ExecutionConfig.prefetch_depth (the "
-                         "build default is 1: double-buffered EPS relay); "
+                         "build default is 1: double-buffered EPS relay): "
                          "0 compiles the serialized fetch-in-iteration "
-                         "schedule for A/B HLO comparison")
+                         "schedule, k >= 1 a k-deep prefetch ring — for "
+                         "A/B HLO comparison across depths")
+    ap.add_argument("--group", type=int, default=None,
+                    help="override ExecutionConfig.layers_per_relay "
+                         "(build default 1): relay G stacked layers per "
+                         "stop — one DMA per stop covers the group; the "
+                         "device weight footprint grows to G*(1+prefetch) "
+                         "layer slots while the stop count drops to "
+                         "ceil(N/G)")
     ap.add_argument("--pack", type=int, default=None, choices=[0, 1],
                     help="override ExecutionConfig.pack_params (build "
                          "default 0): 1 compiles the packed flat-buffer "
-                         "relay — one host<->HBM copy per layer per "
+                         "relay — one host<->HBM copy per relay stop per "
                          "direction — for A/B HLO comparison")
     args = ap.parse_args()
     cfg_patch = ({"grouped_decode_attn": True, "moe_ep_constraint": True}
@@ -279,15 +287,22 @@ def main():
     exec_overrides = {}
     if args.prefetch is not None:
         exec_overrides["prefetch_depth"] = args.prefetch
+    if args.group is not None:
+        exec_overrides["layers_per_relay"] = args.group
     if args.pack is not None:
         exec_overrides["pack_params"] = bool(args.pack)
     exec_overrides = exec_overrides or None
     if args.optimized and args.tag == "baseline":
         args.tag = "optimized"
+    # compose the knob values into the tag (with --optimized / custom
+    # tags) so no A/B sweep ever overwrites another's records under the
+    # same directory: every non-default multi-valued knob is spelled out
     if args.prefetch == 0:
-        # compose with --optimized / custom tags so the A/B never
-        # overwrites the prefetch-on records under the same directory
         args.tag += "-noprefetch"
+    elif args.prefetch is not None and args.prefetch != 1:
+        args.tag += f"-pf{args.prefetch}"
+    if args.group is not None and args.group != 1:
+        args.tag += f"-g{args.group}"
     if args.pack == 1:
         args.tag += "-packed"
 

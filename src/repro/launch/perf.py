@@ -79,8 +79,8 @@ def main():
             continue
         print(f"\n== {name}: {arch} x {shape_name} "
               f"({'multi' if args.multi else 'single'} pod)")
-        base = run_variant(arch, shape_name, args.multi, args.out,
-                           "baseline", {})
+        run_variant(arch, shape_name, args.multi, args.out,
+                    "baseline", {})
         for label, kw in variants:
             run_variant(arch, shape_name, args.multi, args.out, label, kw)
 

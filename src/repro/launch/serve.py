@@ -30,8 +30,12 @@ def main(argv=None):
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--cache-len", type=int, default=0)
     ap.add_argument("--weight-stream", action="store_true")
-    ap.add_argument("--prefetch", type=int, default=0, choices=[0, 1],
-                    help="1 = double-buffered decode weight relay")
+    ap.add_argument("--prefetch", type=int, default=0,
+                    help="k-deep decode weight-relay prefetch ring (0 = "
+                         "serialized fetch, 1 = double buffer)")
+    ap.add_argument("--group", type=int, default=1,
+                    help="G = layers per decode relay stop (one DMA "
+                         "covers G stacked layers)")
     ap.add_argument("--pack", action="store_true",
                     help="packed decode relay: one flat buffer per layer "
                          "per dtype instead of per-leaf copies")
@@ -43,7 +47,8 @@ def main(argv=None):
     cfg = get_config(args.arch, args.variant)
     eng = engines.create("l2l", cfg, ExecutionConfig(
         weight_stream=args.weight_stream, prefetch_depth=args.prefetch,
-        pack_params=args.pack, decode_window=args.window))
+        layers_per_relay=args.group, pack_params=args.pack,
+        decode_window=args.window))
     params = eng.model.init_params(jax.random.PRNGKey(args.seed))
 
     live = args.cache_len or (args.window if args.window

@@ -50,9 +50,16 @@ def main(argv=None):
                          "instead of the eager L2L-p schedule")
     ap.add_argument("--offload-stash", action="store_true")
     ap.add_argument("--weight-stream", action="store_true")
-    ap.add_argument("--prefetch", type=int, default=0, choices=[0, 1],
-                    help="1 = double-buffered EPS relay (layer l+1 "
-                         "streams in while l computes)")
+    ap.add_argument("--prefetch", type=int, default=0,
+                    help="k = depth of the EPS relay prefetch ring: the "
+                         "DMA for relay stop i+k is issued while stop i "
+                         "computes (0 = serialized fetch, 1 = the "
+                         "classic double buffer, k>1 = deeper ring)")
+    ap.add_argument("--group", type=int, default=1,
+                    help="G = layers per relay stop: one DMA covers G "
+                         "stacked layers and the microbatch loop runs "
+                         "the G-layer sub-stack (device weight footprint "
+                         "G*(1+prefetch) layer slots)")
     ap.add_argument("--pack", action="store_true",
                     help="packed relay: coalesce each layer into one "
                          "flat buffer per dtype (one DMA per layer per "
@@ -100,6 +107,7 @@ def main(argv=None):
         offload_stash=args.offload_stash,
         weight_stream=args.weight_stream,
         prefetch_depth=args.prefetch,
+        layers_per_relay=args.group,
         pack_params=args.pack,
         host_optimizer=args.host_optimizer,
         clip_mode="per_layer" if args.clip > 0 else "none",

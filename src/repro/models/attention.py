@@ -9,7 +9,6 @@ All functions are pure; parameters come in as pytrees built from the
 from __future__ import annotations
 
 import math
-from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp

@@ -17,7 +17,6 @@ from __future__ import annotations
 
 from typing import NamedTuple, Optional
 
-import jax
 import jax.numpy as jnp
 
 from repro.models import attention as attn

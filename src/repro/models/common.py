@@ -25,7 +25,7 @@ from __future__ import annotations
 
 import math
 import os
-from typing import Any, Callable, NamedTuple, Optional, Tuple
+from typing import Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -1,7 +1,6 @@
 """Dense feed-forward blocks (gated SwiGLU-style and plain GELU MLP)."""
 from __future__ import annotations
 
-import jax.numpy as jnp
 
 from repro.models.common import ParamSpec, act_fn
 

@@ -273,7 +273,6 @@ class LayeredModel:
     # reference full forward (baseline engines + tests)
     # ------------------------------------------------------------------
     def full_loss(self, params, batch, remat: bool = False):
-        cfg = self.cfg
         static = {"embed": params["embed"], "head": params["head"]}
         x, mem = self.prepare(static, batch)
         aux_total = jnp.float32(0.0)

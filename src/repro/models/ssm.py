@@ -9,13 +9,11 @@
 """
 from __future__ import annotations
 
-import math
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.models.common import ParamSpec, apply_norm
+from repro.models.common import ParamSpec
 
 
 # ===========================================================================

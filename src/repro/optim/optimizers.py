@@ -18,7 +18,6 @@ optimizer [10]), sgd(+momentum).  All support an ``lr`` schedule function of
 """
 from __future__ import annotations
 
-import math
 from typing import Callable, NamedTuple, Optional
 
 import jax

@@ -41,10 +41,11 @@ def make_engine():
     from repro.core.schedule import ExecutionConfig
 
     def _make(name, arch="bert-large", exec_cfg=None, *, variant="smoke",
-              dtype="float32", optimizer=None, **kw):
-        cfg = get_config(arch, variant)
-        if dtype:
-            cfg = cfg.replace(dtype=dtype)
+              dtype="float32", optimizer=None, cfg=None, **kw):
+        if cfg is None:
+            cfg = get_config(arch, variant)
+            if dtype:
+                cfg = cfg.replace(dtype=dtype)
         kw.setdefault("donate", False)
         return engines.create(name, cfg,
                               exec_cfg or ExecutionConfig(n_microbatches=2),

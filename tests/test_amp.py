@@ -3,7 +3,6 @@ named future work, adapted to L2L's eager per-layer updates — driven
 through the Engine facade (the loss scale rides in TrainState)."""
 import jax
 import jax.numpy as jnp
-import pytest
 
 from conftest import make_batch
 from repro.configs.base import get_config

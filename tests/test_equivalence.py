@@ -7,7 +7,6 @@ import jax.numpy as jnp
 import pytest
 
 from conftest import make_batch
-from repro import engine as engines
 from repro.configs.base import get_config, list_archs
 from repro.core.schedule import ExecutionConfig
 from repro.optim import adam

@@ -1,9 +1,12 @@
 """Analytic memory/time model invariants (eqs. 1-7)."""
+import itertools
+
 import pytest
 
 from repro.configs.base import get_config
 from repro.core.memory_model import (estimate, for_config,
                                      paper_worked_example)
+from repro.core.schedule import ExecutionConfig
 from repro.models.model import LayeredModel
 
 
@@ -44,6 +47,84 @@ def test_stash_scales_with_batch_not_ub():
     a = estimate(model, batch=32, seq=512, n_microbatches=2, mode="l2l")
     b = estimate(model, batch=32, seq=512, n_microbatches=16, mode="l2l")
     assert a.stash == b.stash            # Table 5: ub count doesn't matter
+
+
+@pytest.mark.parametrize("mode", ["l2l", "l2l_p"])
+def test_group_prefetch_pack_grid(mode):
+    """Device weight-transit footprint is G*(1+k) x the base eq. (2)/(3)
+    term across the whole (layers_per_relay, prefetch_depth, pack_params)
+    grid; EPS residency and byte totals are knob-independent; the DMA
+    issue counts report per-stop copies x ceil(N/G) stops."""
+    model = LayeredModel(get_config("bert-large"))   # 24 layers, 1 group
+    base = estimate(model, batch=32, seq=512, n_microbatches=8, mode=mode,
+                    offload_stash=True)
+    n_leaves = base.relay_copies_weights
+    assert n_leaves > 1                      # per-leaf relay, many copies
+    for G, k, pk in itertools.product((1, 2, 3, 5), (0, 1, 2),
+                                      (False, True)):
+        r = estimate(model, batch=32, seq=512, n_microbatches=8, mode=mode,
+                     offload_stash=True, prefetch_depth=k,
+                     layers_per_relay=G, pack_params=pk)
+        tag = f"G={G} k={k} pack={pk}"
+        # the G*(1+k) device-footprint term (paper "layer(s)", plural)
+        assert r.params_device == G * (1 + k) * base.params_device, tag
+        # EPS residency and non-transit terms don't move
+        assert r.total_host == base.total_host, tag
+        assert r.stash == base.stash and r.activations == base.activations
+        # trip count: ceil(24 / G) stops per pass
+        assert r.relay_stops == -(-24 // G), tag
+        # per-stop copies: layout-dependent, group-independent
+        assert r.relay_copies_weights == (1 if pk else n_leaves), tag
+        if mode == "l2l_p":
+            assert r.relay_copies_opt == (2 if pk else 2 * n_leaves), tag
+        else:
+            assert r.relay_copies_opt == 0, tag
+
+
+def test_group_footprint_caps_at_group_depth():
+    """G beyond the deepest group adds no residency: the slot is at most
+    the group's whole stack (the remainder-only pass of relay_scan)."""
+    model = LayeredModel(get_config("bert-large").replace(n_layers=5))
+    r5 = estimate(model, batch=8, seq=128, mode="l2l_p",
+                  layers_per_relay=5)
+    r9 = estimate(model, batch=8, seq=128, mode="l2l_p",
+                  layers_per_relay=9)
+    assert r9.params_device == r5.params_device
+    assert r5.relay_stops == r9.relay_stops == 1
+
+
+def test_group_stops_sum_over_groups_and_remainder():
+    """Multi-group arch (whisper enc+dec): stops are the SUM of per-group
+    ceilings, so a depth not divisible by G pays its remainder stop."""
+    model = LayeredModel(get_config("whisper-base"))
+    depths = [g.n_layers for g in model.groups]
+    for G in (1, 2, 3, 5):
+        r = estimate(model, batch=8, seq=128, mode="l2l_p",
+                     layers_per_relay=G)
+        assert r.relay_stops == sum(-(-d // G) for d in depths)
+
+
+def test_baseline_mode_ignores_relay_knobs():
+    model = LayeredModel(get_config("bert-large"))
+    b0 = estimate(model, batch=32, seq=512, mode="baseline")
+    b1 = estimate(model, batch=32, seq=512, mode="baseline",
+                  prefetch_depth=2, layers_per_relay=4, pack_params=True)
+    assert b0.params_device == b1.params_device
+    assert b1.relay_stops == 0
+
+
+def test_engine_memory_estimate_threads_group(make_engine):
+    """Engine.memory_estimate must pass its exec config's G and k."""
+    e0 = make_engine("l2l-p", exec_cfg=ExecutionConfig(n_microbatches=2))
+    e1 = make_engine("l2l-p", exec_cfg=ExecutionConfig(
+        n_microbatches=2, layers_per_relay=2, prefetch_depth=2))
+    r0 = e0.memory_estimate(batch=8, seq=64)
+    r1 = e1.memory_estimate(batch=8, seq=64)
+    # smoke bert has 2 layers: G=2 slots, k=2 ring -> 2*(1+2) footprints
+    assert r1.params_device == 2 * (1 + 2) * r0.params_device
+    n_layers = sum(g.n_layers for g in e0.model.groups)
+    assert r0.relay_stops == n_layers
+    assert r1.relay_stops == -(-n_layers // 2)
 
 
 def test_paper_worked_example_numbers():

@@ -17,7 +17,6 @@ import numpy as np
 import pytest
 
 from conftest import make_batch
-from repro import engine as engines
 from repro.configs.base import get_config, list_archs
 from repro.core import packing
 from repro.core.memory_model import estimate
@@ -103,7 +102,6 @@ def test_flat_update_bit_matches_per_leaf(make_opt):
             jnp.bfloat16),
     }
     opt = make_opt(lr=3e-3)
-    state = opt.init(tree)
     grads = jax.tree.map(
         lambda p, k: jax.random.normal(k, p.shape, jnp.float32),
         tree, jax.tree.unflatten(jax.tree.structure(tree),

@@ -148,5 +148,8 @@ def test_registry_exec_overrides():
 
 
 def test_prefetch_depth_validated():
+    # k >= 2 is a legal ring depth since the unified relay executor;
+    # only negative depths are rejected
+    assert ExecutionConfig(prefetch_depth=2).prefetch_depth == 2
     with pytest.raises(AssertionError):
-        ExecutionConfig(prefetch_depth=2)
+        ExecutionConfig(prefetch_depth=-1)

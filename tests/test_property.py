@@ -10,7 +10,7 @@ from hypothesis import given, settings, strategies as st, HealthCheck
 
 from repro.models.attention import attend, expand_kv
 from repro.models.common import apply_rope
-from repro.models.moe import moe_apply, moe_spec
+from repro.models.moe import moe_spec
 from repro.models.common import materialize
 from repro.optim import adam, clip_by_norm, tree_global_norm
 

@@ -3,7 +3,6 @@ serving generates, the drivers run — all through the Engine facade."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from conftest import make_batch
 from repro import engine as engines
