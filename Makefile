@@ -1,6 +1,7 @@
 PY ?= python
 
-.PHONY: verify test bench bench-relay bench-pack bench-group quickstart
+.PHONY: verify test bench bench-relay bench-pack bench-group bench-stash \
+	quickstart
 
 # tier-1 verification (quick: slow multi-device subprocess tests deselected)
 verify:
@@ -29,6 +30,12 @@ bench-pack:
 # repo root — the footprint-vs-throughput curve
 bench-group:
 	PYTHONPATH=src $(PY) benchmarks/fig_group.py --tiny
+
+# constant-memory stash sweep (stash_every x group x prefetch) pairing
+# steps/s with the analytic ceil(N/K) stash footprint + recompute
+# counts; writes BENCH_stash.json at the repo root
+bench-stash:
+	PYTHONPATH=src $(PY) benchmarks/fig_stash.py --tiny
 
 quickstart:
 	PYTHONPATH=src $(PY) examples/quickstart.py

@@ -1,0 +1,168 @@
+"""Constant-memory stash sweep: stash_every x layers_per_relay x prefetch.
+
+The paper's eq. (4) offloads the boundary stash to the EPS host, but the
+stash itself still grows O(N) with depth — one boundary per layer.
+``ExecutionConfig.stash_every`` (K) checkpoints only every K-th boundary
+(ceil(N/K) stashed) and recomputes the in-between boundaries during the
+reverse relay by re-streaming each K-segment's weights forward through
+the relay executor — Chen-style sublinear checkpointing composed into
+the relay, at one extra layer-forward for K-1 of every K layers.
+
+This benchmark times the l2l-p train step over the {stash_every} x
+{layers_per_relay} x {prefetch_depth} grid (weight_stream + offload_stash
+on — the eq. (4) scenario the knob refines), pairs every point with its
+analytic stash footprint and recompute counts from ``memory_estimate``
+(stash = ceil(N/K)*mb*A, recompute_layers, recompute_stops), and writes
+``BENCH_stash.json`` at the repo root — the stash-footprint-vs-throughput
+frontier in one artifact.
+
+Backend notes: on CPU (this container / CI) memory-space placements are
+logical no-ops (``eps.memories_supported``), so the sweep measures the
+recompute + schedule overhead of shrinking the stash; the host-DMA
+savings side is a TPU observable.
+
+Usage::
+
+    PYTHONPATH=src python benchmarks/fig_stash.py --tiny
+    PYTHONPATH=src python -m benchmarks.fig_stash --steps 10
+"""
+import argparse
+import itertools
+import json
+import os
+import sys
+
+if __package__ in (None, ""):                       # `python benchmarks/...`
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+
+import jax
+
+from benchmarks.common import lm_batch, time_train_step
+from repro import engine as engines
+from repro.configs.base import get_config
+from repro.core.eps import memories_supported
+from repro.core.schedule import ExecutionConfig
+from repro.optim import adam
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_OUT = os.path.join(REPO_ROOT, "BENCH_stash.json")
+
+# n_layers=6 below: K=4 leaves a remainder segment (6 = 4 + 2), K=2/3
+# divide evenly, K=8 > N is the single-checkpoint edge
+STASH = (1, 2, 4, 8)
+GROUPS = (1, 2)
+PREFETCH = (0, 1, 2)
+
+
+def time_combo(cfg, batch, *, ub, stash, group, prefetch, iters, rounds=3):
+    eng = engines.create(
+        "l2l-p", cfg,
+        ExecutionConfig(n_microbatches=ub, weight_stream=True,
+                        offload_stash=True, stash_every=stash,
+                        prefetch_depth=prefetch, layers_per_relay=group),
+        optimizer=adam(lr=1e-4), donate=False)
+    best, compile_s, loss = time_train_step(eng, batch, iters=iters,
+                                            rounds=rounds)
+    B, S = batch["tokens"].shape
+    mem = eng.memory_estimate(batch=B, seq=S)
+    return {"stash_every": stash, "layers_per_relay": group,
+            "prefetch_depth": prefetch,
+            "s_per_step": best,
+            "steps_per_s": 1.0 / max(best, 1e-12),
+            "compile_s": round(compile_s, 3),
+            "loss": loss,
+            # the footprint side of the frontier (analytic, eq. 4 with
+            # the every-K stash): ceil(N/K) boundaries + recompute price
+            "stash_bytes": mem.stash,
+            "stash_boundaries": mem.stash_boundaries,
+            "recompute_layers": mem.recompute_layers,
+            "recompute_stops": mem.recompute_stops,
+            "total_device_bytes": mem.total_device,
+            "total_host_bytes": mem.total_host}
+
+
+def run(quick=False, *, arch="bert-large", steps=None, batch=None,
+        seq=None, ub=None, out_path=DEFAULT_OUT):
+    iters = steps or (5 if quick else 8)
+    B = batch or (8 if quick else 16)
+    S = seq or (64 if quick else 128)
+    UB = ub or (4 if quick else 8)
+    cfg = get_config(arch, "smoke").replace(n_layers=6)
+    data = lm_batch(cfg, B, S)
+    prefetches = PREFETCH[:2] if quick else PREFETCH
+    groups = GROUPS[:1] if quick else GROUPS
+
+    results = [time_combo(cfg, data, ub=UB, stash=K, group=g, prefetch=k,
+                          iters=iters)
+               for K, g, k in itertools.product(STASH, groups, prefetches)]
+
+    def rate(K, g, k):
+        return next(r["steps_per_s"] for r in results
+                    if r["stash_every"] == K
+                    and r["layers_per_relay"] == g
+                    and r["prefetch_depth"] == k)
+
+    # recompute slowdown at each (group, prefetch) point: K vs K=1 — the
+    # throughput cost of shrinking the stash to ceil(N/K) boundaries
+    slowdown_stash = {
+        f"s{K}_g{g}_pf{k}": rate(1, g, k) / rate(K, g, k)
+        for K, g, k in itertools.product(STASH[1:], groups, prefetches)}
+    record = {
+        "benchmark": "fig_stash_recompute",
+        "backend": jax.default_backend(),
+        "memories_supported": memories_supported(),
+        "arch": arch, "variant": "smoke", "n_layers": cfg.n_layers,
+        "batch": B, "seq": S, "n_microbatches": UB, "timed_steps": iters,
+        "results": results,
+        "slowdown_stash_vs_every_layer": slowdown_stash,
+        "notes": (
+            "Each row pairs measured steps/s with the analytic "
+            "ceil(N/K)*mb*A stash footprint and the recompute price "
+            "(recompute_layers extra layer-forwards over "
+            "recompute_stops extra relay stops) — plot stash_bytes vs "
+            "steps_per_s for the stash-footprint-vs-throughput "
+            "frontier.  On CPU the placements are no-ops, so slowdowns "
+            "measure recompute + schedule overhead only; the host-DMA "
+            "savings are a TPU observable."),
+    }
+    with open(out_path, "w") as f:
+        json.dump(record, f, indent=1)
+
+    print("\n# Constant-memory stash sweep (l2l-p train step)")
+    print("stash_every,group,prefetch,s_per_step,steps_per_s,"
+          "stash_KiB,boundaries,recompute_layers,compile_s")
+    for r in results:
+        print(f"{r['stash_every']},{r['layers_per_relay']},"
+              f"{r['prefetch_depth']},{r['s_per_step']:.4f},"
+              f"{r['steps_per_s']:.2f},{r['stash_bytes']/2**10:.1f},"
+              f"{r['stash_boundaries']},{r['recompute_layers']},"
+              f"{r['compile_s']}")
+    for k, v in sorted(slowdown_stash.items()):
+        print(f"# every-layer/K steps/s ({k}): {v:.3f}")
+    if not memories_supported():
+        print("# NOTE: backend drops memory-space transfers — this sweep "
+              "measures recompute/schedule overhead; the smaller host "
+              "stash DMA is a TPU observable")
+    print(f"# wrote {out_path}")
+    return record
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="smoke shapes + 5 timed steps x3 rounds (CI)")
+    ap.add_argument("--arch", default="bert-large")
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--batch", type=int, default=None)
+    ap.add_argument("--seq", type=int, default=None)
+    ap.add_argument("--ub", type=int, default=None)
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args(argv)
+    return run(quick=args.tiny, arch=args.arch, steps=args.steps,
+               batch=args.batch, seq=args.seq, ub=args.ub,
+               out_path=args.out)
+
+
+if __name__ == "__main__":
+    main()

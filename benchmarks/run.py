@@ -17,8 +17,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (cost_model, fig5_time_vs_batch, fig6_breakdown,
-                            fig_group, fig_overlap, fig_pack, roofline,
-                            table2_memory, table3_convergence,
+                            fig_group, fig_overlap, fig_pack, fig_stash,
+                            roofline, table2_memory, table3_convergence,
                             table45_memory_batch)
     benches = [
         ("cost_model_eq5_7", cost_model.run),
@@ -30,6 +30,7 @@ def main() -> None:
         ("fig_overlap_relay", fig_overlap.run),
         ("fig_pack_relay", fig_pack.run),
         ("fig_group_relay", fig_group.run),
+        ("fig_stash_recompute", fig_stash.run),
         ("roofline_from_dryrun", roofline.run),
     ]
     failures = []

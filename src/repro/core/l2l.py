@@ -13,6 +13,24 @@ Forward (Alg 3 lines 2-6):   for l in layers: for u in microbatches:
 Backward (Alg 3 lines 7-11 / Alg 4): reverse relay over layers; per
 microbatch, RECOMPUTE the layer forward via ``jax.vjp`` from the stashed
 boundary input (the paper's rematerialization), accumulate (dw, dx, dmem).
+
+Constant-memory stash (``ExecutionConfig.stash_every`` = K > 1): the
+forward stashes only the boundaries at layer indices = 0 (mod K) within
+each group — ceil(N/K) checkpoints instead of N, so even the offloaded
+stash stops growing with depth.  The backward walks the K-segments in
+reverse; on arriving at a segment it re-streams that segment's weights
+FORWARD through ``relay_scan`` (the same prefetch ring / G-grouping /
+packed transport as every other relay) to recompute the K-1 missing
+boundaries from the stored entry — each re-hosted into the stash tier as
+it is produced and fetched back one layer at a time by the segment's
+recompute-vjp backward relay (the K=1 protocol), so the device boundary
+working set stays O(1) in both N and K.  Chen-style sublinear
+checkpointing composed into the relay: one extra layer-forward for K-1
+of every K layers, bit-identical gradients and updates for every (K, G,
+prefetch, pack) point (tests/test_stash.py).  K = 1 emits the historical
+single-scan schedule unchanged; K > 1 trades it for ~3·ceil(N/K)
+unrolled relay instances (fwd + recompute + bwd per segment), so K is
+meant to be chosen O(sqrt N) or larger.
 With ``eager_optimizer`` (Alg 4 / L2L-p) the optimizer for layer l runs
 inside the same reverse step, overlapping the backward of layer l-1 —
 and because the body's dw is produced under pjit, the per-layer gradient
@@ -51,7 +69,7 @@ import jax.numpy as jnp
 
 from repro.core import packing
 from repro.core.eps import EPSPlacements, make_placements
-from repro.core.relay import Stream, relay_scan
+from repro.core.relay import Stream, relay_scan, segment_bounds
 from repro.core.schedule import ExecutionConfig
 from repro.optim import Optimizer, clip_by_norm, tree_global_norm
 
@@ -70,6 +88,16 @@ def _tree_add(a, b):
 
 def _tree_zeros_f32(tree):
     return jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), tree)
+
+
+def _seg_slice(tree, s0: int, s1: int):
+    """Static layer-range slice of a stacked (N, ...) tree (plain or
+    ``packing.Packed`` — both slice on the leading stacked axis)."""
+    return jax.tree.map(lambda a: a[s0:s1], tree)
+
+
+def _concat_segs(trees):
+    return jax.tree.map(lambda *ls: jnp.concatenate(ls, axis=0), *trees)
 
 
 def _make_packed_update(optimizer: Optimizer, exec_cfg: ExecutionConfig,
@@ -122,6 +150,7 @@ def make_train_step(model, optimizer: Optimizer, exec_cfg: ExecutionConfig,
     PF = exec_cfg.prefetch_depth
     PK = exec_cfg.pack_params
     G = exec_cfg.layers_per_relay
+    SE = exec_cfg.stash_every
     UNROLL = exec_cfg.unroll_layers
 
     def run_opt(grads, opt_l, w, step_i):
@@ -152,7 +181,13 @@ def make_train_step(model, optimizer: Optimizer, exec_cfg: ExecutionConfig,
         x_ub = jax.lax.map(prep_one, batch_ub)            # (UB, Bub, S, d)
 
         ub_slice = jax.tree.map(lambda a: a[0], batch_ub)
-        stashes = []          # per group: (N, UB, Bub, S, d) boundary inputs
+        # per group: boundary inputs — one stacked (N, UB, Bub, S, d)
+        # tree with stash_every=1; with K > 1 a PYTHON LIST of the
+        # ceil(N/K) segment-entry checkpoint trees (kept unstacked so
+        # each stays in the stash placement's memory space — stacking
+        # would materialize the checkpoints outside pinned_host on TPU;
+        # the backward recomputes the in-between boundaries from them)
+        stashes = []
         group_inputs = []     # x_ub at entry of each group (== stash[:,0])
         mems = []             # per group: mem_ub or None
         aux_total = jnp.float32(0.0)
@@ -175,7 +210,8 @@ def make_train_step(model, optimizer: Optimizer, exec_cfg: ExecutionConfig,
             ctx = model.train_ctx(ub_slice, group)
             wp = placements.weights[gi]
 
-            def fwd_body(x_c, slots, _x, _g=group, _ctx=ctx, _mem=mem_ub):
+            def fwd_body(x_c, slots, _x, _g=group, _ctx=ctx, _mem=mem_ub,
+                         _stash=True):
                 """Microbatch loop of one layer (slot already in HBM)."""
                 (w,) = slots
                 if PK:
@@ -190,13 +226,33 @@ def make_train_step(model, optimizer: Optimizer, exec_cfg: ExecutionConfig,
                     return aux_c + aux.astype(jnp.float32), y
                 xs = x_c if _mem is None else (x_c, _mem)
                 aux_g, y_ub = jax.lax.scan(ub_body, jnp.float32(0.0), xs)
-                return y_ub, (placements.stash.host(x_c), aux_g)
+                return y_ub, ((placements.stash.host(x_c), aux_g)
+                              if _stash else aux_g)
 
-            x_ub, (stash_g, aux_per_layer) = relay_scan(
-                fwd_body, x_ub, (Stream(wp, params["groups"][gi]),),
-                group=G, prefetch=PF, unroll=UNROLL)
-            stashes.append(stash_g)
-            aux_total = aux_total + aux_per_layer.sum() / UB
+            if SE == 1:
+                x_ub, (stash_g, aux_per_layer) = relay_scan(
+                    fwd_body, x_ub, (Stream(wp, params["groups"][gi]),),
+                    group=G, prefetch=PF, unroll=UNROLL)
+                stashes.append(stash_g)
+                aux_total = aux_total + aux_per_layer.sum() / UB
+            else:
+                # constant-memory stash: checkpoint ONLY each K-segment's
+                # entry boundary; the segment's layers relay through the
+                # same executor (ring/grouping/packing intact) without
+                # emitting per-layer stash ys.
+                def fwd_nostash(x_c, slots, x, _b=fwd_body):
+                    return _b(x_c, slots, x, _stash=False)
+
+                stash_segs = []
+                for s0, s1 in segment_bounds(group.n_layers, SE):
+                    stash_segs.append(placements.stash.host(x_ub))
+                    x_ub, aux_per_layer = relay_scan(
+                        fwd_nostash, x_ub,
+                        (Stream(wp, _seg_slice(params["groups"][gi],
+                                               s0, s1)),),
+                        group=G, prefetch=PF, unroll=UNROLL)
+                    aux_total = aux_total + aux_per_layer.sum() / UB
+                stashes.append(stash_segs)
 
         # ------------------------------------------------------------
         # HEAD: loss + dL/dx per microbatch (also d_static from the head)
@@ -238,13 +294,6 @@ def make_train_step(model, optimizer: Optimizer, exec_cfg: ExecutionConfig,
             dmem_ub = (jax.tree.map(
                 lambda a: jnp.zeros(a.shape, a.dtype), mem_ub)
                 if has_mem else None)
-
-            streams = [Stream(wp, params["groups"][gi])]
-            if exec_cfg.eager_optimizer:
-                # L2L-p: the optimizer slice rides the same relay ring;
-                # the updated-weight write-back (stacked ys) is consumed
-                # only after the scan — it overlaps the next backward.
-                streams.append(Stream(op, opt_state["groups"][gi]))
 
             def bwd_body(core, slots, stash_l, _g=group, _ctx=ctx,
                          _mem=mem_ub, _wp=wp, _op=op, _has_mem=has_mem):
@@ -320,9 +369,82 @@ def make_train_step(model, optimizer: Optimizer, exec_cfg: ExecutionConfig,
                 return (dxin_ub, dmem_c, gn_c, nf_c), out
 
             core0 = (dx_ub, dmem_ub, gnorm_sq, nonfinite)
-            core0, outs = relay_scan(
-                bwd_body, core0, streams, xs=stashes[gi], reverse=True,
-                group=G, prefetch=PF, unroll=UNROLL)
+            if SE == 1:
+                streams = [Stream(wp, params["groups"][gi])]
+                if exec_cfg.eager_optimizer:
+                    # L2L-p: the optimizer slice rides the same relay
+                    # ring; the updated-weight write-back (stacked ys) is
+                    # consumed only after the scan — it overlaps the next
+                    # backward.
+                    streams.append(Stream(op, opt_state["groups"][gi]))
+                core0, outs = relay_scan(
+                    bwd_body, core0, streams, xs=stashes[gi], reverse=True,
+                    group=G, prefetch=PF, unroll=UNROLL)
+            else:
+                # Constant-memory stash: walk the K-segments in reverse.
+                # Each segment first re-streams its weights FORWARD
+                # through the relay executor (same ring/grouping/packing)
+                # to recompute the K-1 boundaries between its stored
+                # entry checkpoint and the next one, then runs the
+                # recompute-vjp backward relay over the segment.  Each
+                # recomputed boundary is RE-HOSTED into the stash
+                # placement as it is produced and fetched back one layer
+                # at a time by the backward (exactly the K=1 protocol),
+                # so the device never holds more than one boundary of
+                # recompute working set regardless of K.
+                def rec_body(x_c, slots, _x, _g=group, _ctx=ctx,
+                             _mem=mem_ub):
+                    """One layer of the boundary-recompute forward: the
+                    same microbatch loop as the forward relay (aux
+                    discarded); ys = the layer's OUTPUT boundary, placed
+                    into the stash tier."""
+                    (w,) = slots
+                    if PK:
+                        w = packing.unpack(w)
+                    def ub_body(_, args):
+                        if _mem is None:
+                            y, _aux = _g.apply(w, args, None, _ctx)
+                        else:
+                            x_i, m_i = args
+                            y, _aux = _g.apply(w, x_i, m_i, _ctx)
+                        return None, y
+                    xs_l = x_c if _mem is None else (x_c, _mem)
+                    _, y_ub = jax.lax.scan(ub_body, None, xs_l)
+                    return y_ub, placements.stash.host(y_ub)
+
+                bounds = segment_bounds(group.n_layers, SE)
+                outs_segs = [None] * len(bounds)
+                for si in reversed(range(len(bounds))):
+                    s0, s1 = bounds[si]
+                    entry = stashes[gi][si]          # host-placed
+                    if s1 - s0 > 1:
+                        _, rec_bounds = relay_scan(
+                            rec_body, placements.stash.dev(entry),
+                            (Stream(wp, _seg_slice(params["groups"][gi],
+                                                   s0, s1 - 1)),),
+                            group=G, prefetch=PF, unroll=UNROLL)
+                        # entry + outputs of layers s0..s1-2
+                        # == boundaries of layers s0..s1-1
+                        seg_stash = jax.tree.map(
+                            lambda e, bs: jnp.concatenate(
+                                [e[None], bs], axis=0),
+                            entry, rec_bounds)
+                    else:
+                        seg_stash = jax.tree.map(lambda a: a[None], entry)
+                    seg_streams = [Stream(
+                        wp, _seg_slice(params["groups"][gi], s0, s1))]
+                    if exec_cfg.eager_optimizer:
+                        seg_streams.append(Stream(op, _seg_slice(
+                            opt_state["groups"][gi], s0, s1)))
+                    core0, outs_segs[si] = relay_scan(
+                        bwd_body, core0, seg_streams, xs=seg_stash,
+                        reverse=True, group=G, prefetch=PF, unroll=UNROLL)
+                # per-segment write-backs concatenate to the (N, ...)
+                # group tree; re-state the EPS placement on the result so
+                # it lands host-resident like the K=1 scan-stacked ys
+                outs = _concat_segs(outs_segs)
+                outs = ((wp.host(outs[0]), op.host(outs[1]))
+                        if exec_cfg.eager_optimizer else wp.host(outs))
             dx_ub, dmem_ub, gnorm_sq, nonfinite = core0
             if exec_cfg.eager_optimizer:
                 new_group_params[gi], new_group_opt[gi] = outs
@@ -525,13 +647,19 @@ def make_grads_fn(model, exec_cfg: ExecutionConfig,
     """Returns grads(params, batch) -> (loss, grads) computed with the L2L
     schedule (layer-major, recompute).  Used to assert gradient identity
     with Algorithm 2 and by the Alg-3 benchmarks."""
+    # deliberate WHITELIST of the schedule/layout knobs (not a
+    # dataclasses.replace): the grad-collector path must not inherit
+    # update-time behavior — amp loss scaling (its loss_scale opt state
+    # is never initialized here), host_optimizer, clipping
     cfg_noeager = ExecutionConfig(
         n_microbatches=exec_cfg.n_microbatches,
         offload_stash=exec_cfg.offload_stash,
         weight_stream=exec_cfg.weight_stream,
+        stash_every=exec_cfg.stash_every,
         prefetch_depth=exec_cfg.prefetch_depth,
         pack_params=exec_cfg.pack_params,
         layers_per_relay=exec_cfg.layers_per_relay,
+        unroll_layers=exec_cfg.unroll_layers,
         eager_optimizer=False, clip_mode="none")
     return _make_loss_and_grads(model, cfg_noeager, placements)
 

@@ -13,7 +13,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 import jax
 
-from repro.core.relay import n_stops
+from repro.core.relay import n_stops, segment_bounds
 from repro.models.common import is_spec, param_bytes
 from repro.models.model import LayeredModel
 
@@ -41,19 +41,42 @@ class MemoryReport:
     # (weights) / per optimizer slot (m, v).  A stop covers
     # ``layers_per_relay`` stacked layers in the SAME copies (the slice
     # just grows a leading axis), so ``relay_stops`` — total stops one
-    # pass makes over the depth, sum of ceil(n_layers/G) per group — is
-    # the trip-count multiplier.  Small copies are latency-bound, so
+    # pass makes over the depth, sum of ceil(n_layers/G) per group, or of
+    # per-segment ceilings when ``stash_every`` > 1 segments the pass —
+    # is the trip-count multiplier.  Small copies are latency-bound, so
     # relay_stops * relay_copies_* — not the byte total — is the eq. (6)
     # relay-term driver the packed/grouped layouts attack.
     relay_copies_weights: int = 0
     relay_copies_opt: int = 0
     relay_stops: int = 0
+    # --- constant-memory stash (stash_every = K) ------------------------
+    # The stash term above is ceil(N/K)*mb*A instead of N*mb*A: only
+    # every K-th layer boundary is checkpointed (stash_boundaries counts
+    # them).  The backward pays for it by re-streaming each K-segment's
+    # weights forward to recompute the missing boundaries:
+    # recompute_layers extra layer-forwards per step (N - ceil(N/K) — the
+    # flop side) issued over recompute_stops extra weight-relay stops
+    # (the DMA side, ceil((len-1)/G) per segment).  Each recomputed
+    # boundary is re-hosted into the STASH tier and fetched back per
+    # layer (the K=1 protocol), so the recompute working set —
+    # recompute_buffer = (largest segment - 1) boundaries — rides the
+    # stash placement: host bytes under offload_stash (total stash-tier
+    # peak ceil(N/K)+K-1 boundaries, the Chen sqrt-N curve), device bytes
+    # otherwise; the device transit/activation terms never see K.  With
+    # K = 1 all four reduce to the historical model (stash_boundaries =
+    # N, zeros).
+    stash_boundaries: int = 0
+    recompute_layers: int = 0
+    recompute_stops: int = 0
+    recompute_buffer: int = 0
 
     def finalize(self):
         self.total_device = (self.params_device + self.activations
-                             + (0 if self.stash_on_host else self.stash))
+                             + (0 if self.stash_on_host
+                                else self.stash + self.recompute_buffer))
         self.total_host = (self.params_host + self.opt_state
-                           + (self.stash if self.stash_on_host else 0))
+                           + ((self.stash + self.recompute_buffer)
+                              if self.stash_on_host else 0))
         return self
 
 
@@ -78,7 +101,8 @@ def estimate(model: LayeredModel, *, batch: int, seq: int,
              act_dtype_bytes: int = 2, param_dtype_bytes: int = 4,
              prefetch_depth: int = 0,
              pack_params: bool = False,
-             layers_per_relay: int = 1) -> MemoryReport:
+             layers_per_relay: int = 1,
+             stash_every: int = 1) -> MemoryReport:
     """Modes:
       baseline      eq. (1): everything device-resident
       baseline_remat eq. (1) with the N*L*mb*X term reduced to boundaries
@@ -96,6 +120,22 @@ def estimate(model: LayeredModel, *, batch: int, seq: int,
     the deepest group's depth in the footprint.  G also divides the
     relay trip count: one pass makes ``relay_stops`` = sum over groups
     of ceil(n_layers / G) stops instead of N.
+
+    ``stash_every`` (K, l2l modes only) is the constant-memory stash:
+    only every K-th layer boundary is checkpointed, so the stash term
+    drops from N*mb*A to ceil(N/K)*mb*A — sublinear in depth wherever it
+    lives (device or, with ``offload_stash``, EPS host).  The price is
+    accounted in ``recompute_layers`` (N - ceil(N/K) extra layer-forwards
+    per step) and ``recompute_stops`` (the extra forward weight-relay
+    stops the backward issues to recompute each segment's missing
+    boundaries), and in ``recompute_buffer``: the (largest segment - 1)
+    recomputed boundaries the STASH TIER transiently holds while a
+    segment's backward runs (host under ``offload_stash``, device
+    otherwise — without offload the stash-tier peak is the Chen
+    ceil(N/K) + K - 1 sqrt-N curve).  Because every relay then runs over
+    one K-segment, the device relay slot is capped at min(G, K, depth)
+    layers — K < G shrinks the weight-transit footprint too.  K = 1
+    reproduces today's model byte-for-byte.
 
     ``pack_params`` (l2l modes only) does NOT change any byte term — the
     transit buffers of eq. (2)/(3) hold the same elements whether they
@@ -130,11 +170,14 @@ def estimate(model: LayeredModel, *, batch: int, seq: int,
             stash=stash, stash_on_host=False).finalize()
 
     G = max(1, layers_per_relay)
+    K = max(1, stash_every)
     transit = 2 if mode == "l2l" else 4            # eq.(2) vs eq.(3)
     transit *= 1 + prefetch_depth                  # ring of G-layer slots
     # a slot holds min(G, group depth) layers — G beyond the deepest
-    # group adds no residency (the remainder-only pass)
-    slot = _slot_bytes(model, param_dtype_bytes, G)
+    # group adds no residency (the remainder-only pass).  With
+    # stash_every = K > 1 every relay runs over one K-segment, so the
+    # slot is further capped at the segment length: min(G, K, depth).
+    slot = _slot_bytes(model, param_dtype_bytes, min(G, K) if K > 1 else G)
     # DMA issues per relay stop per direction (largest group): the
     # per-leaf relay pays one copy per leaf; the packed relay one per
     # dtype segment (a single param_dtype here) / per optimizer slot.
@@ -146,17 +189,41 @@ def estimate(model: LayeredModel, *, batch: int, seq: int,
     copies_w = 1 if pack_params else n_leaves
     copies_o = ((opt_slots if pack_params else n_leaves * opt_slots)
                 if mode == "l2l_p" else 0)
-    stops = sum(n_stops(g.n_layers, G) for g in model.groups)
+    # constant-memory stash: ceil(N/K) checkpointed boundaries per group;
+    # the backward re-streams each segment's first len-1 layers forward
+    # to recompute the in-between boundaries (extra stops + layer flops)
+    segs = [segment_bounds(g.n_layers, K) for g in model.groups]
+    if K == 1:
+        stops = sum(n_stops(g.n_layers, G) for g in model.groups)
+    else:
+        # K > 1 segments every forward/backward pass: one relay per
+        # segment, so a pass issues ceil(len/G) stops per segment —
+        # more than ceil(N/G) when K is not a multiple of G
+        stops = sum(n_stops(s1 - s0, G)
+                    for gsegs in segs for s0, s1 in gsegs)
+    n_ckpt = sum(len(s) for s in segs)
+    rec_layers = n_layers - n_ckpt
+    rec_stops = sum(n_stops(s1 - s0 - 1, G)
+                    for gsegs in segs for s0, s1 in gsegs if s1 - s0 > 1)
+    # recompute working set: while one segment's backward runs, the
+    # stash tier additionally holds its seg_len - 1 recomputed
+    # boundaries (the entry is one of the persistent checkpoints)
+    rec_buffer = (max(max(s1 - s0 for s0, s1 in gsegs)
+                      for gsegs in segs) - 1) * batch * A if K > 1 else 0
     return MemoryReport(
         params_device=transit * slot,
         params_host=L_total,
         opt_state=(1 + opt_slots) * L_total,       # EPS-resident
         activations=ub * X,                        # recompute working set
-        stash=n_layers * batch * A,
+        stash=n_ckpt * batch * A,
         stash_on_host=offload_stash,
         relay_copies_weights=copies_w,
         relay_copies_opt=copies_o,
-        relay_stops=stops).finalize()
+        relay_stops=stops,
+        stash_boundaries=n_ckpt,
+        recompute_layers=rec_layers,
+        recompute_stops=rec_stops,
+        recompute_buffer=rec_buffer).finalize()
 
 
 # ---------------------------------------------------------------------------

@@ -89,6 +89,18 @@ def n_stops(n_layers: int, group: int) -> int:
     return -(-n_layers // g)
 
 
+def segment_bounds(n_layers: int, every: int) -> tuple:
+    """Static ``(start, stop)`` layer ranges of the stash segments when
+    only every ``every``-th boundary is checkpointed
+    (``ExecutionConfig.stash_every``): boundaries sit at layer indices
+    = 0 (mod K), so segments are ``[0, K), [K, 2K), ...`` with a short
+    remainder segment at the end when K does not divide N.  One entry per
+    stored boundary — ``len(segment_bounds(n, K)) == ceil(n / K)``."""
+    k = max(1, int(every))
+    return tuple((s, min(s + k, n_layers))
+                 for s in range(0, n_layers, k))
+
+
 def relay_scan(body: Callable, init, streams: Sequence[Stream], *,
                xs=None, reverse: bool = False, group: int = 1,
                prefetch: int = 0, unroll=False):

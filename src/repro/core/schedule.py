@@ -10,7 +10,13 @@ Maps the paper's knobs onto one frozen config (consumed through the
   scan, per-layer eager gradient reduction via the sharded scan body)
 
 ``offload_stash`` is eq. (4): boundary activations live in pinned_host
-between forward and backward.  ``weight_stream`` is the EPS proper: the
+between forward and backward.  ``stash_every`` (K) is the constant-memory
+refinement of that stash: only every K-th layer boundary is stored
+(ceil(N/K) instead of N) and the reverse relay recomputes the in-between
+boundaries by re-streaming each K-segment's weights forward before its
+backward — the stash stops growing with depth at the cost of one extra
+layer-forward for K-1 of every K layers.  ``weight_stream`` is the EPS
+proper: the
 stacked layer params (and optimizer state) are resident in pinned_host
 and relayed to device memory by the unified relay executor
 (``repro.core.relay``).  Three orthogonal knobs shape that relay:
@@ -39,6 +45,18 @@ class ExecutionConfig:
     # --- L2L memory policies -------------------------------------------
     offload_stash: bool = False     # eq.(4): stash -> pinned_host
     weight_stream: bool = False     # EPS: params/opt live in pinned_host
+    # --- constant-memory stash (every-K boundary checkpointing) ----------
+    # K >= 1: the forward relay stashes only the boundary activations at
+    # layer indices = 0 (mod K) within each group — ceil(N/K) boundaries
+    # instead of N, so the stash (host OR device) stops growing linearly
+    # with depth.  The reverse relay, on arriving at a K-segment,
+    # re-streams that segment's weights forward through the relay executor
+    # to recompute the K-1 missing boundaries from the last stored one,
+    # then runs the recompute-vjp backward over the segment: a second
+    # recompute tier (Chen-style sublinear checkpointing inside the relay)
+    # costing one extra layer-forward for K-1 of every K layers.  K = 1 is
+    # the historical stash-every-boundary schedule, byte-for-byte.
+    stash_every: int = 1
     # --- relay pipelining -------------------------------------------------
     # 0 = fetch a relay stop's weights at the top of its own scan
     #     iteration (the copy is serialized with the stop's compute);
@@ -98,3 +116,6 @@ class ExecutionConfig:
             "prefetch_depth: k in-flight relay slots (0 = no pipelining)"
         assert self.layers_per_relay >= 1, \
             "layers_per_relay: G >= 1 layers moved per relay stop"
+        assert self.stash_every >= 1, \
+            "stash_every: K >= 1 layers per stashed boundary " \
+            "(1 = stash every layer boundary)"

@@ -241,6 +241,7 @@ class Engine:
         this engine's schedule at the given shape."""
         kw.setdefault("n_microbatches", self.exec_cfg.n_microbatches)
         kw.setdefault("offload_stash", self.exec_cfg.offload_stash)
+        kw.setdefault("stash_every", self.exec_cfg.stash_every)
         kw.setdefault("prefetch_depth", self.exec_cfg.prefetch_depth)
         kw.setdefault("pack_params", self.exec_cfg.pack_params)
         kw.setdefault("layers_per_relay", self.exec_cfg.layers_per_relay)

@@ -50,10 +50,14 @@ def create(name: str, model, exec_cfg=None, *,
     ``exec_cfg`` (or the default config) without the caller rebuilding a
     frozen ExecutionConfig — e.g. ``exec_overrides={"prefetch_depth": 2}``
     for a deeper relay prefetch ring, ``{"pack_params": True}`` for the
-    packed flat-buffer relay + fused optimizer, or
+    packed flat-buffer relay + fused optimizer,
     ``{"layers_per_relay": 4}`` to relay four stacked layers per stop
     (one DMA covers the group; device weight footprint G·(1 + k) layer
-    slots).  Remaining keyword args are forwarded
+    slots), or ``{"stash_every": 4}`` for the constant-memory stash
+    (checkpoint every 4th layer boundary — ceil(N/4) stashed boundaries
+    instead of N — and recompute the rest during the reverse relay by
+    re-streaming each segment forward).  Remaining keyword args are
+    forwarded
     to the engine constructor (``optimizer=``, ``mesh=``, ``rules=``,
     ``placements=``, ``donate=``).
     """

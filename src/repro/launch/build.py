@@ -129,6 +129,10 @@ def make_exec_cfg(shape: InputShape, cfg: ModelConfig, mesh,
     base = dict(
         n_microbatches=microbatches_for(shape, mesh),
         offload_stash=(shape.kind == "train"),
+        # stash every boundary by default; {"stash_every": K} / dryrun
+        # --stash-every K checkpoints only every K-th boundary (ceil(N/K)
+        # stashed) and recomputes the rest during the reverse relay
+        stash_every=1,
         weight_stream=True,
         eager_optimizer=True,
         # production relays are double-buffered: the next stop's EPS DMA

@@ -281,6 +281,14 @@ def main():
                          "default 0): 1 compiles the packed flat-buffer "
                          "relay — one host<->HBM copy per relay stop per "
                          "direction — for A/B HLO comparison")
+    ap.add_argument("--stash-every", type=int, default=None,
+                    help="override ExecutionConfig.stash_every (build "
+                         "default 1): K > 1 compiles the constant-memory "
+                         "stash — only every K-th layer boundary is "
+                         "checkpointed (ceil(N/K) stashed) and the "
+                         "reverse relay recomputes the rest by "
+                         "re-streaming each K-segment forward — for A/B "
+                         "host/device byte comparison")
     args = ap.parse_args()
     cfg_patch = ({"grouped_decode_attn": True, "moe_ep_constraint": True}
                  if args.optimized else None)
@@ -291,6 +299,8 @@ def main():
         exec_overrides["layers_per_relay"] = args.group
     if args.pack is not None:
         exec_overrides["pack_params"] = bool(args.pack)
+    if args.stash_every is not None:
+        exec_overrides["stash_every"] = args.stash_every
     exec_overrides = exec_overrides or None
     if args.optimized and args.tag == "baseline":
         args.tag = "optimized"
@@ -305,6 +315,8 @@ def main():
         args.tag += f"-g{args.group}"
     if args.pack == 1:
         args.tag += "-packed"
+    if args.stash_every is not None and args.stash_every != 1:
+        args.tag += f"-s{args.stash_every}"
 
     archs = list_archs() if args.arch == "all" else args.arch.split(",")
     archs = [a for a in archs if a != "bert-large"]

@@ -49,6 +49,13 @@ def main(argv=None):
                     help="with --engine l2l: trailing optimizer (Alg 3) "
                          "instead of the eager L2L-p schedule")
     ap.add_argument("--offload-stash", action="store_true")
+    ap.add_argument("--stash-every", type=int, default=1,
+                    help="K = layers per stashed boundary: checkpoint "
+                         "only every K-th layer-boundary activation "
+                         "(ceil(N/K) instead of N) and recompute the "
+                         "in-between boundaries during the reverse relay "
+                         "by re-streaming each segment's weights forward "
+                         "(1 = historical stash-every-layer)")
     ap.add_argument("--weight-stream", action="store_true")
     ap.add_argument("--prefetch", type=int, default=0,
                     help="k = depth of the EPS relay prefetch ring: the "
@@ -105,6 +112,7 @@ def main(argv=None):
     exec_cfg = ExecutionConfig(
         n_microbatches=args.ub,
         offload_stash=args.offload_stash,
+        stash_every=args.stash_every,
         weight_stream=args.weight_stream,
         prefetch_depth=args.prefetch,
         layers_per_relay=args.group,

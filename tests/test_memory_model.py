@@ -104,11 +104,137 @@ def test_group_stops_sum_over_groups_and_remainder():
         assert r.relay_stops == sum(-(-d // G) for d in depths)
 
 
+@pytest.mark.parametrize("mode", ["l2l", "l2l_p"])
+def test_stash_every_grid(mode):
+    """Constant-memory stash term: ceil(N/K) boundaries per group, every
+    other term untouched, and the recompute price reported (N - ceil(N/K)
+    extra layer-forwards over ceil((len-1)/G) extra stops per segment).
+    K=1 must reproduce today's model byte-for-byte."""
+    model = LayeredModel(get_config("bert-large"))   # 24 layers, 1 group
+    base = estimate(model, batch=32, seq=512, n_microbatches=8, mode=mode,
+                    offload_stash=True)
+    assert base.stash_boundaries == 24
+    assert base.recompute_layers == 0 and base.recompute_stops == 0
+    k1 = estimate(model, batch=32, seq=512, n_microbatches=8, mode=mode,
+                  offload_stash=True, stash_every=1)
+    assert k1 == base                                # K=1 byte-identical
+    per_boundary = base.stash // 24
+    for K, G in itertools.product((1, 2, 3, 5, 7, 24, 30), (1, 2, 3)):
+        r = estimate(model, batch=32, seq=512, n_microbatches=8, mode=mode,
+                     offload_stash=True, stash_every=K, layers_per_relay=G)
+        tag = f"K={K} G={G}"
+        n_ckpt = -(-24 // K)
+        assert r.stash_boundaries == n_ckpt, tag
+        assert r.stash == n_ckpt * per_boundary, tag     # ceil(N/K)*mb*A
+        assert r.recompute_layers == 24 - n_ckpt, tag
+        # K=1 relays G-layer slots; K>1 runs every relay over one
+        # K-segment, so the slot is capped at min(G, K) layers — K < G
+        # shrinks the transit footprint too
+        slot_layers = G if K == 1 else min(G, K)
+        assert r.params_device == slot_layers * base.params_device, tag
+        # recompute working set in the stash tier: largest segment - 1
+        assert r.recompute_buffer == \
+            (min(K, 24) - 1 if K > 1 else 0) * per_boundary, tag
+        assert r.activations == base.activations, tag
+        # K=1: one relay over the depth; K>1 segments every pass into
+        # one relay per segment (ceil(len/G) stops each)
+        segs = [(s, min(s + K, 24)) for s in range(0, 24, K)]
+        exp_stops = (-(-24 // G) if K == 1
+                     else sum(-(-(s1 - s0) // G) for s0, s1 in segs))
+        assert r.relay_stops == exp_stops, tag
+        # recompute stops: each segment re-streams its first len-1 layers
+        assert r.recompute_stops == sum(
+            -(-(s1 - s0 - 1) // G) for s0, s1 in segs if s1 - s0 > 1), tag
+
+
+def test_stash_every_offload_composition():
+    """The stash tier — the ceil(N/K) checkpoints AND the transient
+    recompute buffer — moves wholesale between tiers: device bytes with
+    offload off, host bytes with offload on; the other tier doesn't see
+    either term."""
+    model = LayeredModel(get_config("bert-large"))
+    for K in (1, 3, 8):
+        on = estimate(model, batch=32, seq=512, n_microbatches=8,
+                      mode="l2l_p", offload_stash=True, stash_every=K)
+        off = estimate(model, batch=32, seq=512, n_microbatches=8,
+                       mode="l2l_p", offload_stash=False, stash_every=K)
+        assert on.stash == off.stash                  # same bytes, moved
+        assert on.recompute_buffer == off.recompute_buffer
+        tier = on.stash + on.recompute_buffer
+        assert on.total_device + tier == off.total_device
+        assert off.total_host + tier == on.total_host
+
+
+def test_stash_every_monotone_and_constant_memory_point():
+    """With the stash offloaded (eq. 4) total_device is monotone
+    non-increasing in K — the boundaries round-trip through the host one
+    at a time, so the DEVICE never sees K.  On device (offload off) the
+    stash tier pays the classic Chen curve ceil(N/K) + K - 1 boundaries:
+    sublinear at intermediate K, back to N at the extremes.  And the
+    offloaded HOST stash stops growing linearly: at K >= N it is one
+    boundary per group regardless of depth — the true constant-device +
+    sublinear-host memory point."""
+    model = LayeredModel(get_config("bert-large"))
+    base = estimate(model, batch=32, seq=512, n_microbatches=8,
+                    mode="l2l_p", offload_stash=True)
+    per_boundary = base.stash // 24
+    prev = None
+    for K in (1, 2, 3, 4, 6, 8, 12, 24, 48):
+        on = estimate(model, batch=32, seq=512, n_microbatches=8,
+                      mode="l2l_p", offload_stash=True, stash_every=K)
+        if prev is not None:
+            assert on.total_device <= prev, f"K={K}"
+        prev = on.total_device
+        off = estimate(model, batch=32, seq=512, n_microbatches=8,
+                       mode="l2l_p", offload_stash=False, stash_every=K)
+        boundaries = -(-24 // K) + (min(K, 24) - 1 if K > 1 else 0)
+        assert off.stash + off.recompute_buffer == \
+            boundaries * per_boundary, f"K={K}"
+    # the sqrt-N sweet spot beats both extremes on device
+    dev = {K: estimate(model, batch=32, seq=512, n_microbatches=8,
+                       mode="l2l_p", offload_stash=False,
+                       stash_every=K).total_device for K in (1, 5, 24)}
+    assert dev[5] < dev[1] and dev[5] < dev[24]
+    # depth-independence of the stash at K >= N (one checkpoint/group)
+    stashes = []
+    for n in (12, 24, 96):
+        m = LayeredModel(get_config("bert-large").replace(n_layers=n))
+        r = estimate(m, batch=32, seq=512, n_microbatches=8, mode="l2l_p",
+                     offload_stash=True, stash_every=96)
+        stashes.append(r.stash)
+        assert r.stash_boundaries == 1
+    assert stashes[0] == stashes[1] == stashes[2]
+
+
+def test_stash_every_multi_group_sums_ceilings():
+    """Whisper (enc 6 + dec 6... group depths differ per config): the
+    boundary count is the SUM of per-group ceilings."""
+    model = LayeredModel(get_config("whisper-base"))
+    depths = [g.n_layers for g in model.groups]
+    for K in (1, 2, 3, 5, 100):
+        r = estimate(model, batch=8, seq=128, mode="l2l_p", stash_every=K)
+        assert r.stash_boundaries == sum(-(-d // K) for d in depths)
+        assert r.recompute_layers == sum(d - -(-d // K) for d in depths)
+
+
+def test_engine_memory_estimate_threads_stash_every(make_engine):
+    e0 = make_engine("l2l-p", exec_cfg=ExecutionConfig(n_microbatches=2))
+    e1 = make_engine("l2l-p", exec_cfg=ExecutionConfig(
+        n_microbatches=2, stash_every=2))
+    r0 = e0.memory_estimate(batch=8, seq=64)
+    r1 = e1.memory_estimate(batch=8, seq=64)
+    n_layers = sum(g.n_layers for g in e0.model.groups)
+    assert r0.stash_boundaries == n_layers
+    assert r1.stash_boundaries == -(-n_layers // 2)
+    assert r1.stash == r0.stash // n_layers * -(-n_layers // 2)
+
+
 def test_baseline_mode_ignores_relay_knobs():
     model = LayeredModel(get_config("bert-large"))
     b0 = estimate(model, batch=32, seq=512, mode="baseline")
     b1 = estimate(model, batch=32, seq=512, mode="baseline",
-                  prefetch_depth=2, layers_per_relay=4, pack_params=True)
+                  prefetch_depth=2, layers_per_relay=4, pack_params=True,
+                  stash_every=4)
     assert b0.params_device == b1.params_device
     assert b1.relay_stops == 0
 

@@ -162,6 +162,48 @@ def test_adam_update_bounded(seed):
 
 
 # ---------------------------------------------------------------------------
+# SYSTEM-LEVEL invariant: a full L2L engine step computes baseline grads
+# for ANY (depth, stash_every, layers_per_relay, prefetch, pack) point
+# ---------------------------------------------------------------------------
+# engines are rebuilt from scratch every example, so the function-scoped
+# make_engine fixture carries no state between draws
+_FIXTURE_HC = [hc for hc in [getattr(HealthCheck, "function_scoped_fixture",
+                                     None)] if hc is not None]
+
+
+@settings(deadline=None, max_examples=6,
+          suppress_health_check=[HealthCheck.too_slow] + _FIXTURE_HC)
+@given(depth=st.integers(2, 6), stash_every=st.integers(1, 8),
+       group=st.integers(1, 4), prefetch=st.integers(0, 2),
+       pack=st.booleans(), seed=st.integers(0, 2 ** 31 - 1))
+def test_l2l_engine_matches_baseline_random_schedule(
+        make_engine, depth, stash_every, group, prefetch, pack, seed):
+    """The whole execution-schedule knob space is gradient-preserving:
+    for random (depth, K, G, prefetch_depth, pack_params) tuples — K and
+    G free to exceed the depth, depths free to leave remainder segments
+    and remainder relay stops — the l2l engine's grads on a random batch
+    match the baseline reference engine's.  Today's kernel/optimizer
+    invariants above never run a full engine step; this one does."""
+    from conftest import make_batch
+    from repro.configs.base import get_config
+    from repro.core.schedule import ExecutionConfig
+    cfg = get_config("bert-large", "smoke").replace(dtype="float32",
+                                                    n_layers=depth)
+    e_base = make_engine("baseline", cfg=cfg,
+                         exec_cfg=ExecutionConfig(n_microbatches=2))
+    e_l2l = make_engine("l2l", cfg=cfg, exec_cfg=ExecutionConfig(
+        n_microbatches=2, stash_every=stash_every, layers_per_relay=group,
+        prefetch_depth=prefetch, pack_params=pack))
+    params = e_base.model.init_params(jax.random.PRNGKey(seed))
+    batch = make_batch(cfg, 4, 8, seed=seed)
+    loss_b, gb = e_base.grads(params, batch)
+    loss_l, gl = e_l2l.grads(params, batch)
+    assert abs(float(loss_b) - float(loss_l)) < 1e-4
+    errs = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))), gb, gl)
+    assert max(jax.tree.leaves(errs)) < 1e-4
+
+
+# ---------------------------------------------------------------------------
 # invariant: L2L gradient identity holds for random microbatch splits
 # ---------------------------------------------------------------------------
 @settings(deadline=None, max_examples=6,

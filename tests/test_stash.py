@@ -1,0 +1,155 @@
+"""Constant-memory stash (ExecutionConfig.stash_every) invariants.
+
+With ``stash_every = K`` the forward relay checkpoints only the layer
+boundaries at indices = 0 (mod K) within each group — ceil(N/K) stashed
+boundaries instead of N — and the reverse relay recomputes the missing
+boundaries by re-streaming each K-segment's weights forward through the
+relay executor before running the recompute-vjp backward over the
+segment.  That is a pure SCHEDULE change: gradients, post-update params
+and optimizer state must be bit-identical to the stash-every-boundary
+schedule for every (K, G, prefetch, pack) point, for both the trailing
+(l2l / Alg 3) and eager (l2l-p / Alg 4) optimizers — including
+non-divisible depths (remainder segment), K = N (one checkpoint per
+group) and K > N.
+"""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from conftest import make_batch
+from repro.configs.base import get_config
+from repro.core.relay import segment_bounds
+from repro.core.schedule import ExecutionConfig
+from repro.optim import adam
+
+# n_layers=5 below: K=2 and K=3 leave a short remainder segment
+# (non-divisible depth), K=5 == N is the single-checkpoint-per-group
+# edge, K=7 > N.  Crossed with {G} x {prefetch} x {pack} so the segment
+# recompute is exercised against grouping, the prefetch ring and the
+# packed flat-buffer transport — mirroring test_relay.py's grid.
+KS = (2, 3, 5, 7)
+GRID = list(itertools.product(KS, (1, 3), (0, 2), (False, True)))
+
+
+def _cfg(arch="bert-large", n_layers=5):
+    return get_config(arch, "smoke").replace(dtype="float32",
+                                             n_layers=n_layers)
+
+
+def _assert_trees_bitwise(a, b, what):
+    mismatched = [
+        k for k, (x, y) in enumerate(zip(jax.tree.leaves(a),
+                                         jax.tree.leaves(b)))
+        if not bool(jnp.all(x == y))]
+    assert not mismatched, f"{what}: leaves {mismatched} differ"
+
+
+# ---------------------------------------------------------------------------
+# segment_bounds unit behavior
+# ---------------------------------------------------------------------------
+def test_segment_bounds():
+    assert segment_bounds(5, 1) == ((0, 1), (1, 2), (2, 3), (3, 4), (4, 5))
+    assert segment_bounds(5, 2) == ((0, 2), (2, 4), (4, 5))
+    assert segment_bounds(5, 3) == ((0, 3), (3, 5))
+    assert segment_bounds(5, 5) == ((0, 5),)
+    assert segment_bounds(5, 7) == ((0, 5),)
+    assert segment_bounds(6, 2) == ((0, 2), (2, 4), (4, 6))
+    for n, k in [(5, 2), (24, 7), (1, 3), (6, 6)]:
+        segs = segment_bounds(n, k)
+        assert len(segs) == -(-n // k)                 # ceil(N/K)
+        assert segs[0][0] == 0 and segs[-1][1] == n
+        assert all(a1 == b0 for (_, a1), (b0, _) in zip(segs, segs[1:]))
+        assert all(s0 % k == 0 for s0, _ in segs)      # = 0 (mod K)
+
+
+def test_stash_every_validated():
+    assert ExecutionConfig(stash_every=4).stash_every == 4
+    with pytest.raises(AssertionError):
+        ExecutionConfig(stash_every=0)
+
+
+def test_registry_threads_stash_every():
+    from repro import engine as engines
+    eng = engines.create("l2l-p", get_config("bert-large", "smoke"),
+                         ExecutionConfig(n_microbatches=2),
+                         exec_overrides={"stash_every": 3})
+    assert eng.exec_cfg.stash_every == 3
+
+
+# ---------------------------------------------------------------------------
+# full train step: every (K, G, prefetch, pack) point is bit-identical
+# to stash_every=1 for l2l and l2l-p
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", ["l2l", "l2l-p"])
+def test_stash_train_step_bit_identical_across_grid(name, make_engine):
+    """One optimizer step (trailing Alg-3 relay for l2l, eager Alg-4 for
+    l2l-p): grads, post-update params and opt state must match the K=1
+    reference bitwise across {K} x {G} x {prefetch} x {pack}."""
+    from repro.core import packing
+    cfg = _cfg()
+    batch = make_batch(cfg, 4, 16)
+    ref = None
+    for K, G, k, pk in [(1, 1, 0, False)] + GRID:
+        eng = make_engine(name, optimizer=adam(lr=1e-3),
+                          exec_cfg=ExecutionConfig(
+                              n_microbatches=2, stash_every=K,
+                              prefetch_depth=k, layers_per_relay=G,
+                              pack_params=pk),
+                          cfg=cfg)
+        state, m = eng.train_step(eng.init(jax.random.PRNGKey(0)), batch)
+        params, opt = state.params, state.legacy_opt()
+        if pk:
+            opt = packing.unpack_opt_state(opt, params)
+            params = packing.unpack_params(params)
+        if ref is None:
+            ref = (float(m["loss"]), params, opt)
+            continue
+        tag = f"{name} K={K} G={G} k={k} pack={pk}"
+        assert float(m["loss"]) == ref[0], tag
+        _assert_trees_bitwise(params, ref[1], f"{tag} params")
+        _assert_trees_bitwise(opt, ref[2], f"{tag} opt state")
+
+
+def test_stash_grads_cover_multi_group_and_mem_archs(make_engine):
+    """The segment recompute must thread the encoder-decoder transition
+    and cross-attention memory (whisper: two groups of different,
+    non-divisible depths) exactly like the every-boundary schedule."""
+    from repro.models.model import LayeredModel
+    cfg = get_config("whisper-base", "smoke").replace(dtype="float32")
+    batch = make_batch(cfg, 4, 16)
+    params = LayeredModel(cfg).init_params(jax.random.PRNGKey(0))
+    outs = {}
+    for K, G, k, pk in [(1, 1, 0, False), (2, 2, 1, True),
+                        (3, 1, 2, False), (4, 3, 0, False)]:
+        eng = make_engine("l2l-p", "whisper-base", exec_cfg=ExecutionConfig(
+            n_microbatches=2, stash_every=K, prefetch_depth=k,
+            layers_per_relay=G, pack_params=pk))
+        outs[(K, G, k, pk)] = eng.grads(params, batch)
+    ref = outs[(1, 1, 0, False)]
+    for key, (loss, g) in outs.items():
+        assert float(loss) == float(ref[0]), f"whisper {key}"
+        _assert_trees_bitwise(g, ref[1], f"whisper {key}")
+
+
+def test_stash_composes_with_amp_loss_scale(make_engine):
+    """The recompute backward also carries the AMP head cotangent and the
+    per-layer finiteness skip — one scaled step must match K=1 bitwise."""
+    cfg = _cfg()
+    batch = make_batch(cfg, 4, 16)
+    ref = None
+    for K in (1, 2, 5):
+        eng = make_engine("l2l-p", optimizer=adam(lr=1e-3),
+                          exec_cfg=ExecutionConfig(
+                              n_microbatches=2, stash_every=K,
+                              loss_scale_init=2.0 ** 10),
+                          cfg=cfg)
+        state, m = eng.train_step(eng.init(jax.random.PRNGKey(0)), batch)
+        got = (float(m["loss"]), state.params, state.legacy_opt())
+        if ref is None:
+            ref = got
+            continue
+        assert got[0] == ref[0], f"K={K}"
+        _assert_trees_bitwise(got[1], ref[1], f"K={K} params")
+        _assert_trees_bitwise(got[2], ref[2], f"K={K} opt state")
