@@ -1,7 +1,7 @@
 PY ?= python
 
 .PHONY: verify test bench bench-relay bench-pack bench-group bench-stash \
-	quickstart
+	bench-serve quickstart
 
 # tier-1 verification (quick: slow multi-device subprocess tests deselected)
 verify:
@@ -36,6 +36,12 @@ bench-group:
 # counts; writes BENCH_stash.json at the repo root
 bench-stash:
 	PYTHONPATH=src $(PY) benchmarks/fig_stash.py --tiny
+
+# continuous-batching serve sweep (tok/s + p50/p99 latency vs
+# concurrency under Poisson load); writes BENCH_serve.json at the repo
+# root and fails when throughput stops scaling with concurrency
+bench-serve:
+	PYTHONPATH=src $(PY) benchmarks/fig_serve.py --tiny
 
 quickstart:
 	PYTHONPATH=src $(PY) examples/quickstart.py

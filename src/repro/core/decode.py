@@ -30,7 +30,12 @@ def make_serve_step(model, exec_cfg: ExecutionConfig,
     (logits, new_caches).
 
     ``caches``: tuple over decode groups of stacked per-layer cache trees.
-    ``token``: (B, 1) int32;  ``cur_pos``: scalar int32 absolute position.
+    ``token``: (B, T) int32 (T = 1 historically);  ``cur_pos``: scalar
+    int32 absolute position, or per-row (B,)/(B,T) positions (continuous
+    batching — each batch slot decodes at its own offset; negative
+    positions mark padding/inactive rows whose cache writes are dropped
+    and whose outputs are garbage to be ignored).  The scalar single-token
+    form emits the historical program byte-for-byte.
 
     The serving weight relay (EPS streaming, prefetch ring, packed slots,
     G-layer groups) is the same ``relay_scan`` the training scans use:

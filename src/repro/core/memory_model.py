@@ -69,9 +69,21 @@ class MemoryReport:
     recompute_layers: int = 0
     recompute_stops: int = 0
     recompute_buffer: int = 0
+    # --- serve mode (continuous batching, estimate_serve) ---------------
+    # The serve-time device residents replacing the training stash terms:
+    # the paged KV pool (n_pages fixed-size pages shared by all slots —
+    # the knob that decouples cache memory from max_batch * max_seq), the
+    # per-slot recurrent state (SSM/conv/RWKV leaves, max_batch-major),
+    # and the tick's relay DMA trip count (sum of ceil(n_layers/G) over
+    # decode groups — paid ONCE per tick for ALL in-flight requests; the
+    # per-request DMA cost is relay_stops_per_tick / batch).
+    kv_page_bytes: int = 0
+    slot_state_bytes: int = 0
+    relay_stops_per_tick: int = 0
 
     def finalize(self):
         self.total_device = (self.params_device + self.activations
+                             + self.kv_page_bytes + self.slot_state_bytes
                              + (0 if self.stash_on_host
                                 else self.stash + self.recompute_buffer))
         self.total_host = (self.params_host + self.opt_state
@@ -224,6 +236,57 @@ def estimate(model: LayeredModel, *, batch: int, seq: int,
         recompute_layers=rec_layers,
         recompute_stops=rec_stops,
         recompute_buffer=rec_buffer).finalize()
+
+
+def estimate_serve(model: LayeredModel, *, max_batch: int, page_size: int,
+                   n_pages: int, max_seq: int, prefill_chunk: int = 1,
+                   weight_stream: bool = True, prefetch_depth: int = 0,
+                   pack_params: bool = False, layers_per_relay: int = 1,
+                   act_dtype_bytes: int = 2, cache_dtype_bytes: int = 2,
+                   param_dtype_bytes: int = 4) -> MemoryReport:
+    """Serve-mode byte split for the continuous-batching engine
+    (``repro.serve``): no optimizer / stash terms; instead the device
+    holds the paged KV pool, the per-slot recurrent state and — with
+    ``weight_stream`` — the G·(1 + prefetch) relay slots of eq. (2)'s
+    weight transit (the whole stack stays EPS-resident).  The per-tick
+    relay DMA trip count lands in ``relay_stops_per_tick``: layer-major
+    continuous batching pays it once per tick for every in-flight
+    request, so its per-request share shrinks as concurrency grows — the
+    scaling ``benchmarks/fig_serve.py`` measures.
+    """
+    from repro.serve.paged_kv import pool_bytes
+    cfg = model.cfg
+    d = cfg.d_model
+    L_max, L_total = _layer_bytes(model, param_dtype_bytes)
+    G = max(1, layers_per_relay)
+    kv, slot_state, _ = pool_bytes(
+        model, max_batch=max_batch, page_size=page_size, n_pages=n_pages,
+        max_seq=max_seq, cache_dtype_bytes=cache_dtype_bytes)
+    ff = max(cfg.d_ff, cfg.d_ff_expert * max(cfg.experts_per_token, 1)
+             if cfg.n_experts else cfg.d_ff)
+    # the tick's live activations: max_batch rows x prefill_chunk query
+    # positions through one layer's working set
+    act = max_batch * prefill_chunk * (2 * d + 2 * ff) * act_dtype_bytes
+    if weight_stream:
+        slot = _slot_bytes(model, param_dtype_bytes, G)
+        params_device = (1 + prefetch_depth) * slot
+        params_host = L_total
+    else:
+        params_device, params_host = L_total, 0
+    n_leaves = max(len(jax.tree.leaves(g.spec, is_leaf=is_spec))
+                   for g in model.groups)
+    stops = sum(n_stops(g.n_layers, G) for g in model.decode_groups())
+    return MemoryReport(
+        params_device=params_device,
+        params_host=params_host,
+        opt_state=0,
+        activations=act,
+        stash=0, stash_on_host=False,
+        relay_copies_weights=1 if pack_params else n_leaves,
+        relay_stops=stops,
+        kv_page_bytes=kv,
+        slot_state_bytes=slot_state,
+        relay_stops_per_tick=stops if weight_stream else 0).finalize()
 
 
 # ---------------------------------------------------------------------------

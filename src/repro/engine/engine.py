@@ -234,6 +234,37 @@ class Engine:
         return self._fns["decode_step"](self._relay_params(params), caches,
                                         token, cur_pos)
 
+    # -- continuous-batching serve ------------------------------------------
+    def serve_session(self, state_or_params, serve_cfg=None, **kw):
+        """Open a continuous-batching serve session (``repro.serve``):
+        a paged-KV ServeEngine over this engine's model, relay knobs and
+        placements.  ``serve_cfg`` is a ``ServeConfig``; keyword shape
+        knobs (max_batch, page_size, ...) build one when omitted::
+
+            srv = eng.serve_session(params, max_batch=8, max_seq=64)
+            srv.submit(prompt_ids, max_new=32)
+            done = srv.run()
+        """
+        from repro.serve.engine import ServeConfig, ServeEngine
+        params = getattr(state_or_params, "params", state_or_params)
+        if serve_cfg is None:
+            serve_cfg = ServeConfig(**kw)
+        return ServeEngine(self, params, serve_cfg)
+
+    def serve_memory_estimate(self, serve_cfg, **kw) -> MemoryReport:
+        """Analytic serve-mode byte split (paged pool + slot state +
+        relay transit) for this engine's knobs at a ServeConfig shape."""
+        from repro.core.memory_model import estimate_serve
+        kw.setdefault("weight_stream", self.exec_cfg.weight_stream)
+        kw.setdefault("prefetch_depth", self.exec_cfg.prefetch_depth)
+        kw.setdefault("pack_params", self.exec_cfg.pack_params)
+        kw.setdefault("layers_per_relay", self.exec_cfg.layers_per_relay)
+        return estimate_serve(
+            self.model, max_batch=serve_cfg.max_batch,
+            page_size=serve_cfg.page_size, n_pages=serve_cfg.n_pages,
+            max_seq=serve_cfg.max_seq,
+            prefill_chunk=serve_cfg.prefill_chunk, **kw)
+
     # -- analysis -----------------------------------------------------------
     def memory_estimate(self, *, batch: int, seq: int,
                         **kw) -> MemoryReport:

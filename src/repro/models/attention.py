@@ -288,23 +288,66 @@ def _ring_index(cur_pos, cache_len):
     return jnp.mod(cur_pos, cache_len)
 
 
+def decode_positions(x, cur_pos):
+    """Normalize a decode position argument to a (B, T) int32 array.
+
+    ``cur_pos`` is either the historical scalar (one shared absolute
+    position; T must be 1) or a (B,) / (B, T) per-row position array — the
+    continuous-batching case, where every batch slot decodes at its own
+    sequence offset and negative entries mark padding / inactive slots."""
+    B, T = x.shape[0], x.shape[1]
+    if jnp.ndim(cur_pos) == 0:
+        return jnp.full((B, T), cur_pos, jnp.int32)
+    pos = jnp.asarray(cur_pos, jnp.int32)
+    if pos.ndim == 1:
+        pos = pos[:, None]
+    return jnp.broadcast_to(pos, (B, T))
+
+
+def ring_scatter(buf, new, pos):
+    """Write per-row ring-buffer entries: ``new[b, t]`` lands at slot
+    ``pos[b, t] % cache_len`` of row b.  Entries with ``pos < 0`` (padding
+    query rows / inactive batch slots) are DROPPED — the scatter targets an
+    out-of-bounds slot, so the cache row is untouched.  buf: (B, S, ...);
+    new: (B, T, ...); pos: (B, T) int32."""
+    S = buf.shape[1]
+    valid = pos >= 0
+    slot = jnp.where(valid, jnp.mod(pos, S), S)      # S = OOB -> dropped
+    bidx = jnp.broadcast_to(jnp.arange(buf.shape[0])[:, None], pos.shape)
+    return buf.at[bidx, slot].set(new.astype(buf.dtype), mode="drop")
+
+
 def decode_self_attention(w, x, cache, cfg, cur_pos, *, window: int = 0,
                           rope: bool = True):
-    """One decode step.  x: (B,1,d); cache: dict from kv_cache_spec;
-    cur_pos: scalar int32 — current absolute position (same for the batch).
+    """One decode step.  x: (B,T,d) (T=1 historically); cache: dict from
+    kv_cache_spec; cur_pos: scalar int32 — current absolute position (same
+    for the batch) — or per-row (B,)/(B,T) positions (continuous batching:
+    each slot at its own offset; negative = masked padding, no write).
 
-    The new k/v is written at ``cur_pos % cache_len`` (ring buffer: for
-    full-context decode cache_len == seq so this is just cur_pos)."""
+    The new k/v is written at ``pos % cache_len`` (ring buffer: for
+    full-context decode cache_len == seq so this is just pos)."""
     dt = x.dtype
     B = x.shape[0]
-    pos = jnp.full((B, 1), cur_pos, jnp.int32)
-    q, k_new, v_new = qkv_project(w, x, cfg, pos, rope=rope)
-    slot = _ring_index(cur_pos, cache["pos"].shape[1])
-    k = jax.lax.dynamic_update_slice_in_dim(
-        cache["k"], k_new.astype(cache["k"].dtype), slot, axis=1)
-    v = jax.lax.dynamic_update_slice_in_dim(
-        cache["v"], v_new.astype(cache["v"].dtype), slot, axis=1)
-    cpos = jax.lax.dynamic_update_slice_in_dim(cache["pos"], pos, slot, axis=1)
+    if jnp.ndim(cur_pos) == 0 and x.shape[1] == 1:
+        # historical scalar path, preserved byte-for-byte
+        pos = jnp.full((B, 1), cur_pos, jnp.int32)
+        q, k_new, v_new = qkv_project(w, x, cfg, pos, rope=rope)
+        slot = _ring_index(cur_pos, cache["pos"].shape[1])
+        k = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k_new.astype(cache["k"].dtype), slot, axis=1)
+        v = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v_new.astype(cache["v"].dtype), slot, axis=1)
+        cpos = jax.lax.dynamic_update_slice_in_dim(cache["pos"], pos, slot,
+                                                   axis=1)
+    else:
+        pos = decode_positions(x, cur_pos)
+        # rope at clamped positions: padding rows are masked out anyway,
+        # and valid rows have pos >= 0 so the clamp is the identity there
+        q, k_new, v_new = qkv_project(w, x, cfg, jnp.maximum(pos, 0),
+                                      rope=rope)
+        k = ring_scatter(cache["k"], k_new, pos)
+        v = ring_scatter(cache["v"], v_new, pos)
+        cpos = ring_scatter(cache["pos"], pos, pos)
     if cfg.grouped_decode_attn:
         o = attend_grouped_decode(q, k.astype(dt), v.astype(dt), pos, cpos,
                                   causal=True, window=window)
@@ -319,25 +362,39 @@ def decode_self_attention(w, x, cache, cfg, cur_pos, *, window: int = 0,
 def decode_mla_attention(w, x, cache, cfg, cur_pos, *, window: int = 0):
     """Absorbed-matmul MLA decode: scores against the *compressed* cache.
 
-    q_nope (B,1,H,nd) is absorbed through w_uk into the lora space, so the
-    per-step cost is O(S * (r + rd) * H) instead of O(S * H * (nd+rd))."""
+    q_nope (B,T,H,nd) is absorbed through w_uk into the lora space, so the
+    per-step cost is O(S * (r + rd) * H) instead of O(S * H * (nd+rd)).
+    ``cur_pos`` is a scalar (historical; T = 1) or per-row (B,)/(B,T)
+    positions with negative entries masked (continuous batching)."""
     dt = x.dtype
     B = x.shape[0]
     H, nd, rd, r = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.kv_lora_rank
-    pos = jnp.full((B, 1), cur_pos, jnp.int32)
+    scalar_pos = jnp.ndim(cur_pos) == 0 and x.shape[1] == 1
+    if scalar_pos:
+        pos = jnp.full((B, 1), cur_pos, jnp.int32)
+        rope_pos = pos
+    else:
+        pos = decode_positions(x, cur_pos)
+        rope_pos = jnp.maximum(pos, 0)
     q = jnp.einsum("bsd,dhe->bshe", x, w["wq"].astype(dt))
     q_nope, q_rope = q[..., :nd], q[..., nd:]
-    q_rope = apply_rope(q_rope, pos, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, rope_pos, cfg.rope_theta)
     c_new = x @ w["w_dkv"].astype(dt)
     c_new = apply_norm({"scale": w["kv_norm"]}, c_new, cfg.norm_eps)
     kr_new = (x @ w["w_kr"].astype(dt))[:, :, None, :]
-    kr_new = apply_rope(kr_new, pos, cfg.rope_theta)[:, :, 0, :]
-    slot = _ring_index(cur_pos, cache["pos"].shape[1])
-    c = jax.lax.dynamic_update_slice_in_dim(
-        cache["c"], c_new.astype(cache["c"].dtype), slot, axis=1)
-    kr = jax.lax.dynamic_update_slice_in_dim(
-        cache["kr"], kr_new.astype(cache["kr"].dtype), slot, axis=1)
-    cpos = jax.lax.dynamic_update_slice_in_dim(cache["pos"], pos, slot, axis=1)
+    kr_new = apply_rope(kr_new, rope_pos, cfg.rope_theta)[:, :, 0, :]
+    if scalar_pos:
+        slot = _ring_index(cur_pos, cache["pos"].shape[1])
+        c = jax.lax.dynamic_update_slice_in_dim(
+            cache["c"], c_new.astype(cache["c"].dtype), slot, axis=1)
+        kr = jax.lax.dynamic_update_slice_in_dim(
+            cache["kr"], kr_new.astype(cache["kr"].dtype), slot, axis=1)
+        cpos = jax.lax.dynamic_update_slice_in_dim(cache["pos"], pos, slot,
+                                                   axis=1)
+    else:
+        c = ring_scatter(cache["c"], c_new, pos)
+        kr = ring_scatter(cache["kr"], kr_new, pos)
+        cpos = ring_scatter(cache["pos"], pos, pos)
     # absorb: q_abs = q_nope @ w_uk  -> (B,1,H,r)
     q_abs = jnp.einsum("bshe,rhe->bshr", q_nope, w["w_uk"].astype(dt))
     scale = 1.0 / math.sqrt(nd + rd)

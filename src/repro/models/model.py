@@ -236,13 +236,16 @@ class LayeredModel:
     # decode embedding / head
     # ------------------------------------------------------------------
     def decode_embed(self, static, token, cur_pos):
-        """token: (B,1) -> x (B,1,d)."""
+        """token: (B,T) (T=1 historically) -> x (B,T,d).  ``cur_pos`` is a
+        scalar or per-row (B,)/(B,T) position array (continuous batching);
+        negative entries mark padding rows (their embeddings are computed
+        but masked downstream)."""
         cfg = self.cfg
         dt = self._dtype()
         x = jnp.take(static["embed"]["tok"], token, axis=0).astype(dt)
         if cfg.family == "audio":
-            B = token.shape[0]
-            pos = jnp.full((B, 1), cur_pos, jnp.int32)
+            from repro.models.attention import decode_positions
+            pos = jnp.maximum(decode_positions(x, cur_pos), 0)
             x = x + sinusoidal(pos, cfg.d_model, dt)
         return x
 

@@ -1,0 +1,20 @@
+"""Layer-major continuous-batching serve subsystem.
+
+Continuous batching restated in L2L's layer-major order: every in-flight
+sequence is pushed through each layer stop of ONE weight-relay sweep per
+decode tick, so the per-layer EPS DMA is amortized over the whole
+in-flight set instead of being a per-request tax.
+
+* ``paged_kv``  — fixed-size KV pages from a shared pool, per-slot page
+  tables, gather/scatter between the pool and the contiguous per-slot
+  views the decode kernels consume.
+* ``scheduler`` — host-side admission queue, slot pool and page
+  allocator: requests join/leave mid-flight without recompiling.
+* ``sampling``  — greedy / temperature / top-k sampling with a seeded
+  PRNG threaded per request.
+* ``engine``    — the jitted tick: one ``relay_scan`` sweep per decode
+  step for all active slots, exposed through the Engine facade as
+  ``Engine.serve_session``.
+"""
+from repro.serve.engine import ServeConfig, ServeEngine     # noqa: F401
+from repro.serve.scheduler import Request, Scheduler        # noqa: F401

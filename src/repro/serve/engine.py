@@ -1,0 +1,204 @@
+"""The serve tick: ONE relay sweep per decode step for every live slot.
+
+``make_serve_tick`` is ``core.decode.make_serve_step`` restated over the
+paged pool: the SAME ``relay_scan`` (G-layer grouping, k-deep prefetch
+ring, packed flat-buffer transport all unchanged) walks the layer stack
+once per tick, and at each stop the body gathers the slot-contiguous
+cache view from the page pool, runs the group's unmodified decode kernel
+for ALL in-flight requests at once, and scatters this tick's new entries
+back.  Per-layer EPS DMA cost is therefore paid once per tick, not once
+per request — the layer-major continuous-batching claim this subsystem
+exists to demonstrate.
+
+Everything dynamic (tokens, positions, page tables, active mask, claim
+lists, sampling knobs) enters as fixed-shape arrays from the Scheduler,
+so the tick compiles exactly once per (max_batch, prefill_chunk,
+pages_per_slot) and requests join/leave mid-flight for free.  Sampling
+(greedy / temperature / top-k, per-request PRNG streams) happens inside
+the jit; pools are donated, so steady-state serve memory is constant.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import packing
+from repro.core.relay import Stream, relay_scan
+from repro.serve import paged_kv, sampling
+from repro.serve.scheduler import Request, Scheduler
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Shape of the serve session (all static — they pick the ONE
+    compiled tick program).
+
+    * ``max_seq``  — logical cache positions per slot; must equal
+      ``decode_window`` when the engine decodes with a ring.
+    * ``n_pages``  — physical page pool shared by all slots; admission
+      blocks (never deadlocks) when reservations would exceed it.
+    * ``prefill_chunk`` — prompt tokens a prefilling slot feeds per tick
+      (extra query rows on the same sweep); recurrent families (ssm /
+      hybrid) are strictly single-token and force 1.
+    """
+    max_batch: int = 4
+    page_size: int = 8
+    n_pages: int = 32
+    max_seq: int = 64
+    prefill_chunk: int = 1
+
+
+def make_serve_tick(model, exec_cfg, placements, serve_cfg: ServeConfig):
+    """Returns tick(params, pools, plan-arrays) -> (tokens, new_pools)."""
+    PF = exec_cfg.prefetch_depth
+    PK = exec_cfg.pack_params
+    G = exec_cfg.layers_per_relay
+    page_size = serve_cfg.page_size
+    dgroups = model.decode_groups()
+    gidx = [i for i, g in enumerate(model.groups) if not g.is_encoder]
+    gpages = paged_kv.group_pages(model, serve_cfg.max_batch,
+                                  serve_cfg.max_seq)
+
+    def tick(params, pools, tokens, pos, table, active, last_idx, seeds,
+             sample_pos, temp, top_k, new_pages, new_slots):
+        # claim-time hygiene first: new pages' pos -> -1, new slots'
+        # recurrent state -> 0 (both no-ops when the id lists are padding)
+        pools = paged_kv.reset_claim(pools, gpages, new_pages, new_slots)
+        static = {"embed": params["embed"], "head": params["head"]}
+        x = model.decode_embed(static, tokens, pos)
+        ctx = model.decode_ctx(pos, window=exec_cfg.decode_window)
+        new_pools = []
+        for di, group in enumerate(dgroups):
+            wp = placements.weights[gidx[di]]
+            gp = gpages[di]
+
+            def body(x_c, slots, pool_l, _g=group, _gp=gp):
+                (w,) = slots
+                if PK:
+                    w = packing.unpack(w)
+                view = paged_kv.gather_view(pool_l, _gp, table, page_size)
+                x2, new_view = _g.decode(w, x_c, view, None, ctx)
+                pool2 = paged_kv.scatter_new(pool_l, new_view, _gp, table,
+                                             pos, active)
+                return x2, pool2
+
+            x, np_ = relay_scan(
+                body, x, (Stream(wp, params["groups"][gidx[di]]),),
+                xs=pools[di], group=G, prefetch=PF,
+                unroll=exec_cfg.unroll_layers)
+            new_pools.append(np_)
+        logits = model.decode_logits(static, x)              # (B, T, V)
+        idx = last_idx[:, None, None]
+        last = jnp.take_along_axis(
+            logits, jnp.broadcast_to(idx, (logits.shape[0], 1,
+                                           logits.shape[2])), axis=1)[:, 0]
+        toks = sampling.sample(last, seeds, sample_pos, temp, top_k)
+        return toks, tuple(new_pools)
+
+    return tick
+
+
+class ServeEngine:
+    """A continuous-batching serve session over an existing Engine.
+
+    Owns the page pools, the Scheduler and the jitted tick; the Engine
+    contributes its model, ExecutionConfig and EPS placements, so every
+    relay knob (weight_stream / prefetch / group / pack / window)
+    composes with serving unchanged::
+
+        srv = eng.serve_session(params, ServeConfig(max_batch=8))
+        srv.submit(prompt_ids, max_new=32)
+        finished = srv.run()              # tick until idle
+        finished[0].generated             # -> token ids
+    """
+
+    def __init__(self, engine, params, serve_cfg: Optional[ServeConfig]
+                 = None):
+        serve_cfg = serve_cfg or ServeConfig()
+        model = engine.model
+        fam = model.cfg.family
+        if fam == "audio":
+            raise NotImplementedError(
+                "continuous-batching serve does not cover the audio "
+                "family (encoder cross-KV is per-request, not paged)")
+        if fam in ("ssm", "hybrid") and serve_cfg.prefill_chunk != 1:
+            # recurrent state admits exactly one token per step
+            serve_cfg = dataclasses.replace(serve_cfg, prefill_chunk=1)
+        window = engine.exec_cfg.decode_window
+        if window and serve_cfg.max_seq != window:
+            raise ValueError(
+                f"ServeConfig.max_seq ({serve_cfg.max_seq}) must equal "
+                f"decode_window ({window}) — the ring IS the slot")
+        if serve_cfg.max_seq % serve_cfg.page_size:
+            raise ValueError("page_size must divide max_seq")
+        P = serve_cfg.max_seq // serve_cfg.page_size
+        if serve_cfg.n_pages < P:
+            raise ValueError(
+                f"n_pages ({serve_cfg.n_pages}) cannot back even one "
+                f"slot ({P} pages)")
+
+        self.engine = engine
+        self.model = model
+        self.cfg = serve_cfg
+        self.params = engine._relay_params(params)
+        self.scheduler = Scheduler(
+            max_batch=serve_cfg.max_batch, page_size=serve_cfg.page_size,
+            n_pages=serve_cfg.n_pages, max_seq=serve_cfg.max_seq,
+            prefill_chunk=serve_cfg.prefill_chunk, window=window)
+        self.pools = paged_kv.init_pool(
+            model, max_batch=serve_cfg.max_batch,
+            page_size=serve_cfg.page_size, n_pages=serve_cfg.n_pages,
+            max_seq=serve_cfg.max_seq)
+        self._tick = jax.jit(
+            make_serve_tick(model, engine.exec_cfg, engine.placements,
+                            serve_cfg),
+            donate_argnums=(1,))
+        self._t0 = time.monotonic()
+        self.n_ticks = 0
+        self.tokens_out = 0
+
+    # ------------------------------------------------------------------
+    def _now(self) -> float:
+        return time.monotonic() - self._t0
+
+    def submit(self, prompt, max_new: int, **kw) -> Request:
+        return self.scheduler.submit(prompt, max_new, now=self._now(),
+                                     **kw)
+
+    def tick(self) -> List[Request]:
+        """Run one relay sweep for all live slots; returns the requests
+        that finished this tick (empty when idle or none finished)."""
+        plan = self.scheduler.plan_tick(now=self._now())
+        if plan is None:
+            return []
+        toks, self.pools = self._tick(
+            self.params, self.pools, plan.tokens, plan.pos, plan.table,
+            plan.active, plan.last_idx, plan.seeds, plan.sample_pos,
+            plan.temp, plan.top_k, plan.new_pages, plan.new_slots)
+        toks = np.asarray(toks)                  # sync point
+        self.n_ticks += 1
+        self.tokens_out += int(plan.sample.sum())
+        return self.scheduler.record(toks, now=self._now())
+
+    def run(self, max_ticks: int = 100_000) -> List[Request]:
+        """Tick until every submitted request has finished."""
+        done: List[Request] = []
+        for _ in range(max_ticks):
+            if self.scheduler.idle:
+                break
+            done.extend(self.tick())
+        else:
+            raise RuntimeError(f"serve did not drain in {max_ticks} ticks")
+        return done
+
+    # ------------------------------------------------------------------
+    def stats(self) -> dict:
+        out = dict(self.scheduler.stats())
+        out.update(ticks=self.n_ticks, tokens_out=self.tokens_out,
+                   elapsed_s=self._now())
+        return out

@@ -1,0 +1,246 @@
+"""Paged KV cache: fixed-size pages from a shared pool + per-slot tables.
+
+The single-batch decode path keeps one contiguous ``(B, live, ...)`` cache
+per layer.  For continuous batching that layout wastes HBM — every slot
+pays for its worst-case context — and couples a request's lifetime to a
+fixed batch row.  Here the sequence axis is cut into fixed-size **pages**
+held in one pool per cache leaf::
+
+    paged leaf   (n_layers, n_pages, page_size, ...)   # k/v/c/kr/pos
+    slot leaf    (n_layers, max_batch, ...)            # SSM/conv states
+
+and a **page table** ``(max_batch, pages_per_slot)`` of physical page ids
+(-1 = unmapped) maps each batch slot's logical ring positions onto pool
+pages.  The scheduler hands pages out from a free list and takes them back
+when a request leaves; slots and pages are recycled without recompiling
+anything — the tables are just int32 inputs of the jitted tick.
+
+The decode kernels (``models.blocks.*_decode``) are reused unchanged: at
+each relay stop the tick **gathers** a slot-contiguous view
+``(B, pages_per_slot * page_size, ...)`` from the pool (logical page
+order, so the view IS the historical contiguous cache), runs the layer's
+decode on it, then **scatters back** only the positions written this tick.
+Attention masks dead slots through the cache's own ``pos`` entries: the
+gather fills unmapped pages' positions with -1, the same invalid marker
+the ring buffer already uses, so no new masking path exists.
+
+Composition: the ``decode_window`` ring is just ``pages_per_slot *
+page_size == window`` (logical pages recycle as positions wrap); SSM /
+hybrid recurrent state rides the per-slot (non-paged) leaves.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec, is_spec, materialize
+
+
+def is_paged_spec(spec: ParamSpec) -> bool:
+    """A cache leaf pages iff it is laid out (batch, seq, ...) — the KV /
+    compressed-KV / position leaves.  Per-slot recurrent state (SSM h,
+    conv tails, RWKV wkv/shift) has no seq axis and stays slot-major."""
+    return tuple(spec.axes[:2]) == ("batch", "seq")
+
+
+class GroupPages(NamedTuple):
+    """Static paging metadata for one decode group's cache tree."""
+    spec: dict              # per-layer cache ParamSpec tree (batch=1 view)
+    paged: dict             # same structure: bool per leaf
+
+
+def _map_specs(fn, spec_tree, *trees):
+    """tree_map over a ParamSpec-leaf tree zipped with value trees."""
+    leaves, treedef = jax.tree.flatten(spec_tree, is_leaf=is_spec)
+    flats = [treedef.flatten_up_to(t) for t in trees]
+    out = [fn(s, *vals) for s, *vals in zip(leaves, *flats)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def group_pages(model, max_batch: int, max_seq: int):
+    """Per decode group: the per-layer cache spec at the serve shape and
+    its paged/slot classification."""
+    out = []
+    for g in model.decode_groups():
+        spec = g.cache_spec(max_batch, max_seq)
+        paged = _map_specs(lambda s: is_paged_spec(s), spec)
+        out.append(GroupPages(spec, paged))
+    return tuple(out)
+
+
+def pool_specs(model, *, max_batch: int, page_size: int, n_pages: int,
+               max_seq: int):
+    """Pooled ParamSpec trees, one per decode group, leaves stacked over
+    the group's layers: paged leaves become (n_layers, n_pages, page_size,
+    ...), slot leaves (n_layers, max_batch, ...)."""
+    groups = group_pages(model, max_batch, max_seq)
+    out = []
+    for g, gp in zip(model.decode_groups(), groups):
+        def one(spec, paged):
+            if paged:
+                shape = (g.n_layers, n_pages, page_size) + spec.shape[2:]
+                axes = ("layers", "pages") + tuple(spec.axes[1:])
+            else:
+                shape = (g.n_layers,) + spec.shape
+                axes = ("layers",) + tuple(spec.axes)
+            return ParamSpec(shape, axes, spec.init, spec.scale)
+        out.append(_map_specs(one, gp.spec, gp.paged))
+    return tuple(out)
+
+
+def init_pool(model, *, max_batch: int, page_size: int, n_pages: int,
+              max_seq: int, dtype=None, rng=None):
+    """Materialize the page pools (zeros for data, -1 for pos leaves)."""
+    dtype = dtype or jnp.dtype(model.cfg.dtype)
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    specs = pool_specs(model, max_batch=max_batch, page_size=page_size,
+                       n_pages=n_pages, max_seq=max_seq)
+    pools = []
+    for spec in specs:
+        tree = materialize(spec, rng, dtype)
+        tree = _fix_pos_leaves(tree)
+        pools.append(tree)
+    return tuple(pools)
+
+
+def _fix_pos_leaves(tree):
+    """'pos' leaves are int32 and start invalid (-1)."""
+    def walk(t):
+        if isinstance(t, dict):
+            return {k: (-jnp.ones(v.shape, jnp.int32) if k == "pos"
+                        else walk(v)) for k, v in t.items()}
+        return t
+    return walk(tree)
+
+
+# ---------------------------------------------------------------------------
+# gather / scatter between the pool and slot-contiguous views
+# ---------------------------------------------------------------------------
+def gather_view(pool_layer, pages: GroupPages, table, page_size: int):
+    """One layer's pool -> the contiguous (B, P*page_size, ...) per-slot
+    view the decode kernels expect.  ``table``: (B, P) physical page ids,
+    -1 = unmapped; unmapped pages read physical page 0 (clamped gather)
+    but their ``pos`` entries are forced to -1, so attention masks them —
+    the data leaves never need masking of their own."""
+    B, P = table.shape
+    safe = jnp.maximum(table, 0)
+    mapped = jnp.repeat(table >= 0, page_size, axis=1)       # (B, P*ps)
+
+    def one(spec, leaf):
+        if not is_paged_spec(spec):
+            return leaf
+        g = jnp.take(leaf, safe, axis=0)                     # (B,P,ps,...)
+        g = g.reshape((B, P * page_size) + leaf.shape[2:])
+        if spec.axes == ("batch", "seq"):                    # the pos leaf
+            g = jnp.where(mapped, g, -1)
+        return g
+
+    return _map_specs(one, pages.spec, pool_layer)
+
+
+def scatter_new(pool_layer, new_view, pages: GroupPages, table, pos,
+                active):
+    """Write back ONE tick's updates: for paged leaves, only the slots
+    written this tick (logical slot ``pos % (P*page_size)`` per row, the
+    same ring arithmetic the decode kernels used) are scattered into their
+    physical pages; rows with ``pos < 0`` (padding / inactive) and slots
+    whose logical page is unmapped are dropped.  Per-slot leaves (SSM
+    state) take the new value on active rows and keep the old elsewhere.
+
+    pool_layer/new_view: one layer's trees;  table: (B, P) int32;
+    pos: (B, T) int32 positions written this tick;  active: (B,) bool."""
+    B, P = table.shape
+    ps = None
+    for s in jax.tree.leaves(pages.spec, is_leaf=is_spec):
+        if is_paged_spec(s):
+            ps = True
+    if ps is None:                         # no paged leaves in this group
+        def slot_only(spec, old, new):
+            keep = active.reshape((B,) + (1,) * (old.ndim - 1))
+            return jnp.where(keep, new.astype(old.dtype), old)
+        return _map_specs(slot_only, pages.spec, pool_layer, new_view)
+
+    page_size = None
+
+    def one(spec, old, new):
+        nonlocal page_size
+        if not is_paged_spec(spec):
+            keep = active.reshape((B,) + (1,) * (old.ndim - 1))
+            return jnp.where(keep, new.astype(old.dtype), old)
+        if page_size is None:
+            page_size = old.shape[1]
+        live = P * page_size
+        valid = pos >= 0
+        slot = jnp.mod(pos, live)                            # (B,T) logical
+        logical_page = slot // page_size
+        bidx = jnp.broadcast_to(jnp.arange(B)[:, None], pos.shape)
+        phys = jnp.take_along_axis(
+            jnp.where(table >= 0, table, old.shape[0]),      # OOB -> drop
+            jnp.minimum(logical_page, P - 1), axis=1)
+        phys = jnp.where(valid, phys, old.shape[0])          # OOB -> drop
+        offset = jnp.mod(slot, page_size)
+        vals = new[bidx, slot]                               # (B,T,...)
+        return old.at[phys, offset].set(vals.astype(old.dtype),
+                                        mode="drop")
+
+    # page_size is derived from the first paged leaf encountered; all
+    # paged leaves in a group share it by construction
+    return _map_specs(one, pages.spec, pool_layer, new_view)
+
+
+# ---------------------------------------------------------------------------
+# claim-time resets (jitted once; page/slot id args are padded, OOB drops)
+# ---------------------------------------------------------------------------
+def reset_claim(pools, groups, page_ids, slot_ids):
+    """Invalidate freshly claimed pages and zero the claimed slots' state.
+
+    ``page_ids``: (R,) physical pages being handed to a new request — their
+    pooled ``pos`` entries go to -1 so stale positions from the previous
+    owner can never pass the attention mask.  ``slot_ids``: (Q,) batch
+    slots being claimed — their per-slot (SSM) state leaves are zeroed.
+    Pad both with -1 (mapped to an out-of-bounds index, dropped) to keep
+    one compiled program for every admission."""
+    out = []
+    for pool, pages in zip(pools, groups):
+        def one(spec, leaf):
+            if is_paged_spec(spec):
+                if spec.axes == ("batch", "seq"):            # pos leaf
+                    n = leaf.shape[1]
+                    ids = jnp.where(page_ids >= 0, page_ids, n)
+                    return leaf.at[:, ids].set(-1, mode="drop")
+                return leaf
+            n = leaf.shape[1]
+            ids = jnp.where(slot_ids >= 0, slot_ids, n)
+            zeros = jnp.zeros((leaf.shape[0], ids.shape[0])
+                              + leaf.shape[2:], leaf.dtype)
+            return leaf.at[:, ids].set(zeros, mode="drop")
+        out.append(_map_specs(one, pages.spec, pool))
+    return tuple(out)
+
+
+def pool_bytes(model, *, max_batch: int, page_size: int, n_pages: int,
+               max_seq: int, cache_dtype_bytes: int = 2):
+    """(kv_page_bytes, slot_state_bytes, n_paged_leaves) — the analytic
+    footprint of the pools (memory_model's serve-mode terms)."""
+    specs = pool_specs(model, max_batch=max_batch, page_size=page_size,
+                       n_pages=n_pages, max_seq=max_seq)
+    groups = group_pages(model, max_batch, max_seq)
+    kv = slot = npaged = 0
+    for spec_tree, gp in zip(specs, groups):
+        flat_s = jax.tree.leaves(spec_tree, is_leaf=is_spec)
+        flat_p = jax.tree.leaves(gp.paged)
+        for s, paged in zip(flat_s, flat_p):
+            size = 1
+            for d in s.shape:
+                size *= d
+            # pos leaves are int32 (4B); data leaves ride the cache dtype
+            nbytes = size * (4 if s.axes[-1] == "seq" and len(s.shape) == 3
+                             and paged else cache_dtype_bytes)
+            if paged:
+                kv += nbytes
+                npaged += 1
+            else:
+                slot += nbytes
+    return kv, slot, npaged

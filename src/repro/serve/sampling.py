@@ -1,0 +1,65 @@
+"""Token sampling: greedy / temperature / top-k with per-request PRNG.
+
+All paths are batched and jit-friendly — sampling runs INSIDE the serve
+tick so the host only ever sees the chosen token ids.  Stochastic rows
+derive their randomness from ``fold_in(PRNGKey(seed), position)``: a
+request's stream depends only on its own (seed, position) pair, so the
+same request replays the same tokens no matter which batch slot it lands
+in or who else is in flight.  ``temperature == 0`` rows are exactly
+``argmax`` (bit-identical to the historical greedy loop — the parity
+tests pin this).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def fold_keys(seeds, positions):
+    """Per-row PRNG keys: (B,) seeds x (B,) absolute positions -> (B,)
+    keys (vmapped fold_in, so row b's key is independent of every other
+    row)."""
+    keys = jax.vmap(jax.random.PRNGKey)(seeds.astype(jnp.uint32))
+    return jax.vmap(jax.random.fold_in)(
+        keys, jnp.maximum(positions, 0).astype(jnp.uint32))
+
+
+def sample(logits, seeds, positions, temperature, top_k):
+    """(B, V) logits -> (B,) int32 tokens.
+
+    temperature: (B,) float32 — 0 = greedy (exact argmax, no PRNG use).
+    top_k:       (B,) int32   — 0 = full vocab; else keep the k best.
+    seeds/positions: (B,) int32 — per-request PRNG stream (see module
+    docstring); ignored on greedy rows.
+    """
+    V = logits.shape[-1]
+    lf = logits.astype(jnp.float32)
+    greedy = jnp.argmax(lf, axis=-1).astype(jnp.int32)
+
+    # top-k: keep entries >= the k-th largest value (ties all kept — same
+    # convention as the reference implementations)
+    desc = -jnp.sort(-lf, axis=-1)
+    k_eff = jnp.where(top_k > 0, top_k, V)
+    k_idx = jnp.clip(k_eff - 1, 0, V - 1)
+    thresh = jnp.take_along_axis(desc, k_idx[:, None], axis=1)
+    masked = jnp.where(lf >= thresh, lf, NEG_INF)
+
+    temp = jnp.maximum(temperature, 1e-6)[:, None]
+    keys = fold_keys(seeds, positions)
+    drawn = jax.vmap(jax.random.categorical)(keys, masked / temp)
+    return jnp.where(temperature > 0, drawn.astype(jnp.int32), greedy)
+
+
+def sample_batch(logits, *, temperature: float = 0.0, top_k: int = 0,
+                 seed: int = 0, position=0):
+    """Uniform-settings convenience for the one-shot serve path: every
+    row shares (temperature, top_k) and the PRNG seed, but rows still
+    draw independently (row index folded into the seed)."""
+    B = logits.shape[0]
+    seeds = jnp.full((B,), seed, jnp.int32) + jnp.arange(B, dtype=jnp.int32)
+    pos = jnp.broadcast_to(jnp.asarray(position, jnp.int32), (B,))
+    return sample(logits, seeds, pos,
+                  jnp.full((B,), temperature, jnp.float32),
+                  jnp.full((B,), top_k, jnp.int32))

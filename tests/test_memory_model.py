@@ -4,7 +4,7 @@ import itertools
 import pytest
 
 from repro.configs.base import get_config
-from repro.core.memory_model import (estimate, for_config,
+from repro.core.memory_model import (estimate, estimate_serve, for_config,
                                      paper_worked_example)
 from repro.core.schedule import ExecutionConfig
 from repro.models.model import LayeredModel
@@ -251,6 +251,85 @@ def test_engine_memory_estimate_threads_group(make_engine):
     n_layers = sum(g.n_layers for g in e0.model.groups)
     assert r0.relay_stops == n_layers
     assert r1.relay_stops == -(-n_layers // 2)
+
+
+def test_serve_pool_bytes_scale_with_pages_not_slots():
+    """The point of paging: KV bytes follow the PHYSICAL pool
+    (n_pages * page_size), not max_batch * max_seq — doubling the slot
+    count moves only the per-slot recurrent state."""
+    model = LayeredModel(get_config("granite-3-8b", "smoke"))
+    base = estimate_serve(model, max_batch=4, page_size=8, n_pages=16,
+                          max_seq=64)
+    wide = estimate_serve(model, max_batch=8, page_size=8, n_pages=16,
+                          max_seq=64)
+    assert wide.kv_page_bytes == base.kv_page_bytes
+    more = estimate_serve(model, max_batch=4, page_size=8, n_pages=32,
+                          max_seq=64)
+    assert more.kv_page_bytes == 2 * base.kv_page_bytes
+    # granite is attention-only: no per-slot recurrent state
+    assert base.slot_state_bytes == 0
+    # the pool shows up in the device total
+    assert base.total_device >= base.kv_page_bytes
+
+
+def test_serve_slot_state_follows_max_batch_for_recurrent():
+    model = LayeredModel(get_config("rwkv6-1.6b", "smoke"))
+    b4 = estimate_serve(model, max_batch=4, page_size=8, n_pages=16,
+                        max_seq=64)
+    b8 = estimate_serve(model, max_batch=8, page_size=8, n_pages=16,
+                        max_seq=64)
+    assert b4.slot_state_bytes > 0
+    assert b8.slot_state_bytes == 2 * b4.slot_state_bytes
+    # rwkv has NO paged leaves: the whole cache is per-slot state
+    assert b4.kv_page_bytes == 0
+
+
+def test_serve_relay_terms_grid():
+    """Per-tick relay DMA: sum of ceil(n_layers/G) over decode groups,
+    independent of how many requests are in flight — the amortization
+    continuous batching banks on.  weight_stream off keeps the whole
+    stack device-resident and zeroes the per-tick relay count."""
+    model = LayeredModel(get_config("granite-3-8b", "smoke"))
+    n = sum(g.n_layers for g in model.decode_groups())
+    per_layer = estimate_serve(
+        model, max_batch=4, page_size=8, n_pages=16, max_seq=64,
+        weight_stream=True).params_device
+    for G, k in itertools.product((1, 2, 3), (0, 1, 2)):
+        r = estimate_serve(model, max_batch=4, page_size=8, n_pages=16,
+                           max_seq=64, weight_stream=True,
+                           layers_per_relay=G, prefetch_depth=k)
+        tag = f"G={G} k={k}"
+        assert r.relay_stops_per_tick == -(-n // G), tag
+        # same pool bytes regardless of relay knobs
+        assert r.kv_page_bytes > 0, tag
+        # streamed: EPS holds the whole stack, the device holds the
+        # (1 + k)-slot ring of min(G, depth)-layer slots
+        assert r.params_host == n * per_layer, tag
+        assert r.params_device == (1 + k) * min(G, n) * per_layer, tag
+    res = estimate_serve(model, max_batch=4, page_size=8, n_pages=16,
+                         max_seq=64, weight_stream=False)
+    assert res.relay_stops_per_tick == 0
+    assert res.params_host == 0 and res.params_device > 0
+    assert res.opt_state == 0                  # inference: no optimizer
+
+
+def test_engine_serve_memory_estimate_threads_knobs(make_engine):
+    from repro.serve.engine import ServeConfig
+    scfg = ServeConfig(max_batch=4, page_size=8, n_pages=16, max_seq=64)
+    e0 = make_engine("l2l", arch="granite-3-8b",
+                     exec_cfg=ExecutionConfig(weight_stream=True))
+    e1 = make_engine("l2l", arch="granite-3-8b",
+                     exec_cfg=ExecutionConfig(weight_stream=True,
+                                              layers_per_relay=2,
+                                              prefetch_depth=1))
+    r0 = e0.serve_memory_estimate(scfg)
+    r1 = e1.serve_memory_estimate(scfg)
+    n = sum(g.n_layers for g in e0.model.decode_groups())
+    assert r0.relay_stops_per_tick == n
+    assert r1.relay_stops_per_tick == -(-n // 2)
+    # G=2 slots, k=1 ring: 2*(1+1) single-layer footprints
+    assert r1.params_device == 2 * (1 + 1) * r0.params_device
+    assert r0.kv_page_bytes == r1.kv_page_bytes
 
 
 def test_paper_worked_example_numbers():

@@ -1,0 +1,364 @@
+"""Continuous-batching serve engine: paged KV, scheduler, token parity.
+
+The acceptance bar is BIT-identity: greedy tokens produced through the
+scheduler path — paged pool, join/leave churn, chunked prefill — must
+equal the single-batch ``decode_init``/``decode_step`` reference at the
+same batch shape, across the relay knob grid and cache families.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import engine as engines
+from repro.configs.base import get_config
+from repro.core.schedule import ExecutionConfig
+from repro.models.common import ParamSpec
+from repro.serve.engine import ServeConfig
+from repro.serve.paged_kv import GroupPages, gather_view, scatter_new
+from repro.serve.sampling import sample
+from repro.serve.scheduler import Scheduler
+
+
+# ===========================================================================
+# scheduler / allocator units (pure host)
+# ===========================================================================
+def _sched(**kw):
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("page_size", 4)
+    kw.setdefault("n_pages", 4)
+    kw.setdefault("max_seq", 16)
+    return Scheduler(**kw)
+
+
+def _drain_request(s, req):
+    """Step the scheduler alone (no model): feed dummy sampled zeros."""
+    while not req.done:
+        plan = s.plan_tick()
+        assert plan is not None
+        s.record(np.zeros(s.max_batch, np.int32))
+
+
+def test_reservation_blocks_admission_until_pages_free():
+    # each request needs ceil((6 + 7) / 4) = 4 pages; pool holds 4
+    s = _sched(n_pages=4, max_seq=32)
+    a = s.submit(np.zeros(6, np.int32), 8)
+    b = s.submit(np.zeros(6, np.int32), 8)
+    s.plan_tick()
+    assert a.slot >= 0 and b.slot < 0          # b waits despite free slot
+    assert s.reserved + (s.n_pages - len(s.free_pages)) == 4
+    s.record(np.zeros(2, np.int32))
+    _drain_request(s, a)
+    assert a.done and len(a.generated) == 8
+    s.plan_tick()                              # a's pages are back -> b in
+    assert b.slot >= 0
+    s.record(np.zeros(2, np.int32))
+
+
+def test_pages_claimed_lazily_and_freed_on_finish():
+    s = _sched(n_pages=8, max_seq=16)
+    r = s.submit(np.zeros(2, np.int32), 9)     # needs 3 pages eventually
+    plan = s.plan_tick()
+    # first tick touches only page 0 of the slot: exactly one claim
+    assert (plan.new_pages >= 0).sum() == 1
+    assert len(s.free_pages) == 7
+    s.record(np.zeros(2, np.int32))
+    _drain_request(s, r)
+    assert len(s.free_pages) == 8 and s.reserved == 0
+    assert (s.table == -1).all()
+
+
+def test_window_ring_reuses_pages():
+    # window=8 -> 2 pages per slot cap, positions wrap past max_seq
+    s = _sched(n_pages=4, max_seq=8, window=8)
+    r = s.submit(np.zeros(6, np.int32), 12)    # 17 positions >> 8
+    while not r.done:
+        s.plan_tick()
+        s.record(np.zeros(2, np.int32))
+    assert len(r.generated) == 12              # ring never runs out
+    assert len(s.free_pages) == 4
+
+
+def test_prompt_exceeding_capacity_rejected_without_window():
+    s = _sched(max_seq=8)
+    with pytest.raises(ValueError):
+        s.submit(np.zeros(8, np.int32), 4)
+    # the same prompt is fine under a ring
+    _sched(max_seq=8, window=8).submit(np.zeros(8, np.int32), 4)
+
+
+def test_context_exhaustion_finishes_request_early():
+    s = _sched(max_seq=8)
+    r = s.submit(np.zeros(4, np.int32), 100)
+    while not r.done:
+        s.plan_tick()
+        s.record(np.zeros(2, np.int32))
+    # positions 0..7 only: 4 prompt + 4 generated tokens fit
+    assert len(r.generated) == 5               # sampled at caching 8th pos
+
+
+def test_fifo_admission_and_slot_reuse():
+    s = _sched(max_batch=2, n_pages=8, max_seq=16)
+    rs = [s.submit(np.zeros(2, np.int32), 3) for _ in range(5)]
+    for _ in range(64):
+        if s.idle:
+            break
+        s.plan_tick()
+        s.record(np.zeros(2, np.int32))
+    assert all(r.done for r in rs)
+    # FIFO: completion order follows submission order
+    assert [r.rid for r in sorted(rs, key=lambda r: r.t_done)] == \
+        [r.rid for r in rs]
+
+
+# ===========================================================================
+# paged pool gather/scatter (micro, one layer)
+# ===========================================================================
+def _toy_pages(B=2, S=8):
+    spec = {"k": ParamSpec((B, S, 2), ("batch", "seq", "kv"), "zeros"),
+            "pos": ParamSpec((B, S), ("batch", "seq"), "zeros"),
+            "h": ParamSpec((B, 3), ("batch", "ffn"), "zeros")}
+    return GroupPages(spec, {"k": True, "pos": True, "h": False})
+
+
+def test_gather_view_masks_unmapped_pages():
+    gp = _toy_pages()
+    ps, n_pages = 4, 4
+    pool = {"k": jnp.arange(n_pages * ps * 2, dtype=jnp.float32)
+                    .reshape(n_pages, ps, 2),
+            "pos": jnp.tile(jnp.arange(ps), (n_pages, 1)).astype(jnp.int32),
+            "h": jnp.ones((2, 3))}
+    table = jnp.array([[2, -1], [0, 1]], jnp.int32)
+    view = gather_view(pool, gp, table, ps)
+    assert view["k"].shape == (2, 8, 2) and view["pos"].shape == (2, 8)
+    # mapped pages read their physical page verbatim
+    np.testing.assert_array_equal(view["k"][0, :4], pool["k"][2])
+    np.testing.assert_array_equal(view["k"][1, :4], pool["k"][0])
+    np.testing.assert_array_equal(view["k"][1, 4:], pool["k"][1])
+    # unmapped logical page: pos forced to -1 (attention's invalid marker)
+    assert (view["pos"][0, 4:] == -1).all()
+    assert (view["pos"][1] >= 0).all()
+    # per-slot leaves pass through untouched
+    np.testing.assert_array_equal(view["h"], pool["h"])
+
+
+def test_scatter_writes_only_ticked_slots_and_drops_invalid():
+    gp = _toy_pages()
+    ps = 4
+    pool = {"k": jnp.zeros((4, ps, 2)),
+            "pos": -jnp.ones((4, ps), jnp.int32),
+            "h": jnp.zeros((2, 3))}
+    table = jnp.array([[2, -1], [0, 1]], jnp.int32)
+    view = gather_view(pool, gp, table, ps)
+    view = {"k": view["k"].at[:, :].add(7.0),        # decode "wrote" stuff
+            "pos": jnp.where(view["pos"] < -10, view["pos"], view["pos"]),
+            "h": view["h"] + 5.0}
+    view["pos"] = jnp.full((2, 8), 9, jnp.int32)
+    pos = jnp.array([[1], [-1]], jnp.int32)          # row1 = padding
+    active = jnp.array([True, False])
+    out = scatter_new(pool, view, gp, table, pos, active)
+    # row 0 slot 1 -> physical page 2 offset 1; nothing else moves
+    assert float(out["k"][2, 1, 0]) == 7.0
+    assert float(jnp.abs(out["k"]).sum()) == 14.0    # the one (2,) vector
+    assert int(out["pos"][2, 1]) == 9
+    assert int((out["pos"] == 9).sum()) == 1
+    # per-slot leaf: active row takes the new value, padding keeps old
+    np.testing.assert_array_equal(np.asarray(out["h"][0]), [5., 5., 5.])
+    np.testing.assert_array_equal(np.asarray(out["h"][1]), [0., 0., 0.])
+
+
+# ===========================================================================
+# token parity: scheduler path vs single-batch reference
+# ===========================================================================
+def _greedy_ref(eng, params, prompt, new, live, B):
+    """Reference tokens: the historical fixed-batch greedy loop with the
+    prompt replicated across all B rows (same program shape as the serve
+    tick, so row independence makes parity exact)."""
+    toks = jnp.broadcast_to(jnp.asarray(prompt), (B, len(prompt)))
+    caches, last = eng.decode_init(params, toks, live)
+    tok = jnp.argmax(last, axis=-1)[:, None].astype(jnp.int32)
+    out = [int(tok[0, 0])]
+    for i in range(new - 1):
+        logits, caches = eng.decode_step(params, caches, tok,
+                                         jnp.int32(len(prompt) + i))
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        out.append(int(tok[0, 0]))
+    return out
+
+
+def _serve_engine(arch, exec_cfg, *, B=3, max_seq=32, chunk=1, pages=None):
+    cfg = get_config(arch, "smoke")
+    eng = engines.create("l2l", cfg, exec_cfg, donate=False)
+    params = eng.model.init_params(jax.random.PRNGKey(0))
+    scfg = ServeConfig(max_batch=B, page_size=8, n_pages=pages or 4 * B,
+                       max_seq=max_seq, prefill_chunk=chunk)
+    return cfg, eng, params, scfg
+
+
+PARITY_CASES = [
+    # the knob grid on the dense/GQA family
+    ("granite-3-8b", ExecutionConfig(), 32, 1),
+    ("granite-3-8b", ExecutionConfig(weight_stream=True,
+                                     layers_per_relay=2, prefetch_depth=1,
+                                     pack_params=True), 32, 1),
+    # ring-buffer window: max_seq IS the window
+    ("granite-3-8b", ExecutionConfig(decode_window=16), 16, 1),
+    # chunked prefill rides the sweep as extra query rows
+    ("granite-3-8b", ExecutionConfig(), 32, 4),
+    # MLA compressed cache + MoE, recurrent families
+    ("deepseek-v2-lite-16b", ExecutionConfig(), 32, 1),
+    ("hymba-1.5b", ExecutionConfig(), 32, 1),
+    ("rwkv6-1.6b", ExecutionConfig(), 32, 1),
+]
+
+
+@pytest.mark.parametrize("arch,exec_cfg,max_seq,chunk", PARITY_CASES,
+                         ids=["dense", "dense-G2pf1pack", "window",
+                              "chunked-prefill", "mla-moe", "hybrid",
+                              "ssm"])
+def test_scheduler_tokens_bit_identical(arch, exec_cfg, max_seq, chunk):
+    B, L, NEW = 3, 8, 5
+    cfg, eng, params, scfg = _serve_engine(arch, exec_cfg, B=B,
+                                           max_seq=max_seq, chunk=chunk)
+    prompt = np.random.RandomState(0).randint(
+        0, cfg.vocab_size, size=(L,)).astype(np.int32)
+    ref = _greedy_ref(eng, params, prompt, NEW, max_seq, B)
+    srv = eng.serve_session(params, scfg)
+    reqs = [srv.submit(prompt, NEW) for _ in range(B)]
+    srv.run()
+    for r in reqs:
+        assert r.generated == ref, f"slot-path tokens diverged: {r.rid}"
+
+
+def test_unrelated_requests_joining_and_leaving_do_not_perturb():
+    """THE continuous-batching correctness bar: a request's tokens are
+    identical whether it runs alone or with strangers churning through
+    the other slots (row independence + paged isolation)."""
+    cfg, eng, params, scfg = _serve_engine("granite-3-8b",
+                                           ExecutionConfig(), B=3)
+    rng = np.random.RandomState(1)
+    pA = rng.randint(0, cfg.vocab_size, size=(8,)).astype(np.int32)
+
+    srv = eng.serve_session(params, scfg)
+    solo = srv.submit(pA, 10)
+    srv.run()
+
+    srv = eng.serve_session(params, scfg)
+    crowded = srv.submit(pA, 10)
+    srv.tick(); srv.tick()
+    b = srv.submit(rng.randint(0, cfg.vocab_size, size=(5,)), 3)
+    srv.tick(); srv.tick()
+    c = srv.submit(rng.randint(0, cfg.vocab_size, size=(11,)), 4)
+    srv.run()
+    assert crowded.generated == solo.generated
+    assert len(b.generated) == 3 and len(c.generated) == 4
+
+
+def test_slot_and_page_recycling_through_many_requests():
+    cfg, eng, params, scfg = _serve_engine("granite-3-8b",
+                                           ExecutionConfig(), B=2,
+                                           pages=6)
+    srv = eng.serve_session(params, scfg)
+    rng = np.random.RandomState(2)
+    prompts = [rng.randint(0, cfg.vocab_size, size=(6,)).astype(np.int32)
+               for _ in range(6)]
+    refs = [_greedy_ref(eng, params, p, 4, 32, 2) for p in prompts[:2]]
+    reqs = [srv.submit(p, 4) for p in prompts]
+    srv.run()
+    assert all(len(r.generated) == 4 for r in reqs)
+    # recycled slots/pages still produce exact tokens
+    assert reqs[0].generated == refs[0] and reqs[1].generated == refs[1]
+    st = srv.scheduler.stats()
+    assert st["free_pages"] == 6 and st["free_slots"] == 2
+
+
+# ===========================================================================
+# sampling
+# ===========================================================================
+def test_sample_greedy_is_exact_argmax():
+    rng = np.random.RandomState(0)
+    logits = jnp.asarray(rng.randn(5, 64).astype(np.float32))
+    z = jnp.zeros(5, jnp.int32)
+    toks = sample(logits, z, z, jnp.zeros(5, jnp.float32), z)
+    np.testing.assert_array_equal(np.asarray(toks),
+                                  np.asarray(jnp.argmax(logits, -1)))
+
+
+def test_sample_stream_independent_of_batch_row():
+    rng = np.random.RandomState(0)
+    logits = jnp.asarray(rng.randn(4, 64).astype(np.float32))
+    seeds = jnp.array([7, 7, 9, 7], jnp.int32)
+    pos = jnp.array([3, 3, 3, 3], jnp.int32)
+    temp = jnp.full(4, 0.8, jnp.float32)
+    k = jnp.zeros(4, jnp.int32)
+    row_logits = jnp.broadcast_to(logits[0], (4, 64))
+    toks = np.asarray(sample(row_logits, seeds, pos, temp, k))
+    assert toks[0] == toks[1] == toks[3]       # same (seed, pos) stream
+    # different position advances the stream
+    toks2 = np.asarray(sample(row_logits, seeds, pos + 1, temp, k))
+    assert (toks != toks2).any()
+
+
+def test_sample_top_k_restricts_support():
+    rng = np.random.RandomState(3)
+    logits = jnp.asarray(rng.randn(8, 100).astype(np.float32))
+    top5 = np.asarray(jnp.argsort(-logits, axis=-1)[:, :5])
+    temp = jnp.full(8, 1.5, jnp.float32)
+    k5 = jnp.full(8, 5, jnp.int32)
+    for trial in range(5):
+        seeds = jnp.full(8, trial, jnp.int32)
+        toks = np.asarray(sample(logits, seeds, seeds, temp, k5))
+        for b in range(8):
+            assert toks[b] in top5[b]
+
+
+def test_serve_temperature_matches_seeded_rerun():
+    cfg, eng, params, scfg = _serve_engine("granite-3-8b",
+                                           ExecutionConfig(), B=2)
+    p = np.random.RandomState(4).randint(0, cfg.vocab_size,
+                                         size=(6,)).astype(np.int32)
+    outs = []
+    for neighbour_first in (False, True):
+        srv = eng.serve_session(params, scfg)
+        if neighbour_first:                    # different slot assignment
+            srv.submit(p[::-1].copy(), 3)
+        r = srv.submit(p, 6, temperature=0.9, top_k=8, seed=123)
+        srv.run()
+        outs.append(r.generated)
+    assert outs[0] == outs[1]
+
+
+# ===========================================================================
+# facade / config validation
+# ===========================================================================
+def test_serve_session_validates_shapes():
+    cfg = get_config("granite-3-8b", "smoke")
+    eng = engines.create("l2l", cfg, ExecutionConfig(decode_window=16),
+                         donate=False)
+    params = eng.model.init_params(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="decode_window"):
+        eng.serve_session(params, ServeConfig(max_seq=32, page_size=8))
+    with pytest.raises(ValueError, match="divide"):
+        eng.serve_session(params, ServeConfig(max_seq=16, page_size=5))
+    with pytest.raises(ValueError, match="n_pages"):
+        eng.serve_session(params, ServeConfig(max_seq=16, page_size=2,
+                                              n_pages=4))
+
+
+def test_serve_session_rejects_audio():
+    cfg = get_config("whisper-base", "smoke")
+    eng = engines.create("l2l", cfg, ExecutionConfig(), donate=False)
+    params = eng.model.init_params(jax.random.PRNGKey(0))
+    with pytest.raises(NotImplementedError):
+        eng.serve_session(params, ServeConfig())
+
+
+def test_recurrent_families_force_single_token_prefill():
+    cfg = get_config("rwkv6-1.6b", "smoke")
+    eng = engines.create("l2l", cfg, ExecutionConfig(), donate=False)
+    params = eng.model.init_params(jax.random.PRNGKey(0))
+    srv = eng.serve_session(params, ServeConfig(max_batch=2, page_size=8,
+                                                n_pages=8, max_seq=16,
+                                                prefill_chunk=4))
+    assert srv.cfg.prefill_chunk == 1

@@ -87,7 +87,15 @@ def test_train_driver_cli():
 
 def test_serve_driver_cli():
     from repro.launch.serve import main
+    # default mode is continuous batching: returns the completed requests
+    reqs = main(["--arch", "rwkv6-1.6b", "--variant", "smoke",
+                 "--requests", "3", "--max-batch", "2",
+                 "--prompt-len", "8", "--gen", "4"])
+    assert len(reqs) == 3
+    assert all(r.done and len(r.generated) == 4 for r in reqs)
+    # legacy fixed-batch path stays available under --mode oneshot
     toks = main(["--arch", "rwkv6-1.6b", "--variant", "smoke",
+                 "--mode", "oneshot",
                  "--batch", "2", "--prompt-len", "8", "--gen", "4"])
     assert toks.shape == (2, 4)
 
