@@ -1,7 +1,7 @@
 PY ?= python
 
-.PHONY: verify test bench bench-relay bench-pack bench-group bench-stash \
-	bench-serve quickstart
+.PHONY: verify test chaos bench bench-relay bench-pack bench-group \
+	bench-stash bench-serve quickstart
 
 # tier-1 verification (quick: slow multi-device subprocess tests deselected)
 verify:
@@ -10,6 +10,12 @@ verify:
 # the full suite, slow marks included
 test:
 	PYTHONPATH=src $(PY) -m pytest -q
+
+# the fault-injection chaos suite, slow kill/resume combos included:
+# corrupt snapshots, SIGTERM/SIGKILL mid-run + bit-identical resume,
+# NaN poisoning across the knob grid, serve deadline eviction/starvation
+chaos:
+	PYTHONPATH=src $(PY) -m pytest -x -q tests/test_faults.py
 
 # all paper tables/figures (includes the relay-overlap A/B)
 bench:

@@ -1,27 +1,54 @@
-"""Checkpointing: pytree <-> .npz with structure manifest.
+"""Crash-consistent checkpointing: pytree <-> snapshot directory.
 
-No orbax in this container, so this is a small but complete implementation:
-flattens any params/opt pytree with ``jax.tree_util.tree_flatten_with_path``,
-saves leaves into one compressed npz plus a JSON manifest of key-paths and
-dtypes, and restores into the exact structure (verifying shapes/dtypes).
-Device arrays are gathered to host before save; restore optionally
-device_puts onto provided shardings (so a multi-pod job can restore straight
-into its EPS placement).
+No orbax in this container, so this is a small but complete
+implementation with the durability contract a preemptible long run
+needs (the paper's setting — one cheap device, days of training):
+
+* **One snapshot = one directory** (``ckpt_<step>/``) holding
+  ``arrays.npz`` (every leaf, flattened with
+  ``tree_flatten_with_path``) and ``manifest.json`` (key paths, dtypes,
+  shapes, a crc32 per stored array, the step, and an optional caller
+  fingerprint binding the snapshot to a model/optimizer layout).
+* **Write-to-temp + fsync + atomic rename**: the snapshot is staged in
+  a dot-prefixed temp directory next to its final name, every file is
+  fsynced, the directory is renamed into place in one atomic step, and
+  the parent directory is fsynced so the rename itself is durable.  A
+  crash at ANY point leaves either the previous snapshots untouched
+  plus an ignorable ``.tmp-*`` directory, or the complete new snapshot
+  — never a half-written one under the real name.
+* **Verification**: ``verify()`` recomputes a whole-file crc32 of
+  ``arrays.npz``, every array's crc32, and the manifest's self-checksum
+  against the manifest (so ANY flipped or truncated byte in either
+  file is caught — container metadata included), plus the fingerprint;
+  ``restore()`` verifies by default before deserializing anything into
+  the training state.
+* **Discovery**: ``latest_good()`` walks snapshots newest-first and
+  returns the first one that verifies, so a corrupt or partial newest
+  snapshot silently falls back to the previous good one.
+* **Retention**: ``save_train_state(..., keep_last=N)`` prunes the
+  oldest snapshots after a successful save (temp debris included).
 
 Layout stability: checkpoints are ALWAYS the unpacked per-leaf pytree.
-Engines running the packed relay (``ExecutionConfig.pack_params``) convert
-their flat buffers through ``repro.core.packing``'s PackSpec converters in
-``Engine.save``/``restore``, so a checkpoint written with packing on
-restores with packing off and vice versa (tests/test_packing.py).
+Engines running the packed relay (``ExecutionConfig.pack_params``)
+convert their flat buffers through ``repro.core.packing``'s PackSpec
+converters in ``Engine.save``/``restore``, so a checkpoint written with
+packing on restores with packing off and vice versa
+(tests/test_packing.py).
 """
 from __future__ import annotations
 
 import json
 import os
-from typing import Any, Optional
+import shutil
+import zlib
+from typing import Any, List, Optional
 
 import jax
 import numpy as np
+
+ARRAYS = "arrays.npz"
+MANIFEST = "manifest.json"
+_TMP = ".tmp-"
 
 
 def _path_str(path) -> str:
@@ -39,31 +66,149 @@ def _path_str(path) -> str:
 _WIDE = {2: np.uint16, 1: np.uint8, 4: np.uint32}
 
 
-def save(path: str, tree: Any, step: Optional[int] = None) -> None:
-    leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(tree)
+def _manifest_crc(manifest: dict) -> int:
+    """Self-checksum over every manifest field except the checksum
+    itself (canonical serialization, so load-recompute matches
+    save-compute bit-for-bit)."""
+    payload = {k: v for k, v in manifest.items() if k != "manifest_crc32"}
+    return zlib.crc32(json.dumps(payload, sort_keys=True).encode())
+
+
+def _fsync_file(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _fsync_dir(path: str) -> None:
+    # directory fsync makes the rename (the commit point) durable; some
+    # filesystems refuse O_RDONLY dir fsync — best-effort there
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
+def save(path: str, tree: Any, step: Optional[int] = None,
+         fingerprint: Optional[str] = None) -> str:
+    """Atomically write ``tree`` as the snapshot directory ``path``.
+
+    The snapshot is staged under a temp name in the same parent and
+    renamed into place only after every byte (arrays, manifest) is
+    fsynced — a crash mid-save can never leave a half-written snapshot
+    under the final name.  Returns ``path``."""
+    path = path.rstrip("/")
+    leaves_with_paths, _ = jax.tree_util.tree_flatten_with_path(tree)
     arrays = {}
-    manifest = {"keys": [], "dtypes": [], "step": step}
+    manifest = {"version": 2, "keys": [], "dtypes": [], "shapes": [],
+                "crc32": [], "step": step, "fingerprint": fingerprint}
     for i, (kp, leaf) in enumerate(leaves_with_paths):
-        key = f"a{i}"
         arr = np.asarray(jax.device_get(leaf))
         manifest["dtypes"].append(str(arr.dtype))
+        manifest["shapes"].append(list(arr.shape))
         if arr.dtype.kind == "V" or str(arr.dtype) == "bfloat16":
             # numpy can't round-trip ml_dtypes (bfloat16 etc): store raw bits
             arr = arr.view(_WIDE[arr.dtype.itemsize])
-        arrays[key] = arr
+        arrays[f"a{i}"] = arr
+        manifest["crc32"].append(
+            zlib.crc32(np.ascontiguousarray(arr).tobytes()))
         manifest["keys"].append(_path_str(kp))
-    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-    np.savez_compressed(path + ".npz", **arrays)
-    with open(path + ".json", "w") as f:
-        json.dump(manifest, f)
+
+    parent = os.path.dirname(path) or "."
+    os.makedirs(parent, exist_ok=True)
+    tmp = os.path.join(parent, _TMP + os.path.basename(path) +
+                       f".{os.getpid()}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    try:
+        np.savez_compressed(os.path.join(tmp, ARRAYS), **arrays)
+        _fsync_file(os.path.join(tmp, ARRAYS))
+        # whole-file crc: per-array checksums can't see damage to the
+        # npz container's own metadata bytes — this can
+        with open(os.path.join(tmp, ARRAYS), "rb") as f:
+            manifest["file_crc32"] = zlib.crc32(f.read())
+        manifest["manifest_crc32"] = _manifest_crc(manifest)
+        with open(os.path.join(tmp, MANIFEST), "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        _fsync_dir(tmp)
+        if os.path.exists(path):        # overwrite = replace atomically too
+            shutil.rmtree(path)
+        os.rename(tmp, path)            # the commit point
+        _fsync_dir(parent)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    return path
 
 
-def restore(path: str, like: Any, shardings: Any = None) -> Any:
-    """Restore into the structure of ``like`` (arrays or ShapeDtypeStructs).
-    If ``shardings`` is given (same structure), device_put accordingly."""
-    with open(path + ".json") as f:
-        manifest = json.load(f)
-    data = np.load(path + ".npz")
+def read_manifest(path: str) -> Optional[dict]:
+    """The snapshot's manifest dict, or None when absent/unparseable."""
+    try:
+        with open(os.path.join(path, MANIFEST)) as f:
+            return json.load(f)
+    except (OSError, ValueError):
+        return None
+
+
+def verify(path: str, fingerprint: Optional[str] = None) -> bool:
+    """True iff the snapshot at ``path`` is complete and uncorrupted:
+    manifest present and parseable, every array readable with its
+    recorded shape, every crc32 matching the stored bytes, and (when
+    both sides carry one) the fingerprint matching the caller's."""
+    manifest = read_manifest(path)
+    if manifest is None or "crc32" not in manifest:
+        return False
+    if manifest.get("manifest_crc32") != _manifest_crc(manifest):
+        return False                    # the manifest itself is damaged
+    if (fingerprint is not None
+            and manifest.get("fingerprint") is not None
+            and manifest["fingerprint"] != fingerprint):
+        return False
+    try:
+        with open(os.path.join(path, ARRAYS), "rb") as f:
+            if zlib.crc32(f.read()) != manifest.get("file_crc32"):
+                return False
+        with np.load(os.path.join(path, ARRAYS)) as data:
+            if len(data.files) != len(manifest["keys"]):
+                return False
+            for i, (crc, shape) in enumerate(zip(manifest["crc32"],
+                                                 manifest["shapes"])):
+                arr = data[f"a{i}"]
+                if list(arr.shape) != list(shape):
+                    return False
+                if zlib.crc32(np.ascontiguousarray(arr).tobytes()) != crc:
+                    return False
+    except Exception:
+        # truncated zip / flipped bits in the compressed stream / missing
+        # file all surface as read errors — corrupt either way
+        return False
+    return True
+
+
+def restore(path: str, like: Any, shardings: Any = None,
+            check: bool = True, fingerprint: Optional[str] = None) -> Any:
+    """Restore into the structure of ``like`` (arrays or
+    ShapeDtypeStructs), verifying checksums first (``check=False`` skips
+    the integrity pass for callers that already ran ``verify``).  If
+    ``shardings`` is given (same structure), device_put accordingly."""
+    if check:
+        assert verify(path, fingerprint=fingerprint), \
+            f"checkpoint {path} failed integrity verification " \
+            f"(truncated, bit-flipped, or fingerprint mismatch)"
+    manifest = read_manifest(path)
+    assert manifest is not None, f"no manifest in {path}"
+    data = np.load(os.path.join(path, ARRAYS))
     leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(like)
     assert len(leaves_with_paths) == len(manifest["keys"]), \
         f"checkpoint has {len(manifest['keys'])} leaves, " \
@@ -74,7 +219,7 @@ def restore(path: str, like: Any, shardings: Any = None) -> Any:
         assert manifest["keys"][i] == key, \
             f"leaf order mismatch: {manifest['keys'][i]} vs {key}"
         arr = data[f"a{i}"]
-        saved_dt = manifest.get("dtypes", [None] * len(manifest["keys"]))[i]
+        saved_dt = manifest["dtypes"][i]
         if saved_dt and arr.dtype.kind == "u" and saved_dt not in (
                 "uint8", "uint16", "uint32", "uint64"):
             import ml_dtypes
@@ -88,30 +233,93 @@ def restore(path: str, like: Any, shardings: Any = None) -> Any:
     return restored
 
 
-def latest_step(directory: str, prefix: str = "ckpt") -> Optional[int]:
+# ---------------------------------------------------------------------------
+# Snapshot discovery / retention over a checkpoint directory
+# ---------------------------------------------------------------------------
+def _snapshot_steps(directory: str, prefix: str) -> List[int]:
     if not os.path.isdir(directory):
-        return None
+        return []
     steps = []
     for f in os.listdir(directory):
-        if f.startswith(prefix + "_") and f.endswith(".json"):
+        if f.startswith(prefix + "_") and \
+                os.path.isdir(os.path.join(directory, f)):
             try:
-                steps.append(int(f[len(prefix) + 1:-5]))
+                steps.append(int(f[len(prefix) + 1:]))
             except ValueError:
                 pass
-    return max(steps) if steps else None
+    return sorted(steps)
 
 
+def snapshot_path(directory: str, step: int, prefix: str = "ckpt") -> str:
+    return os.path.join(directory, f"{prefix}_{step}")
+
+
+def latest_step(directory: str, prefix: str = "ckpt") -> Optional[int]:
+    """Newest snapshot by step number (existence only — see
+    ``latest_good`` for the verified variant)."""
+    steps = _snapshot_steps(directory, prefix)
+    return steps[-1] if steps else None
+
+
+def latest_good(directory: str, prefix: str = "ckpt",
+                fingerprint: Optional[str] = None) -> Optional[int]:
+    """Newest snapshot that passes ``verify()`` — a truncated or
+    bit-flipped newest snapshot (e.g. preempted mid-write on a
+    filesystem without atomic rename, or disk rot) is skipped and the
+    previous good one wins.  None when no good snapshot exists."""
+    for step in reversed(_snapshot_steps(directory, prefix)):
+        if verify(snapshot_path(directory, step, prefix),
+                  fingerprint=fingerprint):
+            return step
+    return None
+
+
+def prune(directory: str, keep_last: int, prefix: str = "ckpt") -> List[int]:
+    """Delete all but the newest ``keep_last`` snapshots (plus any
+    leftover ``.tmp-*`` staging debris from crashed saves); returns the
+    pruned step numbers.  ``keep_last <= 0`` disables pruning (debris is
+    still swept)."""
+    removed = []
+    if os.path.isdir(directory):
+        for f in os.listdir(directory):
+            if f.startswith(_TMP):
+                shutil.rmtree(os.path.join(directory, f),
+                              ignore_errors=True)
+    if keep_last <= 0:
+        return removed
+    steps = _snapshot_steps(directory, prefix)
+    for step in steps[:-keep_last]:
+        shutil.rmtree(snapshot_path(directory, step, prefix),
+                      ignore_errors=True)
+        removed.append(step)
+    return removed
+
+
+# ---------------------------------------------------------------------------
+# Train-state convenience wrappers (what Engine.save/restore call)
+# ---------------------------------------------------------------------------
 def save_train_state(directory: str, params, opt_state, step: int,
-                     prefix: str = "ckpt") -> str:
-    path = os.path.join(directory, f"{prefix}_{step}")
-    save(path, {"params": params, "opt": opt_state}, step=step)
+                     prefix: str = "ckpt", keep_last: int = 0,
+                     fingerprint: Optional[str] = None) -> str:
+    path = save(snapshot_path(directory, step, prefix),
+                {"params": params, "opt": opt_state}, step=step,
+                fingerprint=fingerprint)
+    prune(directory, keep_last, prefix)
     return path
 
 
 def restore_train_state(directory: str, params_like, opt_like,
-                        step: Optional[int] = None, prefix: str = "ckpt"):
-    step = step if step is not None else latest_step(directory, prefix)
-    assert step is not None, f"no checkpoint in {directory}"
-    path = os.path.join(directory, f"{prefix}_{step}")
-    tree = restore(path, {"params": params_like, "opt": opt_like})
+                        step: Optional[int] = None, prefix: str = "ckpt",
+                        fingerprint: Optional[str] = None):
+    """Restore the newest GOOD snapshot (or the requested step).  A
+    corrupt newest snapshot is skipped by ``latest_good`` — restore
+    falls back to the previous verified one rather than loading
+    garbage."""
+    if step is None:
+        step = latest_good(directory, prefix, fingerprint=fingerprint)
+    assert step is not None, \
+        f"no verifiable checkpoint in {directory} (prefix={prefix})"
+    path = snapshot_path(directory, step, prefix)
+    tree = restore(path, {"params": params_like, "opt": opt_like},
+                   fingerprint=fingerprint)
     return tree["params"], tree["opt"], step

@@ -74,6 +74,8 @@ def make_train_step(model, optimizer: Optimizer, exec_cfg: ExecutionConfig
     def step(params, opt_state, batch):
         loss, grads = grads_fn(params, batch)
         gnorm = tree_global_norm(grads)
+        finite = jnp.all(jnp.stack([
+            jnp.all(jnp.isfinite(g)) for g in jax.tree.leaves(grads)]))
         if exec_cfg.clip_mode == "per_layer":
             # match L2L's per-layer clip semantics: clip each stacked layer
             # group leaf-tree independently is layer-wise only for stacked
@@ -92,6 +94,18 @@ def make_train_step(model, optimizer: Optimizer, exec_cfg: ExecutionConfig
             k: new_inner[k] for k in ("embed", "head", "groups")}}
         metrics = {"loss": loss, "grad_norm": gnorm,
                    "weight_sum": batch["mask"].sum()}
+        if exec_cfg.skip_nonfinite:
+            # anomaly sentinel (same contract as the L2L engines): a
+            # non-finite gradient rejects the whole step bit-identically
+            # — params, opt slots and the step counter all unchanged.
+            new_params = jax.tree.map(
+                lambda n, o: jnp.where(finite, n, o), new_params, params)
+            new_opt = {k: jax.tree.map(
+                lambda n, o: jnp.where(finite, n, o),
+                new_opt[k], opt_state[k])
+                for k in ("step", "embed", "head", "groups")}
+            metrics["skipped_steps"] = jnp.where(finite, 0, 1).astype(
+                jnp.int32)
         return new_params, new_opt, metrics
 
     return step

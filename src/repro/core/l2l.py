@@ -554,6 +554,25 @@ def make_train_step(model, optimizer: Optimizer, exec_cfg: ExecutionConfig,
         metrics = {"loss": loss, "aux": aux_total,
                    "grad_norm": jnp.sqrt(gnorm_sq),
                    "weight_sum": W_total}
+        if exec_cfg.skip_nonfinite:
+            # anomaly sentinel: ANY non-finite layer/static gradient
+            # rejects the whole step — params, opt slots and the step
+            # counter come back bit-identical to the pre-step state
+            # (``jnp.where`` passes the prior operand through untouched),
+            # whatever the (G, prefetch, pack, K) relay produced above.
+            # The AMP loss scale (attached below) still adapts on a
+            # rejected step, so overflow recovery converges.
+            bad = nonfinite > 0
+
+            def keep(new, old):
+                return jax.tree.map(
+                    lambda a, o: jnp.where(bad, o, a), new, old)
+
+            new_params = keep(new_params, params)
+            new_opt = {k: keep(new_opt[k], opt_state[k])
+                       for k in ("step", "embed", "head", "groups")}
+            metrics["skipped_steps"] = jnp.where(bad, 1, 0).astype(jnp.int32)
+            metrics["nonfinite_layers"] = nonfinite
         if amp:
             ls = opt_state["loss_scale"]
             any_bad = nonfinite > 0

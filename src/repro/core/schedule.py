@@ -91,6 +91,17 @@ class ExecutionConfig:
     # --- gradient clipping ----------------------------------------------
     clip_mode: str = "none"         # none | per_layer
     clip_norm: float = 1.0
+    # --- anomaly sentinel -------------------------------------------------
+    # Reject a whole optimizer step whose gradients contain a non-finite
+    # value (inf/nan from bad data, numeric blowup, or injected faults):
+    # the step returns the PRIOR state bit-identically — params, opt
+    # slots AND the step counter — and reports it via the
+    # ``skipped_steps`` metric (1 on a rejected step).  Works for every
+    # engine with AMP off (the AMP path keeps its per-layer skip — eager
+    # updates can't await a global verdict — and the loss scale still
+    # adapts on rejected steps so overflow recovery converges); composes
+    # with the full (G, prefetch, pack, K) knob grid.
+    skip_nonfinite: bool = False
     # --- mixed precision (the paper's named future work: "automatic
     # mixed precision (FP16/FP32)") -----------------------------------------
     # 0 = disabled.  With a scale, the head cotangent is multiplied by it,

@@ -126,32 +126,49 @@ class Engine:
         opt_abs = jax.eval_shape(self._init_opt_legacy, params_abs)
         return TrainState.from_legacy(params_abs, opt_abs)
 
+    def state_fingerprint(self) -> str:
+        """Stable identity of the on-disk state layout: a checkpoint is
+        only restorable into the same (arch, depth, width, vocab,
+        optimizer) tuple.  Relay knobs (pack/group/prefetch/K) are
+        deliberately absent — checkpoints interchange across them."""
+        cfg = self.model.cfg
+        return (f"{cfg.name}:L{cfg.n_layers}:d{cfg.d_model}:"
+                f"v{cfg.vocab_size}:opt={self.optimizer.name}")
+
     def save(self, directory: str, state: TrainState,
-             step: Optional[int] = None, prefix: str = "ckpt") -> str:
+             step: Optional[int] = None, prefix: str = "ckpt",
+             keep_last: int = 0) -> str:
         """Checkpoints are always written in the UNPACKED pytree layout —
         a packed engine's flat buffers are converted through their
         PackSpecs first, so checkpoints interchange freely between
-        pack_params on/off (tests/test_packing.py)."""
+        pack_params on/off (tests/test_packing.py).  The write is
+        crash-consistent (staged + fsynced + atomically renamed, crc32
+        per array in the manifest — ``checkpoint.io``); ``keep_last=N``
+        prunes all but the N newest snapshots after the save."""
         step = int(state.step) if step is None else int(step)
         params, opt = state.params, state.legacy_opt()
         if self.exec_cfg.pack_params:
             opt = packing.unpack_opt_state(opt, params)
             params = packing.unpack_params(params)
-        return ckpt_io.save_train_state(directory, params, opt, step,
-                                        prefix=prefix)
+        return ckpt_io.save_train_state(
+            directory, params, opt, step, prefix=prefix,
+            keep_last=keep_last, fingerprint=self.state_fingerprint())
 
     def restore(self, directory: str, step: Optional[int] = None,
                 like: Optional[TrainState] = None, prefix: str = "ckpt"):
         """Returns (TrainState, step).  ``like`` defaults to the engine's
         abstract state; packed engines restore the unpacked checkpoint
-        layout and re-pack."""
+        layout and re-pack.  With ``step=None`` the newest snapshot that
+        passes crc32 + fingerprint verification is used — a corrupt or
+        half-written snapshot falls back to the previous good one."""
         like = like if like is not None else self.abstract_state()
         like_p, like_o = like.params, like.legacy_opt()
         if self.exec_cfg.pack_params:
             like_o = jax.eval_shape(packing.unpack_opt_state, like_o, like_p)
             like_p = jax.eval_shape(packing.unpack_params, like_p)
         params, opt, step = ckpt_io.restore_train_state(
-            directory, like_p, like_o, step=step, prefix=prefix)
+            directory, like_p, like_o, step=step, prefix=prefix,
+            fingerprint=self.state_fingerprint())
         if self.exec_cfg.pack_params:
             params = packing.pack_params(params)
             opt = packing.pack_opt_state(opt, params)

@@ -109,13 +109,15 @@ def run_continuous(eng, cfg, args):
         max_batch=args.max_batch,
         page_size=args.page_size or default_page_size(max_seq),
         n_pages=args.n_pages or 4 * args.max_batch,
-        max_seq=max_seq, prefill_chunk=args.prefill_chunk)
+        max_seq=max_seq, prefill_chunk=args.prefill_chunk,
+        max_pending=args.max_pending)
     srv = eng.serve_session(params, scfg)
     rng = np.random.RandomState(args.seed + 1)
     reqs = [srv.submit(rng.randint(0, cfg.vocab_size,
                                    size=(args.prompt_len,)),
                        args.gen, temperature=args.temperature,
-                       top_k=args.top_k, seed=args.seed + i)
+                       top_k=args.top_k, seed=args.seed + i,
+                       ttl=args.ttl)
             for i in range(args.requests)]
 
     t0 = time.perf_counter()
@@ -125,16 +127,18 @@ def run_continuous(eng, cfg, args):
     srv.run()
     t_serve = time.perf_counter() - t0
 
-    lat = [r.t_done - r.t_submit for r in reqs]
+    lat = [r.t_done - r.t_submit for r in reqs if r.t_done is not None]
     tok_lat = [b - a for r in reqs
                for a, b in zip(r.token_times, r.token_times[1:])]
     n_tok = sum(len(r.generated) for r in reqs)
+    st = srv.stats()
     print(f"arch={cfg.name} requests={args.requests} "
           f"max_batch={scfg.max_batch} pages={scfg.n_pages}x"
           f"{scfg.page_size} prompt={args.prompt_len} gen={args.gen}")
     print(f"compile(+1st tick): {t_compile:.2f}s  serve: {t_serve:.2f}s "
           f"({n_tok} tok -> {n_tok / max(t_serve, 1e-9):.1f} tok/s, "
-          f"{srv.n_ticks} ticks)")
+          f"{srv.n_ticks} ticks)  done={st['finished'] - st['evicted']} "
+          f"rejected={st['rejected']} evicted={st['evicted']}")
     if tok_lat:
         print(f"per-token latency p50/p99: "
               f"{np.percentile(tok_lat, 50) * 1e3:.1f}/"
@@ -164,6 +168,15 @@ def main(argv=None):
     ap.add_argument("--prefill-chunk", type=int, default=1,
                     help="continuous: prompt tokens per tick while "
                          "prefilling (recurrent families force 1)")
+    ap.add_argument("--ttl", type=float, default=0.0,
+                    help="continuous: per-request deadline in seconds — "
+                         "requests still pending or mid-decode past it "
+                         "are evicted and their slot/pages recycled "
+                         "(0 = no deadline)")
+    ap.add_argument("--max-pending", type=int, default=0,
+                    help="continuous: admission bound — submits beyond "
+                         "this many queued requests are rejected "
+                         "(0 = unbounded)")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--cache-len", type=int, default=0)

@@ -10,11 +10,22 @@ pipeline::
 On a real TPU pod this same driver runs under the production mesh with
 ``--mesh single|multi`` (sharded params, per-layer eager reduction); on CPU
 it runs unsharded.  Checkpoints via the engine's save/restore.
+
+Preemption safety: checkpoints are crash-consistent (staged + fsynced +
+atomically renamed, crc32-verified on restore — ``repro.checkpoint.io``),
+``--resume auto`` restarts from the newest snapshot that verifies, and
+SIGTERM/SIGINT finish the in-flight step, save a snapshot plus a
+``PREEMPTED.json`` marker, and exit cleanly — a killed-and-resumed run
+reaches a final state bit-identical to an uninterrupted one
+(tests/test_faults.py), because every step i is a pure function of
+(state, batch(i)) with per-step-seeded data.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
+import signal
 import time
 
 import jax
@@ -22,10 +33,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import engine as engines
+from repro.checkpoint import io as ckpt_io
 from repro.configs.base import get_config
 from repro.core.schedule import ExecutionConfig
 from repro.data.synthetic import DataConfig, SyntheticLM, add_modality_stubs
 from repro.optim.optimizers import get_optimizer, make_schedule
+
+PREEMPT_MARKER = "PREEMPTED.json"
 
 
 def main(argv=None):
@@ -75,10 +89,27 @@ def main(argv=None):
     ap.add_argument("--host-optimizer", action="store_true",
                     help="run the optimizer on the EPS host "
                          "(compute_on 'device_host')")
+    ap.add_argument("--skip-nonfinite", action="store_true",
+                    help="anomaly sentinel: reject any step whose "
+                         "gradients contain inf/nan — params, opt slots "
+                         "and step counter stay bit-identical and the "
+                         "step is counted in skipped_steps")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--keep-last", type=int, default=0,
+                    help="retention: keep only the newest N snapshots "
+                         "(0 = keep all)")
+    ap.add_argument("--resume", default="",
+                    help="'auto' = restart from the newest VERIFIED "
+                         "snapshot in --ckpt-dir (fresh run when none); "
+                         "or an explicit checkpoint directory (errors "
+                         "when it holds no good snapshot)")
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--step-delay-ms", type=int, default=0,
+                    help="sleep after every step — widens the "
+                         "kill/preemption window for the deterministic "
+                         "fault-injection harness (repro.testing.faults)")
     ap.add_argument("--d-model", type=int, default=0,
                     help="override width (e.g. ~100M model)")
     ap.add_argument("--n-layers", type=int, default=0)
@@ -118,6 +149,7 @@ def main(argv=None):
         layers_per_relay=args.group,
         pack_params=args.pack,
         host_optimizer=args.host_optimizer,
+        skip_nonfinite=args.skip_nonfinite,
         clip_mode="per_layer" if args.clip > 0 else "none",
         clip_norm=args.clip)
     eng = engines.create(engine_name, cfg, exec_cfg, optimizer=opt)
@@ -125,44 +157,114 @@ def main(argv=None):
           f"{cfg.param_count()/1e6:.1f}M layers={cfg.n_layers} "
           f"d={cfg.d_model}")
 
-    state = eng.init(jax.random.PRNGKey(args.seed))
+    # ---- resume: newest verified snapshot wins; corrupt ones fall back
+    start_step = 0
+    resumed_from = None
+    if args.resume:
+        resume_dir = args.ckpt_dir if args.resume == "auto" else args.resume
+        assert resume_dir, "--resume auto needs --ckpt-dir"
+        good = ckpt_io.latest_good(resume_dir,
+                                   fingerprint=eng.state_fingerprint())
+        if good is not None:
+            state, start_step = eng.restore(resume_dir, step=good)
+            resumed_from = good
+            print(f"resumed from {resume_dir} at step {start_step} "
+                  f"(verified snapshot)", flush=True)
+        elif args.resume != "auto":
+            raise SystemExit(
+                f"--resume {resume_dir}: no verifiable checkpoint")
+        else:
+            state = eng.init(jax.random.PRNGKey(args.seed))
+    else:
+        state = eng.init(jax.random.PRNGKey(args.seed))
+
+    # ---- preemption: finish the in-flight step, save, exit resumable
+    stop = {"sig": None}
+
+    def _on_signal(signum, frame):
+        stop["sig"] = signum
+
+    old_handlers = {s: signal.signal(s, _on_signal)
+                    for s in (signal.SIGTERM, signal.SIGINT)}
+
+    def save_snapshot(step):
+        eng.save(args.ckpt_dir, state, step=step,
+                 keep_last=args.keep_last)
+        return step
+
     data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size,
                                   seq_len=args.seq,
                                   global_batch=args.batch,
                                   seed=args.seed))
-    rng = np.random.default_rng(args.seed)
     losses = []
+    skipped = 0
     compile_s = 0.0
+    preempted = False
+    last_saved = start_step if resumed_from is not None else None
     t0 = time.time()
-    for i in range(args.steps):
+    first = True
+    for i in range(start_step, args.steps):
+        # per-step seeded stub rng: batch(i) is a pure function of i, so
+        # a resumed run replays the identical data stream
+        rng = np.random.default_rng((args.seed, i))
         batch_np = add_modality_stubs(data.batch(i), cfg, rng)
         batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
         state, metrics = eng.train_step(state, batch)
         loss = float(metrics["loss"])
         losses.append(loss)
-        if i == 0:
-            # step 0 includes the jit compile: report it separately and
-            # restart the s/step clock so the average is steady-state only.
+        skipped += int(metrics.get("skipped_steps", 0))
+        if first:
+            # first step includes the jit compile: report it separately
+            # and restart the s/step clock so the average is steady-state
+            # only.
+            first = False
             compile_s = time.time() - t0
             t0 = time.time()
             print(f"step {i:5d}  loss {loss:8.4f}  gnorm "
                   f"{float(metrics['grad_norm']):8.3f}  "
                   f"(compile+first step: {compile_s:.2f}s)", flush=True)
-        elif i % args.log_every == 0 or i == args.steps - 1:
+        elif (i - start_step) % args.log_every == 0 or i == args.steps - 1:
             dt = time.time() - t0
             print(f"step {i:5d}  loss {loss:8.4f}  gnorm "
                   f"{float(metrics['grad_norm']):8.3f}  "
-                  f"{dt/i:.2f}s/step", flush=True)
+                  f"{dt/max(i - start_step, 1):.2f}s/step", flush=True)
+        if args.step_delay_ms:
+            time.sleep(args.step_delay_ms / 1e3)
         if args.ckpt_dir and args.ckpt_every and \
                 (i + 1) % args.ckpt_every == 0:
-            eng.save(args.ckpt_dir, state, step=i + 1)
-    if args.ckpt_dir:
-        eng.save(args.ckpt_dir, state, step=args.steps)
-    print(json.dumps({"final_loss": losses[-1],
-                      "mean_last10": float(np.mean(losses[-10:])),
-                      "initial_loss": losses[0],
+            last_saved = save_snapshot(i + 1)
+        if stop["sig"] is not None:
+            # in-flight step finished above — snapshot and leave a
+            # resumable marker, then exit cleanly
+            preempted = True
+            if args.ckpt_dir:
+                if last_saved != i + 1:
+                    last_saved = save_snapshot(i + 1)
+                with open(os.path.join(args.ckpt_dir, PREEMPT_MARKER),
+                          "w") as f:
+                    json.dump({"step": i + 1, "signal": int(stop["sig"]),
+                               "total_steps": args.steps}, f)
+            break
+    for s, h in old_handlers.items():
+        signal.signal(s, h)
+    # final save — exactly once even when steps is divisible by
+    # --ckpt-every (the loop's periodic save already covered it)
+    if args.ckpt_dir and not preempted and last_saved != args.steps:
+        last_saved = save_snapshot(args.steps)
+    if args.ckpt_dir and not preempted:
+        marker = os.path.join(args.ckpt_dir, PREEMPT_MARKER)
+        if os.path.exists(marker):
+            os.remove(marker)
+    print(json.dumps({"final_loss": losses[-1] if losses else None,
+                      "mean_last10": (float(np.mean(losses[-10:]))
+                                      if losses else None),
+                      "initial_loss": losses[0] if losses else None,
                       "compile_s": round(compile_s, 2),
-                      "steps": args.steps}))
+                      "steps": args.steps,
+                      "final_step": int(state.step),
+                      "resumed_from": resumed_from,
+                      "preempted": preempted,
+                      "skipped_steps": skipped}))
     return losses
 
 

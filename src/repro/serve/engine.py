@@ -51,6 +51,10 @@ class ServeConfig:
     n_pages: int = 32
     max_seq: int = 64
     prefill_chunk: int = 1
+    # host-side admission bound (not a shape knob): submits beyond this
+    # many queued-but-unadmitted requests are rejected, not queued
+    # (0 = unbounded).  Rejections/evictions show up in ``stats()``.
+    max_pending: int = 0
 
 
 def make_serve_tick(model, exec_cfg, placements, serve_cfg: ServeConfig):
@@ -149,7 +153,8 @@ class ServeEngine:
         self.scheduler = Scheduler(
             max_batch=serve_cfg.max_batch, page_size=serve_cfg.page_size,
             n_pages=serve_cfg.n_pages, max_seq=serve_cfg.max_seq,
-            prefill_chunk=serve_cfg.prefill_chunk, window=window)
+            prefill_chunk=serve_cfg.prefill_chunk, window=window,
+            max_pending=serve_cfg.max_pending)
         self.pools = paged_kv.init_pool(
             model, max_batch=serve_cfg.max_batch,
             page_size=serve_cfg.page_size, n_pages=serve_cfg.n_pages,
@@ -167,15 +172,21 @@ class ServeEngine:
         return time.monotonic() - self._t0
 
     def submit(self, prompt, max_new: int, **kw) -> Request:
+        """Queue a request.  ``ttl=`` (seconds) / ``ttl_ticks=`` set a
+        deadline after which it is evicted — pending or mid-flight — and
+        its slot/pages recycled; ``Request.status`` tells how it ended
+        (done / evicted / rejected)."""
         return self.scheduler.submit(prompt, max_new, now=self._now(),
                                      **kw)
 
     def tick(self) -> List[Request]:
         """Run one relay sweep for all live slots; returns the requests
-        that finished this tick (empty when idle or none finished)."""
+        that left the system this tick — finished normally or evicted at
+        their deadline (empty when idle or none left)."""
         plan = self.scheduler.plan_tick(now=self._now())
+        evicted = self.scheduler.take_evicted()
         if plan is None:
-            return []
+            return evicted
         toks, self.pools = self._tick(
             self.params, self.pools, plan.tokens, plan.pos, plan.table,
             plan.active, plan.last_idx, plan.seeds, plan.sample_pos,
@@ -183,7 +194,7 @@ class ServeEngine:
         toks = np.asarray(toks)                  # sync point
         self.n_ticks += 1
         self.tokens_out += int(plan.sample.sum())
-        return self.scheduler.record(toks, now=self._now())
+        return evicted + self.scheduler.record(toks, now=self._now())
 
     def run(self, max_ticks: int = 100_000) -> List[Request]:
         """Tick until every submitted request has finished."""

@@ -41,20 +41,31 @@ class Request:
     temperature: float = 0.0
     top_k: int = 0
     seed: int = 0
+    # -- graceful degradation -------------------------------------------
+    # a deadline from either clock evicts the request (pending or
+    # mid-flight) and recycles its slot/pages; 0 = no deadline.
+    ttl: float = 0.0                   # seconds since submit
+    ttl_ticks: int = 0                 # scheduler ticks since submit
 
     # -- runtime (managed by the Scheduler) -----------------------------
     slot: int = -1
     n_cached: int = 0                  # tokens written into the cache
     generated: List[int] = dataclasses.field(default_factory=list)
     reserved_pages: int = 0            # reservation not yet claimed
+    status: str = "queued"             # queued|active|done|evicted|rejected
     t_submit: float = 0.0
+    tick_submit: int = 0
     t_first: Optional[float] = None
     t_done: Optional[float] = None
     token_times: List[float] = dataclasses.field(default_factory=list)
 
     @property
     def done(self) -> bool:
-        return self.t_done is not None
+        return self.t_done is not None and self.status == "done"
+
+    @property
+    def evicted(self) -> bool:
+        return self.status == "evicted"
 
 
 class TickPlan(NamedTuple):
@@ -76,7 +87,8 @@ class TickPlan(NamedTuple):
 
 class Scheduler:
     def __init__(self, *, max_batch: int, page_size: int, n_pages: int,
-                 max_seq: int, prefill_chunk: int = 1, window: int = 0):
+                 max_seq: int, prefill_chunk: int = 1, window: int = 0,
+                 max_pending: int = 0):
         assert max_seq % page_size == 0, "page_size must divide max_seq"
         self.max_batch = max_batch
         self.page_size = page_size
@@ -85,6 +97,7 @@ class Scheduler:
         self.T = max(1, prefill_chunk)
         self.P = max_seq // page_size   # pages per slot
         self.window = window
+        self.max_pending = max_pending  # 0 = unbounded admission queue
         # a slot can cross at most this many page boundaries per tick
         self._claim_cap = max_batch * (-(-self.T // page_size) + 1)
 
@@ -96,11 +109,24 @@ class Scheduler:
         self.reserved = 0               # pages promised but not claimed
         self.table = -np.ones((max_batch, self.P), np.int32)
         self._plan: Optional[TickPlan] = None
+        self._new_slots: List[int] = []  # claimed since the last tick
         self._next_rid = 0
+        self.n_ticks = 0
+        self.n_rejected = 0             # admissions refused at submit
+        self.n_evicted = 0              # deadline-expired (pending+active)
+        self._evicted_now: List[Request] = []
 
     # ------------------------------------------------------------------
     def submit(self, prompt, max_new: int, *, temperature: float = 0.0,
-               top_k: int = 0, seed: int = 0, now: float = 0.0) -> Request:
+               top_k: int = 0, seed: int = 0, now: float = 0.0,
+               ttl: float = 0.0, ttl_ticks: int = 0) -> Request:
+        """Queue a request.  ``ttl``/``ttl_ticks`` set a deadline
+        (seconds / scheduler ticks since submit; 0 = none) after which
+        the request is evicted wherever it is — still pending or
+        mid-decode — and its slot/pages recycled.  When the admission
+        queue is bounded (``max_pending``) and full, the request is
+        REJECTED (``status == "rejected"``, counted in ``stats()``)
+        instead of queued."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if not self.window and len(prompt) + 1 > self.max_seq:
             raise ValueError(
@@ -108,9 +134,19 @@ class Scheduler:
                 f"({self.max_seq}); use decode_window for longer contexts")
         req = Request(self._next_rid, prompt, max_new,
                       temperature=temperature, top_k=top_k, seed=seed,
-                      t_submit=now)
+                      ttl=ttl, ttl_ticks=ttl_ticks, t_submit=now,
+                      tick_submit=self.n_ticks)
         self._next_rid += 1
+        if self.max_pending and len(self.pending) >= self.max_pending:
+            req.status = "rejected"
+            req.t_done = now
+            self.n_rejected += 1
+            return req
         self.pending.append(req)
+        # eager admission: claim a free slot right away so the pending
+        # bound above only counts true overflow (the claimed slot's
+        # reset rides the next tick's new_slots list)
+        self._admit(now)
         return req
 
     def _need_pages(self, req: Request) -> int:
@@ -119,9 +155,9 @@ class Scheduler:
             total = min(total, self.max_seq)
         return min(-(-total // self.page_size), self.P)
 
-    def _admit(self, now: float) -> List[int]:
-        """FIFO admission; returns slots claimed this round."""
-        claimed = []
+    def _admit(self, now: float) -> None:
+        """FIFO admission; claimed slots accumulate in ``_new_slots``
+        until the next planned tick resets them."""
         while (self.pending and self.free_slots
                and len(self.free_pages) - self.reserved
                >= self._need_pages(self.pending[0])):
@@ -129,9 +165,9 @@ class Scheduler:
             req.slot = self.free_slots.pop()
             req.reserved_pages = self._need_pages(req)
             self.reserved += req.reserved_pages
+            req.status = "active"
             self.active[req.slot] = req
-            claimed.append(req.slot)
-        return claimed
+            self._new_slots.append(req.slot)
 
     def _map_pages(self, req: Request, positions) -> List[int]:
         """Lazily claim physical pages for any unmapped logical page the
@@ -149,10 +185,46 @@ class Scheduler:
                     self.reserved -= 1
         return claimed
 
+    # -- graceful degradation: deadline eviction -----------------------
+    def _expired(self, req: Request, now: float) -> bool:
+        return ((req.ttl > 0 and now - req.t_submit >= req.ttl)
+                or (req.ttl_ticks > 0
+                    and self.n_ticks - req.tick_submit >= req.ttl_ticks))
+
+    def _evict_expired(self, now: float) -> None:
+        """Evict every pending or in-flight request past its deadline.
+        An active eviction releases the slot and pages through the same
+        path a normal finish does — the NEXT claimant of those pages
+        resets them via the tick's claim-reset (``paged_kv.reset_claim``),
+        so recycled pages are indistinguishable from fresh ones."""
+        for req in [r for r in self.pending if self._expired(r, now)]:
+            self.pending.remove(req)
+            req.status = "evicted"
+            req.t_done = now
+            self.finished[req.rid] = req
+            self.n_evicted += 1
+            self._evicted_now.append(req)
+        for req in [r for r in self.active.values()
+                    if self._expired(r, now)]:
+            self._release(req, now, status="evicted")
+            self.n_evicted += 1
+            self._evicted_now.append(req)
+
+    def take_evicted(self) -> List[Request]:
+        """Drain the requests evicted since the last call."""
+        out, self._evicted_now = self._evicted_now, []
+        return out
+
     # ------------------------------------------------------------------
     def plan_tick(self, now: float = 0.0) -> Optional[TickPlan]:
         """Assemble the next tick's inputs, or None when idle."""
-        new_slots_l = self._admit(now)
+        self.n_ticks += 1
+        self._evict_expired(now)
+        self._admit(now)
+        # dedup: a slot claimed, evicted and re-claimed between ticks
+        # appears once — one reset covers the current claimant
+        new_slots_l = list(dict.fromkeys(self._new_slots))
+        self._new_slots = []
         if not self.active:
             return None
         B, T = self.max_batch, self.T
@@ -223,8 +295,11 @@ class Scheduler:
                 done.append(req)
         return done
 
-    def _finish(self, req: Request, now: float):
+    def _release(self, req: Request, now: float, status: str):
+        """Hand a request's slot and pages back to the pools (shared by
+        normal completion and deadline eviction)."""
         req.t_done = now
+        req.status = status
         del self.active[req.slot]
         self.free_slots.append(req.slot)
         for lp in range(self.P):
@@ -237,6 +312,9 @@ class Scheduler:
         self.finished[req.rid] = req
         req.slot = -1
 
+    def _finish(self, req: Request, now: float):
+        self._release(req, now, status="done")
+
     # ------------------------------------------------------------------
     @property
     def idle(self) -> bool:
@@ -247,4 +325,6 @@ class Scheduler:
                 "finished": len(self.finished),
                 "free_pages": len(self.free_pages),
                 "reserved_pages": self.reserved,
-                "free_slots": len(self.free_slots)}
+                "free_slots": len(self.free_slots),
+                "rejected": self.n_rejected,
+                "evicted": self.n_evicted}

@@ -1,0 +1,2 @@
+"""Deterministic fault injectors for the chaos suite
+(tests/test_faults.py) — see ``repro.testing.faults``."""

@@ -1,0 +1,391 @@
+"""Chaos suite: every failure path recovers, bit-for-bit.
+
+Fault injection comes from ``repro.testing.faults`` (all seeded, all
+reproducible).  The acceptance bars mirror the resilience contract:
+
+* a truncated / bit-flipped snapshot is DETECTED by checksums, skipped
+  by ``latest_good``, and restore falls back to the previous good one;
+* a training run killed mid-run (SIGTERM graceful save, SIGKILL hard
+  crash) and resumed with ``--resume auto`` reaches a final state
+  bit-identical to an uninterrupted run — for both engines, pack on and
+  off;
+* ``skip_nonfinite`` rejects a poisoned step leaving params, optimizer
+  slots and step counter bit-identical across the (G, prefetch, pack,
+  K) knob grid and the baseline engine;
+* an evicted serve request's recycled pages serve the next request with
+  token-level parity to a solo run, and a starved page pool evicts
+  pending requests at their deadline instead of wedging the scheduler.
+"""
+import json
+import os
+import signal
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import engine as engines
+from repro.checkpoint import io as ckpt
+from repro.configs.base import get_config
+from repro.core.schedule import ExecutionConfig
+from repro.serve.engine import ServeConfig
+from repro.testing import faults
+
+from conftest import make_batch
+
+
+def bits_equal(a, b):
+    """True iff two pytrees are BIT-identical (bytes, not values — NaN
+    payloads and signed zeros count)."""
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    if len(la) != len(lb):
+        return False
+    return all(np.asarray(x).tobytes() == np.asarray(y).tobytes()
+               for x, y in zip(la, lb))
+
+
+# ===========================================================================
+# Checkpoint corruption: detect, skip, fall back
+# ===========================================================================
+@pytest.fixture(scope="module")
+def ckpt_engine():
+    cfg = get_config("bert-large", "smoke")
+    return engines.create("l2l-p", cfg, ExecutionConfig(n_microbatches=2),
+                          donate=False)
+
+
+@pytest.mark.parametrize("mode,target", [
+    ("bitflip", "arrays"),
+    ("truncate", "arrays"),
+    ("bitflip", "manifest"),
+])
+def test_corruption_detected(tmp_path, ckpt_engine, mode, target):
+    eng = ckpt_engine
+    state = eng.init(jax.random.PRNGKey(0))
+    d = str(tmp_path)
+    eng.save(d, state, step=3)
+    path = ckpt.snapshot_path(d, 3)
+    assert ckpt.verify(path, fingerprint=eng.state_fingerprint())
+    faults.corrupt_snapshot(path, mode=mode, target=target, seed=1)
+    assert not ckpt.verify(path, fingerprint=eng.state_fingerprint())
+
+
+def test_corrupt_newest_falls_back_to_previous_good(tmp_path, ckpt_engine):
+    eng = ckpt_engine
+    state5 = eng.init(jax.random.PRNGKey(0))
+    cfg = eng.model.cfg
+    batch = make_batch(cfg, 4, 16)
+    state7, _ = eng.train_step(state5, batch)
+    d = str(tmp_path)
+    eng.save(d, state5, step=5)
+    eng.save(d, state7, step=7)
+
+    # disk rot hits the newest snapshot
+    faults.corrupt_snapshot(ckpt.snapshot_path(d, 7), mode="bitflip", seed=3)
+    assert ckpt.latest_step(d) == 7                    # it still exists...
+    fp = eng.state_fingerprint()
+    assert ckpt.latest_good(d, fingerprint=fp) == 5    # ...but is skipped
+    restored, step = eng.restore(d)
+    assert step == 5
+    assert bits_equal(restored.params, state5.params)
+
+    # the remaining snapshot is half-written: nothing left to restore
+    faults.corrupt_snapshot(ckpt.snapshot_path(d, 5), mode="truncate",
+                            seed=4)
+    assert ckpt.latest_good(d, fingerprint=fp) is None
+    with pytest.raises(AssertionError, match="no verifiable checkpoint"):
+        eng.restore(d)
+
+
+def test_fingerprint_mismatch_rejected(tmp_path, ckpt_engine):
+    """A snapshot from a different model/optimizer layout never verifies
+    against this engine's fingerprint — a wrong --ckpt-dir can't load
+    garbage into the wrong architecture."""
+    eng = ckpt_engine
+    state = eng.init(jax.random.PRNGKey(0))
+    d = str(tmp_path)
+    eng.save(d, state, step=1)
+    path = ckpt.snapshot_path(d, 1)
+    assert ckpt.verify(path, fingerprint=eng.state_fingerprint())
+    assert not ckpt.verify(path, fingerprint="other-arch:L99:d1:v1:opt=sgd")
+    assert ckpt.latest_good(d, fingerprint="other:L1:d1:v1:opt=x") is None
+
+
+def test_retention_prunes_and_sweeps_debris(tmp_path):
+    d = str(tmp_path)
+    tree = {"w": jnp.arange(4, dtype=jnp.float32)}
+    for s in (1, 2, 3, 4):
+        ckpt.save_train_state(d, tree, {"m": tree}, step=s, keep_last=2)
+    assert ckpt._snapshot_steps(d, "ckpt") == [3, 4]
+    # a crashed save leaves staging debris; the next prune sweeps it
+    os.makedirs(os.path.join(d, ".tmp-ckpt_9.12345"))
+    ckpt.prune(d, keep_last=0)
+    assert not [f for f in os.listdir(d) if f.startswith(".tmp-")]
+    assert ckpt._snapshot_steps(d, "ckpt") == [3, 4]   # keep_last<=0: no prune
+
+
+def test_atomic_save_overwrite_keeps_snapshot_complete(tmp_path):
+    """Re-saving the same step replaces the snapshot atomically; the
+    result always verifies (never a half-merged directory)."""
+    path = str(tmp_path / "snap")
+    ckpt.save(path, {"a": jnp.ones(8)}, step=1)
+    ckpt.save(path, {"a": jnp.zeros(8)}, step=1)       # overwrite in place
+    assert ckpt.verify(path)
+    back = ckpt.restore(path, {"a": jnp.ones(8)})
+    assert float(np.sum(np.asarray(back["a"]))) == 0.0
+
+
+# ===========================================================================
+# Preemption: kill mid-run, resume, bit-identical final state
+# ===========================================================================
+TINY = ["--arch", "bert-large", "--variant", "smoke",
+        "--d-model", "32", "--n-layers", "2",
+        "--batch", "4", "--seq", "16", "--ub", "2",
+        "--steps", "6", "--log-every", "1", "--seed", "3"]
+
+# both engines and both pack settings appear in tier-1; the remaining
+# cross combinations ride the slow lane
+KILL_COMBOS = [
+    pytest.param(["--engine", "l2l-p"], id="l2l-p"),
+    pytest.param(["--engine", "l2l", "--no-eager", "--pack"],
+                 id="l2l-pack"),
+    pytest.param(["--engine", "l2l-p", "--pack", "--group", "2"],
+                 id="l2l-p-pack-g2", marks=pytest.mark.slow),
+    pytest.param(["--engine", "l2l", "--no-eager"],
+                 id="l2l", marks=pytest.mark.slow),
+]
+
+
+def _final_checksums(ckpt_dir, argv):
+    """Run the driver to completion in ``ckpt_dir`` and return the final
+    snapshot's per-array crc32 list."""
+    faults.run_train(argv + ["--ckpt-dir", ckpt_dir])
+    return faults.snapshot_checksums(ckpt_dir, step=6)
+
+
+@pytest.mark.parametrize("combo", KILL_COMBOS)
+def test_sigterm_resume_bit_identical(tmp_path, combo):
+    """SIGTERM mid-run: the driver finishes the in-flight step, saves,
+    drops a PREEMPTED marker and exits 0; ``--resume auto`` then replays
+    the remaining steps to a final state bit-identical to a run that was
+    never interrupted."""
+    ref = _final_checksums(str(tmp_path / "ref"), TINY + combo)
+
+    d = str(tmp_path / "killed")
+    proc = faults.launch_train(
+        TINY + combo + ["--ckpt-dir", d, "--ckpt-every", "2",
+                        "--step-delay-ms", "150", "--resume", "auto"])
+    rc, out = faults.kill_at_step(proc, 2, sig=signal.SIGTERM)
+    assert rc == 0, f"graceful preemption should exit 0:\n{out}"
+    marker = os.path.join(d, "PREEMPTED.json")
+    assert os.path.exists(marker)
+    with open(marker) as f:
+        info = json.load(f)
+    assert 0 < info["step"] < 6 and info["signal"] == signal.SIGTERM
+    # the snapshot written on the way out is crash-consistent
+    assert ckpt.latest_good(d) == info["step"]
+
+    out2 = faults.run_train(TINY + combo + [
+        "--ckpt-dir", d, "--ckpt-every", "2", "--resume", "auto"])
+    assert f"resumed from {d} at step {info['step']}" in out2
+    assert not os.path.exists(marker)          # clean completion clears it
+    assert faults.snapshot_checksums(d, step=6) == ref
+
+
+@pytest.mark.slow
+def test_sigkill_resume_bit_identical(tmp_path):
+    """SIGKILL (no handler can run): the run loses everything since its
+    last periodic snapshot but resumes from it to the same final bits."""
+    combo = ["--engine", "l2l-p"]
+    ref = _final_checksums(str(tmp_path / "ref"), TINY + combo)
+
+    d = str(tmp_path / "killed")
+    proc = faults.launch_train(
+        TINY + combo + ["--ckpt-dir", d, "--ckpt-every", "2",
+                        "--step-delay-ms", "150"])
+    rc, _ = faults.kill_at_step(proc, 3, sig=signal.SIGKILL)
+    assert rc != 0                              # hard crash
+    assert not os.path.exists(os.path.join(d, "PREEMPTED.json"))
+    good = ckpt.latest_good(d)
+    assert good is not None and good < 6        # periodic snapshot survives
+
+    faults.run_train(TINY + combo + [
+        "--ckpt-dir", d, "--ckpt-every", "2", "--resume", "auto"])
+    assert faults.snapshot_checksums(d, step=6) == ref
+
+
+def test_resume_explicit_dir_without_checkpoint_errors(tmp_path):
+    proc = faults.launch_train(
+        TINY + ["--resume", str(tmp_path / "nowhere")])
+    assert proc.stdout is not None
+    out = proc.stdout.read()
+    proc.stdout.close()
+    assert proc.wait(timeout=120) != 0
+    assert "no verifiable checkpoint" in out
+
+
+# ===========================================================================
+# Anomaly sentinel: skip_nonfinite across the knob grid
+# ===========================================================================
+GRID = [
+    pytest.param("baseline", dict(), id="baseline"),
+    pytest.param("l2l-p", dict(), id="l2l-p"),
+    pytest.param("l2l-p", dict(layers_per_relay=2, prefetch_depth=1,
+                               pack_params=True, stash_every=2),
+                 id="l2l-p-g2-k1-pack-K2"),
+    pytest.param("l2l", dict(), id="l2l-alg3"),
+]
+
+
+@pytest.mark.parametrize("name,knobs", GRID)
+def test_skip_nonfinite_bit_identity(make_engine, name, knobs):
+    """A poisoned batch (one NaN in the loss mask => every gradient
+    non-finite) must leave the ENTIRE TrainState — params, optimizer
+    slots, step counter — bit-identical, and be counted; a clean batch
+    afterwards advances normally."""
+    eng = make_engine(name, exec_cfg=ExecutionConfig(
+        n_microbatches=2, skip_nonfinite=True, **knobs))
+    cfg = eng.model.cfg
+    state = eng.init(jax.random.PRNGKey(0))
+    clean = make_batch(cfg, 4, 16)
+    state, m = eng.train_step(state, clean)
+    assert int(m["skipped_steps"]) == 0
+
+    poisoned = faults.poison_batch(clean, seed=5)
+    after, m = eng.train_step(state, poisoned)
+    assert int(m["skipped_steps"]) == 1
+    assert not np.isfinite(float(m["loss"]))
+    assert bits_equal(state, after)             # full pass-through
+
+    state2, m = eng.train_step(after, clean)
+    assert int(m["skipped_steps"]) == 0
+    assert int(state2.step) == int(state.step) + 1
+    assert np.isfinite(float(m["loss"]))
+
+
+def test_skip_nonfinite_off_poisons_state(make_engine):
+    """Control: without the sentinel the NaN propagates into params —
+    proving the test above exercises a real failure path."""
+    eng = make_engine("l2l-p", exec_cfg=ExecutionConfig(n_microbatches=2))
+    cfg = eng.model.cfg
+    state = eng.init(jax.random.PRNGKey(0))
+    poisoned = faults.poison_batch(make_batch(cfg, 4, 16), seed=5)
+    after, _ = eng.train_step(state, poisoned)
+    leaves = [np.asarray(x) for x in jax.tree.leaves(after.params)]
+    assert any(not np.isfinite(x).all() for x in leaves)
+
+
+# ===========================================================================
+# Serve graceful degradation: deadlines, eviction, starvation
+# ===========================================================================
+@pytest.fixture(scope="module")
+def serve_setup():
+    cfg = get_config("granite-3-8b", "smoke")
+    eng = engines.create("l2l", cfg, ExecutionConfig())
+    params = eng.model.init_params(jax.random.PRNGKey(0))
+    return cfg, eng, params
+
+
+def _scfg(**kw):
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("page_size", 8)
+    kw.setdefault("n_pages", 8)
+    kw.setdefault("max_seq", 32)
+    kw.setdefault("prefill_chunk", 1)
+    return ServeConfig(**kw)
+
+
+def test_evicted_request_pages_reused_with_parity(serve_setup):
+    """Evict a mid-prefill request at its tick deadline, then serve a
+    fresh request through the SAME recycled slot/pages: its tokens must
+    equal a solo run on a pristine pool (claim-reset hygiene)."""
+    cfg, eng, params = serve_setup
+    rng = np.random.RandomState(1)
+    pA = rng.randint(0, cfg.vocab_size, size=(4,))
+    pB = rng.randint(0, cfg.vocab_size, size=(4,))
+
+    srv = eng.serve_session(params, _scfg())
+    A = srv.submit(pA, 6, seed=7, ttl_ticks=3)
+    srv.run()
+    assert A.evicted and not A.done
+    st = srv.stats()
+    assert st["evicted"] == 1 and st["free_slots"] == 2
+    assert st["free_pages"] == 8 and st["reserved_pages"] == 0
+
+    B = srv.submit(pB, 6, seed=9)
+    srv.run()
+    assert B.done and len(B.generated) == 6
+
+    solo = eng.serve_session(params, _scfg())
+    B2 = solo.submit(pB, 6, seed=9)
+    solo.run()
+    assert B.generated == B2.generated          # token-level parity
+
+
+def test_mid_decode_eviction_releases_everything(serve_setup):
+    """A deadline that fires mid-decode (after tokens were produced)
+    still releases the slot and every claimed page."""
+    cfg, eng, params = serve_setup
+    rng = np.random.RandomState(2)
+    srv = eng.serve_session(params, _scfg())
+    r = srv.submit(rng.randint(0, cfg.vocab_size, size=(4,)), 20,
+                   seed=1, ttl_ticks=8)
+    srv.run()
+    assert r.evicted and 0 < len(r.generated) < 20
+    st = srv.stats()
+    assert st["free_pages"] == 8 and st["free_slots"] == 2
+    assert st["reserved_pages"] == 0
+
+
+def test_page_pool_starvation_evicts_pending(serve_setup):
+    """With the free pool stolen dry, admission blocks; the pending
+    request's deadline evicts it instead of wedging the scheduler, and
+    healing the pool lets a new request through."""
+    cfg, eng, params = serve_setup
+    rng = np.random.RandomState(3)
+    srv = eng.serve_session(params, _scfg())
+    stolen = faults.steal_pages(srv.scheduler, 8)   # leak everything
+    r = srv.submit(rng.randint(0, cfg.vocab_size, size=(4,)), 4,
+                   seed=1, ttl_ticks=2)
+    assert r.slot < 0                               # cannot be admitted
+    srv.run()
+    assert r.evicted and srv.stats()["evicted"] == 1
+
+    faults.restore_pages(srv.scheduler, stolen)     # the leak heals
+    r2 = srv.submit(rng.randint(0, cfg.vocab_size, size=(4,)), 4, seed=2)
+    srv.run()
+    assert r2.done and len(r2.generated) == 4
+
+
+def test_bounded_admission_rejects_overflow(serve_setup):
+    """max_pending bounds the queue AFTER eager admission: with 2 slots
+    and a queue of 1, the 4th and 5th submits are rejected, counted,
+    and never served; everything admitted completes."""
+    cfg, eng, params = serve_setup
+    rng = np.random.RandomState(4)
+    srv = eng.serve_session(params, _scfg(max_pending=1))
+    reqs = [srv.submit(rng.randint(0, cfg.vocab_size, size=(4,)), 3,
+                       seed=i) for i in range(5)]
+    assert [r.status for r in reqs] == \
+        ["active", "active", "queued", "rejected", "rejected"]
+    srv.run()
+    assert [r.status for r in reqs] == \
+        ["done", "done", "done", "rejected", "rejected"]
+    st = srv.stats()
+    assert st["rejected"] == 2 and st["finished"] == 3
+    assert all(len(r.generated) == 3 for r in reqs if r.done)
+
+
+def test_serve_driver_reports_degradation_counters():
+    """The continuous driver's final stats line carries done/rejected/
+    evicted so operators see degradation without scraping logs."""
+    from repro.launch.serve import main
+    reqs = main(["--arch", "granite-3-8b", "--variant", "smoke",
+                 "--requests", "5", "--max-batch", "2",
+                 "--prompt-len", "8", "--gen", "4",
+                 "--max-pending", "1"])
+    statuses = [r.status for r in reqs]
+    assert statuses.count("rejected") == 2
+    assert statuses.count("done") == 3
