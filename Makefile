@@ -1,7 +1,7 @@
 PY ?= python
 
 .PHONY: verify test chaos bench bench-relay bench-pack bench-group \
-	bench-stash bench-serve quickstart
+	bench-stash bench-serve bench-tier quickstart
 
 # tier-1 verification (quick: slow multi-device subprocess tests deselected)
 verify:
@@ -42,6 +42,13 @@ bench-group:
 # counts; writes BENCH_stash.json at the repo root
 bench-stash:
 	PYTHONPATH=src $(PY) benchmarks/fig_stash.py --tiny
+
+# storage-tier A/B (host-only vs fully-streamed disk tier across
+# prefetch depths) + a crc-verified SegmentStore streaming soak; writes
+# BENCH_tier.json at the repo root and fails on a >10% geometric-mean
+# tier-vs-host-only throughput regression
+bench-tier:
+	PYTHONPATH=src $(PY) benchmarks/fig_tier.py --tiny
 
 # continuous-batching serve sweep (tok/s + p50/p99 latency vs
 # concurrency under Poisson load); writes BENCH_serve.json at the repo

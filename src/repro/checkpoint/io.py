@@ -161,20 +161,34 @@ def read_manifest(path: str) -> Optional[dict]:
         return None
 
 
-def verify(path: str, fingerprint: Optional[str] = None) -> bool:
-    """True iff the snapshot at ``path`` is complete and uncorrupted:
-    manifest present and parseable, every array readable with its
-    recorded shape, every crc32 matching the stored bytes, and (when
-    both sides carry one) the fingerprint matching the caller's."""
-    manifest = read_manifest(path)
-    if manifest is None or "crc32" not in manifest:
-        return False
-    if manifest.get("manifest_crc32") != _manifest_crc(manifest):
-        return False                    # the manifest itself is damaged
-    if (fingerprint is not None
-            and manifest.get("fingerprint") is not None
-            and manifest["fingerprint"] != fingerprint):
-        return False
+# Memoization of the HEAVY byte-verification pass: the tier store's
+# quarantine-rebuild, restore-time discovery and the relay's periodic
+# latest_good() probes all re-verify the same unchanged snapshots.  The
+# cache key binds the verdict to BOTH files' (mtime_ns, size) — the
+# manifest alone is not enough: in-place damage to arrays.npz (disk rot,
+# chaos-suite bitflips) leaves the manifest untouched, so any key that
+# ignored the arrays file would keep vouching for rotten bytes.  Cheap
+# structural checks (manifest parse/self-crc, fingerprint) are NOT
+# cached — the fingerprint varies per caller.
+_VERIFY_CACHE: dict = {}
+_VERIFY_CACHE_MAX = 256
+
+
+def _verify_cache_key(path: str):
+    try:
+        man = os.stat(os.path.join(path, MANIFEST))
+        arr = os.stat(os.path.join(path, ARRAYS))
+    except OSError:
+        return None
+    return (os.path.abspath(path), man.st_mtime_ns, man.st_size,
+            arr.st_mtime_ns, arr.st_size)
+
+
+def _verify_bytes(path: str, manifest: dict) -> bool:
+    """The byte-level pass: whole-file crc32 of arrays.npz + every
+    array's shape and crc32 against the manifest.  Split out (and
+    memoized by ``verify``) so tests can count/monkeypatch the heavy
+    reads independently of the cheap structural checks."""
     try:
         with open(os.path.join(path, ARRAYS), "rb") as f:
             if zlib.crc32(f.read()) != manifest.get("file_crc32"):
@@ -194,6 +208,33 @@ def verify(path: str, fingerprint: Optional[str] = None) -> bool:
         # file all surface as read errors — corrupt either way
         return False
     return True
+
+
+def verify(path: str, fingerprint: Optional[str] = None) -> bool:
+    """True iff the snapshot at ``path`` is complete and uncorrupted:
+    manifest present and parseable, every array readable with its
+    recorded shape, every crc32 matching the stored bytes, and (when
+    both sides carry one) the fingerprint matching the caller's.  The
+    byte pass is memoized by (path, manifest + arrays mtime_ns/size), so
+    repeated probes of an unchanged snapshot cost two stat() calls."""
+    manifest = read_manifest(path)
+    if manifest is None or "crc32" not in manifest:
+        return False
+    if manifest.get("manifest_crc32") != _manifest_crc(manifest):
+        return False                    # the manifest itself is damaged
+    if (fingerprint is not None
+            and manifest.get("fingerprint") is not None
+            and manifest["fingerprint"] != fingerprint):
+        return False
+    key = _verify_cache_key(path)
+    if key is not None and key in _VERIFY_CACHE:
+        return _VERIFY_CACHE[key]
+    ok = _verify_bytes(path, manifest)
+    if key is not None:
+        if len(_VERIFY_CACHE) >= _VERIFY_CACHE_MAX:
+            _VERIFY_CACHE.clear()
+        _VERIFY_CACHE[key] = ok
+    return ok
 
 
 def restore(path: str, like: Any, shardings: Any = None,

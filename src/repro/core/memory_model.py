@@ -14,6 +14,7 @@ from dataclasses import dataclass
 import jax
 
 from repro.core.relay import n_stops, segment_bounds
+from repro.core.tierstore import demote_plan, ring_depth
 from repro.models.common import is_spec, param_bytes
 from repro.models.model import LayeredModel
 
@@ -69,6 +70,25 @@ class MemoryReport:
     recompute_layers: int = 0
     recompute_stops: int = 0
     recompute_buffer: int = 0
+    # --- storage tier (tiers = 3: HBM <- pinned host <- mmap/NVMe) -------
+    # The cold row tail of the stacked EPS state (weights + optimizer
+    # slots; gradients are transit, never demoted) that lives in the
+    # on-disk SegmentStore under the host budget — planned by the SAME
+    # ``tierstore.demote_plan`` the runtime executes, so the accounting
+    # cannot drift from the chain.  ``disk_reads`` counts the per-step
+    # stage-in segment reads: ceil(demoted / G) relay-stop chunks per
+    # group, each fetching 1 weight segment + opt_slots slot segments
+    # (stage-out writes the same bytes back; writes are not counted
+    # here).  ``disk_read_ahead_cap`` is the prefetch ring's EFFECTIVE
+    # depth: the configured prefetch_depth, shrunk by the watchdog so
+    # the in-flight chunks fit the host-budget slack
+    # (``tierstore.ring_depth``) — degrade, don't OOM.
+    params_disk: int = 0
+    opt_disk: int = 0
+    total_disk: int = 0
+    demoted_layers: int = 0
+    disk_reads: int = 0
+    disk_read_ahead_cap: int = 0
     # --- serve mode (continuous batching, estimate_serve) ---------------
     # The serve-time device residents replacing the training stash terms:
     # the paged KV pool (n_pages fixed-size pages shared by all slots —
@@ -89,6 +109,7 @@ class MemoryReport:
         self.total_host = (self.params_host + self.opt_state
                            + ((self.stash + self.recompute_buffer)
                               if self.stash_on_host else 0))
+        self.total_disk = self.params_disk + self.opt_disk
         return self
 
 
@@ -114,7 +135,10 @@ def estimate(model: LayeredModel, *, batch: int, seq: int,
              prefetch_depth: int = 0,
              pack_params: bool = False,
              layers_per_relay: int = 1,
-             stash_every: int = 1) -> MemoryReport:
+             stash_every: int = 1,
+             tiers: int = 2,
+             host_budget: int = 0,
+             model_shards: int = 1) -> MemoryReport:
     """Modes:
       baseline      eq. (1): everything device-resident
       baseline_remat eq. (1) with the N*L*mb*X term reduced to boundaries
@@ -158,6 +182,23 @@ def estimate(model: LayeredModel, *, batch: int, seq: int,
     segment (weights) and one per optimizer slot (m, v) — the
     latency-bound small-transfer term eq. (6) hides inside its bandwidth
     model.
+
+    ``tiers``/``host_budget`` (l2l modes only) account the storage tier:
+    with ``tiers = 3`` the coldest stacked rows of the EPS state (weights
+    + opt slots; grads are transit) demote to the on-disk SegmentStore —
+    planned by the SAME ``tierstore.demote_plan`` the runtime executes
+    (``host_budget = 0`` demotes everything: fully streamed).  Demoted
+    bytes move from ``params_host``/``opt_state`` into
+    ``params_disk``/``opt_disk``; ``disk_reads`` counts the per-step
+    stage-in segment reads and ``disk_read_ahead_cap`` the
+    watchdog-shrunk effective prefetch depth (``tierstore.ring_depth``).
+
+    ``model_shards`` divides the per-device/per-host BYTE terms (relay
+    slot, host-resident stack, opt state, disk tier) for a program model-
+    sharded over that many devices — the relay slot a device fetches and
+    the stack a host holds are 1/shards of the full layer.  Activation /
+    stash terms are NOT divided (batch-sharding is a separate axis):
+    the estimate stays conservative.  ``host_budget`` is then PER HOST.
     """
     cfg = model.cfg
     d = cfg.d_model
@@ -222,10 +263,42 @@ def estimate(model: LayeredModel, *, batch: int, seq: int,
     # boundaries (the entry is one of the persistent checkpoints)
     rec_buffer = (max(max(s1 - s0 for s0, s1 in gsegs)
                       for gsegs in segs) - 1) * batch * A if K > 1 else 0
+    # --- model sharding + storage tier -----------------------------------
+    shards = max(1, int(model_shards))
+    shard = lambda b: -(-b // shards)              # ceil: stay conservative
+    per_layer_w = [shard(param_bytes(g.spec, param_dtype_bytes))
+                   for g in model.groups]
+    # demotable stacked state per layer row: weights + the opt slots that
+    # live alongside them in the store (grads are transit, never stored)
+    per_layer_state = [p * (1 + opt_slots) for p in per_layer_w]
+    n_list = [g.n_layers for g in model.groups]
+    L_total_s = sum(p * n for p, n in zip(per_layer_w, n_list))
+    params_host = L_total_s
+    opt_host = (1 + opt_slots) * L_total_s         # EPS-resident
+    params_disk = opt_disk = demoted = reads = cap = 0
+    if tiers >= 3:
+        hot = demote_plan(per_layer_state, n_list, host_budget)
+        dem = [n - h for h, n in zip(hot, n_list)]
+        demoted = sum(dem)
+        params_disk = sum(d_ * p for d_, p in zip(dem, per_layer_w))
+        opt_disk = sum(d_ * p * opt_slots
+                       for d_, p in zip(dem, per_layer_w))
+        params_host -= params_disk
+        opt_host -= opt_disk
+        # stage-in reads: ceil(demoted / G) chunks per group, each
+        # fetching 1 weight segment + opt_slots slot segments
+        reads = sum(n_stops(d_, G) * (1 + opt_slots) for d_ in dem if d_)
+        if demoted:
+            chunk = G * max(s for d_, s in zip(dem, per_layer_state)
+                            if d_)
+            resident = sum(h * s for h, s in zip(hot, per_layer_state))
+            cap = ring_depth(prefetch_depth, chunk,
+                             max(0, host_budget - resident),
+                             bounded=host_budget > 0)
     return MemoryReport(
-        params_device=transit * slot,
-        params_host=L_total,
-        opt_state=(1 + opt_slots) * L_total,       # EPS-resident
+        params_device=transit * shard(slot),
+        params_host=params_host,
+        opt_state=opt_host,
         activations=ub * X,                        # recompute working set
         stash=n_ckpt * batch * A,
         stash_on_host=offload_stash,
@@ -235,7 +308,12 @@ def estimate(model: LayeredModel, *, batch: int, seq: int,
         stash_boundaries=n_ckpt,
         recompute_layers=rec_layers,
         recompute_stops=rec_stops,
-        recompute_buffer=rec_buffer).finalize()
+        recompute_buffer=rec_buffer,
+        params_disk=params_disk,
+        opt_disk=opt_disk,
+        demoted_layers=demoted,
+        disk_reads=reads,
+        disk_read_ahead_cap=cap).finalize()
 
 
 def estimate_serve(model: LayeredModel, *, max_batch: int, page_size: int,

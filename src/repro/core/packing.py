@@ -37,6 +37,12 @@ device, the paper's EPS mixed-precision split.
 Bit-identity: packing is concatenation of reshaped leaves and unpacking is
 the inverse slice — byte-for-byte lossless, asserted across every arch by
 tests/test_packing.py.
+
+The stacked ``(N, W)`` row-major segments are ALSO the storage tier's
+on-disk format: ``core.tierstore.SegmentStore`` persists exactly these
+buffers (one file per dtype segment, one crc32 per layer row), so a
+G-layer relay window of a demoted group is one contiguous pread and the
+disk tier round-trips bytes with no re-encode.
 """
 from __future__ import annotations
 

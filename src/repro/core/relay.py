@@ -89,6 +89,17 @@ def n_stops(n_layers: int, group: int) -> int:
     return -(-n_layers // g)
 
 
+def stop_bounds(n_layers: int, group: int, start: int = 0) -> tuple:
+    """Static ``(lo, hi)`` layer ranges of each relay stop over
+    ``n_layers`` layers beginning at ``start`` — G full stops plus the
+    short remainder, ``n_stops(n_layers, group)`` entries.  This is the
+    chunk schedule the storage tier's disk prefetch ring shares with the
+    in-jit relay (``core.tierstore``): one contiguous pread per stop."""
+    g = max(1, group)
+    return tuple((start + lo, start + min(lo + g, n_layers))
+                 for lo in range(0, n_layers, g))
+
+
 def segment_bounds(n_layers: int, every: int) -> tuple:
     """Static ``(start, stop)`` layer ranges of the stash segments when
     only every ``every``-th boundary is checkpointed

@@ -45,6 +45,26 @@ class ExecutionConfig:
     # --- L2L memory policies -------------------------------------------
     offload_stash: bool = False     # eq.(4): stash -> pinned_host
     weight_stream: bool = False     # EPS: params/opt live in pinned_host
+    # --- storage-tier EPS (HBM <- pinned host <- mmap/NVMe) ---------------
+    # tiers=2 is the historical two-tier placement; tiers=3 extends the
+    # chain below host DRAM: the cold row tail of every stacked layer
+    # group (weights + optimizer slots) lives in a verified on-disk
+    # SegmentStore (core/tierstore.py — packed flat segments, per-row
+    # crc32 manifests, staged-fsync-rename writes) and is re-materialized
+    # around each jitted call through a prefetch ring that issues disk
+    # reads ``prefetch_depth`` relay-stop chunks ahead.  Demotion is
+    # driven by ``host_budget_bytes``: when the resident stacked state
+    # would exceed it, coldest rows demote to disk instead of OOMing
+    # (0 = no budget: demote everything — fully streamed).  Transient
+    # read errors retry ``tier_retries`` times with exponential backoff
+    # from ``tier_backoff_s``; checksum failures quarantine + rebuild
+    # from the newest good checkpoint.  Bit-identical to tiers=2 across
+    # the whole (G, prefetch, pack, K) grid (tests/test_tierstore.py).
+    tiers: int = 2
+    host_budget_bytes: int = 0      # resident stacked-state budget (tiers=3)
+    tier_dir: str = ""              # SegmentStore root ("" = temp dir)
+    tier_retries: int = 3
+    tier_backoff_s: float = 0.01
     # --- constant-memory stash (every-K boundary checkpointing) ----------
     # K >= 1: the forward relay stashes only the boundary activations at
     # layer indices = 0 (mod K) within each group — ceil(N/K) boundaries
@@ -130,3 +150,8 @@ class ExecutionConfig:
         assert self.stash_every >= 1, \
             "stash_every: K >= 1 layers per stashed boundary " \
             "(1 = stash every layer boundary)"
+        assert self.tiers in (2, 3), \
+            "tiers: 2 = HBM <- pinned host, 3 = + mmap/NVMe segment store"
+        assert self.host_budget_bytes >= 0
+        assert self.tier_retries >= 0
+        assert self.tier_backoff_s >= 0.0

@@ -1,0 +1,648 @@
+"""Storage-tier EPS: a verified, self-healing NVMe/mmap segment store.
+
+The paper's EPS keeps the stacked layer state in host DRAM; MegaTrain
+(PAPERS.md) pushes the same relay below that, to disk.  This module is
+that third tier: ``SegmentStore`` persists each layer group's packed flat
+segments (``core.packing``'s (N, W) per-dtype row-major buffers — one
+contiguous file per group per segment, so a G-layer relay window is ONE
+contiguous pread) and ``TierChain`` demotes the cold tail of the stacked
+state to it under a host-byte budget, re-materializing demoted rows
+around every jitted call.
+
+Durability + integrity are checkpoint-grade, reusing ``checkpoint.io``'s
+primitives:
+
+* writes are staged in a ``.tmp-*`` sibling, every file fsynced, the
+  directory atomically renamed into place and the parent fsynced — a
+  crash leaves the previous segment intact or the new one complete,
+  never a torn file under the real name;
+* the per-segment manifest carries a whole-file crc32 (verified at
+  OPEN), a crc32 PER LAYER ROW (verified on every read — rot under the
+  page cache surfaces at the read that returns it, not as NaNs ten
+  layers later), and a manifest self-checksum;
+* transient read errors (EIO and friends) are retried with exponential
+  backoff up to ``retries`` attempts, then surfaced as a hard
+  ``TierReadError``;
+* a checksum failure quarantines the segment (moved aside, never
+  silently overwritten) and rebuilds it from the newest good checkpoint
+  through the installed ``rebuilder`` — counted in
+  ``metrics["rebuilt_segments"]`` — so one rotten block does not abort
+  the step loop.
+
+Graceful degradation: when the resident state would exceed
+``host_budget`` the chain demotes whole layer rows (coldest last-group
+rows first) instead of OOMing, and the read-side prefetch ring issues
+disk reads ``prefetch_depth`` relay-stop-sized chunks ahead; a watchdog
+shrinks the ring's effective depth when the budget slack cannot hold the
+in-flight chunks (``metrics["prefetch_shrinks"]``) rather than blowing
+the budget it exists to protect.
+
+Bit-identity: the store round-trips raw array bytes (no re-encode), and
+packing/unpacking are lossless, so a tier-chain run is byte-identical to
+the host-only relay for every (G, prefetch, pack, K) point —
+tests/test_tierstore.py proves it the same way every prior knob was.
+"""
+from __future__ import annotations
+
+import errno
+import json
+import os
+import re
+import shutil
+import time
+import zlib
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.io import _fsync_dir, _fsync_file, _manifest_crc
+from repro.core import packing
+from repro.core.relay import stop_bounds
+
+MANIFEST = "manifest.json"
+_TMP = ".tmp-"
+QUARANTINE = "quarantine"
+
+# errnos treated as transient (retried with backoff); anything else —
+# and a retry budget exhausted on these — is a hard TierReadError
+_TRANSIENT = {errno.EIO, errno.EAGAIN, errno.EINTR, errno.EBUSY}
+
+
+class TierError(RuntimeError):
+    """Base class for storage-tier failures."""
+
+
+class TierReadError(TierError):
+    """A segment read failed past the retry budget."""
+
+
+class TierIntegrityError(TierError):
+    """A segment failed verification and could not be rebuilt."""
+
+
+def _np_dtype(name: str):
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def _safe(name: str) -> str:
+    return re.sub(r"[^A-Za-z0-9_.-]", "_", name)
+
+
+def fresh_metrics() -> Dict[str, int]:
+    return {"reads": 0, "read_bytes": 0, "writes": 0, "write_bytes": 0,
+            "retries": 0, "rebuilt_segments": 0, "quarantined": 0,
+            "prefetch_shrinks": 0, "effective_depth": 0}
+
+
+# ===========================================================================
+# SegmentStore — one directory per key, one .bin per flat segment
+# ===========================================================================
+class SegmentStore:
+    """Packed flat segments on disk, verified at open and on every read.
+
+    Layout: ``<root>/<key>/seg_<segname>.bin`` (raw row-major (N, W)
+    bytes) + ``<root>/<key>/manifest.json``.  ``key`` names one layer
+    group's role (e.g. ``g0_w``, ``g0_opt``); segment names are the
+    packed dtype keys (weights) or ``<slot>:<dtype>`` (optimizer).
+
+    ``rebuilder`` (installed by ``TierChain.attach_checkpoints``) is
+    called with the key when a segment fails verification after
+    quarantine; it must re-``put`` the segment from an authoritative
+    source (the newest good checkpoint) or raise.
+    """
+
+    def __init__(self, root: str, *, retries: int = 3,
+                 backoff_s: float = 0.01):
+        self.root = root
+        self.retries = max(0, int(retries))
+        self.backoff_s = float(backoff_s)
+        self.rebuilder: Optional[Callable[[str], None]] = None
+        # test seam: called as fault_hook(path, offset, length) before
+        # every physical segment read (repro.testing.faults installs
+        # seeded EIO / latency injectors here)
+        self.fault_hook: Optional[Callable[[str, int, int], None]] = None
+        self.metrics = fresh_metrics()
+        self._manifests: Dict[str, dict] = {}   # verified-at-open cache
+        os.makedirs(root, exist_ok=True)
+
+    # -- paths -------------------------------------------------------------
+    def key_dir(self, key: str) -> str:
+        return os.path.join(self.root, _safe(key))
+
+    def seg_path(self, key: str, seg: str) -> str:
+        return os.path.join(self.key_dir(key), f"seg_{_safe(seg)}.bin")
+
+    # -- write path --------------------------------------------------------
+    def put(self, key: str, segs: Dict[str, np.ndarray], step: int) -> None:
+        """Atomically (re)write one key's segments: staged + fsynced +
+        renamed, with per-row and whole-file crc32s in the manifest."""
+        final = self.key_dir(key)
+        tmp = os.path.join(self.root, _TMP + _safe(key) + f".{os.getpid()}")
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        manifest: dict = {"version": 1, "key": key, "step": int(step),
+                          "segs": {}}
+        try:
+            for name, arr in segs.items():
+                arr = np.ascontiguousarray(np.asarray(jax.device_get(arr)))
+                assert arr.ndim == 2, \
+                    f"segment {name!r} must be stacked (N, W), got {arr.shape}"
+                raw = arr.view(np.uint8).reshape(arr.shape[0], -1)
+                row_crcs = [zlib.crc32(raw[r].tobytes())
+                            for r in range(raw.shape[0])]
+                path = os.path.join(tmp, f"seg_{_safe(name)}.bin")
+                data = raw.tobytes()
+                with open(path, "wb") as f:
+                    f.write(data)
+                    f.flush()
+                    os.fsync(f.fileno())
+                manifest["segs"][name] = {
+                    "dtype": str(arr.dtype), "shape": list(arr.shape),
+                    "file": f"seg_{_safe(name)}.bin",
+                    "row_crc32": row_crcs,
+                    "file_crc32": zlib.crc32(data)}
+                self.metrics["writes"] += 1
+                self.metrics["write_bytes"] += len(data)
+            manifest["manifest_crc32"] = _manifest_crc(manifest)
+            with open(os.path.join(tmp, MANIFEST), "w") as f:
+                json.dump(manifest, f)
+                f.flush()
+                os.fsync(f.fileno())
+            _fsync_dir(tmp)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)              # the commit point
+            _fsync_dir(self.root)
+        except BaseException:
+            shutil.rmtree(tmp, ignore_errors=True)
+            raise
+        self._manifests[key] = manifest
+
+    # -- verification ------------------------------------------------------
+    def _read_manifest(self, key: str) -> Optional[dict]:
+        try:
+            with open(os.path.join(self.key_dir(key), MANIFEST)) as f:
+                return json.load(f)
+        except (OSError, ValueError):
+            return None
+
+    def _verify_open(self, key: str) -> Optional[dict]:
+        """Full verification at open: manifest self-crc + whole-file
+        crc32 of every segment (a torn or truncated write surfaces HERE,
+        not as garbage rows mid-relay).  Returns the manifest or None."""
+        manifest = self._read_manifest(key)
+        if manifest is None or "segs" not in manifest:
+            return None
+        if manifest.get("manifest_crc32") != _manifest_crc(manifest):
+            return None
+        for name, meta in manifest["segs"].items():
+            path = self.seg_path(key, name)
+            try:
+                with open(path, "rb") as f:
+                    if zlib.crc32(f.read()) != meta["file_crc32"]:
+                        return None
+            except OSError:
+                return None
+        return manifest
+
+    def open(self, key: str) -> dict:
+        """Verified manifest for ``key`` (cached until ``put``/heal);
+        a failing segment is quarantined and rebuilt."""
+        cached = self._manifests.get(key)
+        if cached is not None:
+            return cached
+        manifest = self._verify_open(key)
+        if manifest is None:
+            self._heal(key, f"segment {key!r} failed open-time verification")
+            manifest = self._verify_open(key)
+            if manifest is None:
+                raise TierIntegrityError(
+                    f"segment {key!r} still fails verification after rebuild")
+        self._manifests[key] = manifest
+        return manifest
+
+    def step(self, key: str) -> int:
+        return int(self.open(key)["step"])
+
+    # -- healing -----------------------------------------------------------
+    def _heal(self, key: str, reason: str) -> None:
+        """Quarantine the damaged segment directory and rebuild it from
+        the authoritative source (newest good checkpoint)."""
+        self._manifests.pop(key, None)
+        kdir = self.key_dir(key)
+        if os.path.isdir(kdir):
+            qroot = os.path.join(self.root, QUARANTINE)
+            os.makedirs(qroot, exist_ok=True)
+            dest = os.path.join(
+                qroot, f"{_safe(key)}.{self.metrics['quarantined']}")
+            shutil.rmtree(dest, ignore_errors=True)
+            os.rename(kdir, dest)
+            self.metrics["quarantined"] += 1
+        if self.rebuilder is None:
+            raise TierIntegrityError(
+                f"{reason} and no rebuilder is attached "
+                f"(no checkpoint source — cannot self-heal)")
+        self.rebuilder(key)
+        self.metrics["rebuilt_segments"] += 1
+
+    # -- read path ---------------------------------------------------------
+    def _pread(self, path: str, offset: int, length: int) -> bytes:
+        if self.fault_hook is not None:
+            self.fault_hook(path, offset, length)
+        with open(path, "rb") as f:
+            f.seek(offset)
+            data = f.read(length)
+        if len(data) != length:
+            raise OSError(errno.EIO,
+                          f"short read: {len(data)}/{length} at "
+                          f"{path}:{offset}")
+        return data
+
+    def _pread_retry(self, path: str, offset: int, length: int) -> bytes:
+        """Bounded retry with exponential backoff on transient errors;
+        non-transient errnos and an exhausted budget raise TierReadError."""
+        delay = self.backoff_s
+        for attempt in range(self.retries + 1):
+            try:
+                return self._pread(path, offset, length)
+            except OSError as e:
+                if e.errno not in _TRANSIENT or attempt == self.retries:
+                    raise TierReadError(
+                        f"read of {path}:{offset}+{length} failed after "
+                        f"{attempt + 1} attempt(s): {e}") from e
+                self.metrics["retries"] += 1
+                time.sleep(delay)
+                delay *= 2
+        raise AssertionError("unreachable")
+
+    def read_rows(self, key: str, lo: int, hi: int,
+                  _healed: bool = False) -> Dict[str, np.ndarray]:
+        """Rows [lo, hi) of every segment of ``key`` — one contiguous
+        pread per segment, each row's crc32 verified against the
+        manifest before the bytes are trusted.  A checksum failure
+        quarantines + rebuilds the segment and retries the read once."""
+        manifest = self.open(key)
+        out: Dict[str, np.ndarray] = {}
+        for name, meta in manifest["segs"].items():
+            n, w = meta["shape"]
+            assert 0 <= lo <= hi <= n, f"rows [{lo}, {hi}) out of (0, {n})"
+            dt = _np_dtype(meta["dtype"])
+            row_bytes = w * dt.itemsize
+            data = self._pread_retry(self.seg_path(key, name),
+                                     lo * row_bytes, (hi - lo) * row_bytes)
+            self.metrics["reads"] += 1
+            self.metrics["read_bytes"] += len(data)
+            for r in range(hi - lo):
+                chunk = data[r * row_bytes:(r + 1) * row_bytes]
+                if zlib.crc32(chunk) != meta["row_crc32"][lo + r]:
+                    if _healed:
+                        raise TierIntegrityError(
+                            f"segment {key}/{name} row {lo + r} still "
+                            f"corrupt after rebuild")
+                    self._heal(key, f"segment {key}/{name} row {lo + r} "
+                               f"failed its crc32 at read time")
+                    return self.read_rows(key, lo, hi, _healed=True)
+            out[name] = np.frombuffer(data, dtype=dt).reshape(hi - lo, w)
+        return out
+
+
+# ===========================================================================
+# Demotion planning (shared with core.memory_model's tier accounting)
+# ===========================================================================
+def demote_plan(per_layer_bytes: List[int], n_layers: List[int],
+                host_budget: int) -> List[int]:
+    """Hot (host-resident) row count per group under ``host_budget``.
+
+    Rows are demoted coldest-first: last group's last rows first, walking
+    toward group 0, until the resident stacked state fits the budget.
+    ``host_budget <= 0`` demotes everything (the fully-streamed mode); a
+    budget larger than the total demotes nothing.  This is THE demotion
+    policy — ``TierChain`` executes it and ``memory_model.estimate``
+    accounts it, so the two can never drift."""
+    assert len(per_layer_bytes) == len(n_layers)
+    if host_budget <= 0:
+        return [0] * len(n_layers)
+    hot = list(n_layers)
+    resident = sum(b * n for b, n in zip(per_layer_bytes, n_layers))
+    for gi in range(len(n_layers) - 1, -1, -1):
+        if resident <= host_budget:
+            break
+        over = resident - host_budget
+        drop = min(hot[gi], -(-over // max(per_layer_bytes[gi], 1)))
+        hot[gi] -= drop
+        resident -= drop * per_layer_bytes[gi]
+    return hot
+
+
+def ring_depth(prefetch_depth: int, chunk_bytes: int, slack: int,
+               bounded: bool) -> int:
+    """Effective read-ahead depth of the disk prefetch ring: the
+    configured ``prefetch_depth``, shrunk so the in-flight chunks fit the
+    host-budget ``slack`` when the budget is ``bounded`` (the watchdog's
+    arithmetic — shrink instead of OOM; never below 1 in-flight read)."""
+    k = max(1, int(prefetch_depth))
+    if not bounded or chunk_bytes <= 0:
+        return k
+    return max(1, min(k, slack // chunk_bytes))
+
+
+# ===========================================================================
+# Demoted placeholder — what a staged-out group looks like between steps
+# ===========================================================================
+@jax.tree_util.register_pytree_node_class
+class Demoted:
+    """Placeholder for a layer group whose cold row tail lives on disk.
+
+    Holds the hot (resident) row prefix in the group's original layout
+    (per-leaf pytree or ``packing.Packed``); the ``TierChain`` that
+    created it re-materializes the full group before any jitted call.
+    """
+    __slots__ = ("hot", "group_index", "role", "n_total", "hot_rows")
+
+    def __init__(self, hot: Any, group_index: int, role: str,
+                 n_total: int, hot_rows: int):
+        self.hot = hot
+        self.group_index = group_index
+        self.role = role
+        self.n_total = n_total
+        self.hot_rows = hot_rows
+
+    def tree_flatten(self):
+        return (self.hot,), (self.group_index, self.role,
+                             self.n_total, self.hot_rows)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], *aux)
+
+    def __repr__(self):
+        return (f"Demoted(g{self.group_index}_{self.role}, "
+                f"{self.hot_rows}/{self.n_total} rows hot)")
+
+
+def is_demoted(x) -> bool:
+    return isinstance(x, Demoted)
+
+
+def _rows(tree, lo, hi):
+    return jax.tree.map(lambda a: a[lo:hi], tree)
+
+
+def _concat_rows(hot, cold):
+    return jax.tree.map(lambda h, c: jnp.concatenate([h, c], axis=0),
+                        hot, cold)
+
+
+# ===========================================================================
+# TierChain — HBM <- pinned host <- SegmentStore, around the jit boundary
+# ===========================================================================
+class TierChain:
+    """Demote/re-materialize the stacked EPS state through a SegmentStore.
+
+    The in-jit tiers (HBM <- pinned host) are ``eps.Placement``'s job;
+    this adapter extends the chain below the process: between jitted
+    calls the cold row tail of each layer group (weights + optimizer
+    slots) lives ONLY in the store, and ``stage_in``/``stage_out`` move
+    it across the disk boundary around every call — ``stage_in`` with a
+    ``prefetch_depth``-deep read ring over ``layers_per_relay``-row
+    chunks (the same stop schedule as the in-jit relay), ``stage_out``
+    with crash-consistent verified writes.
+    """
+
+    def __init__(self, store: SegmentStore, *, host_budget: int = 0,
+                 layers_per_relay: int = 1, prefetch_depth: int = 0,
+                 opt_slots: Optional[Tuple[str, ...]] = None):
+        self.store = store
+        self.host_budget = int(host_budget)
+        self.group = max(1, int(layers_per_relay))
+        self.depth = max(0, int(prefetch_depth))
+        self._wspecs: Dict[int, packing.PackSpec] = {}
+        self._packed_groups = False
+        self._step = 0
+        self._ckpt: Optional[Tuple[str, str, Any]] = None  # (dir, prefix, eng)
+        self._mat_cache: Optional[Tuple[int, Any]] = None
+        self._demoted_layers = 0
+        self._resident_bytes = 0
+
+    # -- metrics ------------------------------------------------------------
+    @property
+    def metrics(self) -> Dict[str, int]:
+        return {**self.store.metrics,
+                "demoted_layers": self._demoted_layers,
+                "resident_bytes": self._resident_bytes}
+
+    # -- layout helpers ------------------------------------------------------
+    @staticmethod
+    def _key(gi: int, role: str) -> str:
+        return f"g{gi}_{role}"
+
+    def _group_segments(self, gi: int, group) -> Dict[str, np.ndarray]:
+        """A params group (pytree or Packed) -> numpy flat segments;
+        records the PackSpec used so cold rows can be rebuilt."""
+        if packing.is_packed(group):
+            self._packed_groups = True
+            self._wspecs[gi] = group.spec
+            return {k: np.asarray(jax.device_get(v))
+                    for k, v in group.segs.items()}
+        packed = packing.pack(group)
+        self._wspecs[gi] = packed.spec
+        return {k: np.asarray(jax.device_get(v))
+                for k, v in packed.segs.items()}
+
+    def _opt_segments(self, gi: int, g_opt) -> Dict[str, np.ndarray]:
+        """An opt group ({leaf: {m, v}} pytree or {slot: Packed}) ->
+        numpy segments keyed ``<slot>:<dtype>``; () slots -> {}."""
+        if packing.opt_is_packed(g_opt):
+            return {f"{s}:{k}": np.asarray(jax.device_get(v))
+                    for s, p in g_opt.items() for k, v in p.segs.items()}
+        spec = self._wspecs[gi]
+        packed = packing.pack_opt(spec, g_opt)
+        return {f"{s}:{k}": np.asarray(jax.device_get(v))
+                for s, p in packed.items() for k, v in p.segs.items()}
+
+    def _cold_group(self, gi: int, segs: Dict[str, np.ndarray]):
+        """Disk rows -> a group-layout tree (Packed or per-leaf)."""
+        packed = packing.Packed({k: jnp.asarray(v) for k, v in segs.items()},
+                                self._wspecs[gi])
+        return packed if self._packed_groups else packing.unpack(packed)
+
+    def _cold_opt(self, gi: int, segs: Dict[str, np.ndarray]):
+        slots: Dict[str, dict] = {}
+        for name, arr in segs.items():
+            slot, seg_key = name.split(":", 1)
+            slots.setdefault(slot, {})[seg_key] = jnp.asarray(arr)
+        spec = self._wspecs[gi]
+        packed = {s: packing.Packed(d, spec) for s, d in sorted(slots.items())}
+        if self._packed_groups:
+            return packed
+        return packing.unpack_opt(spec, packed)
+
+    # -- adoption: write everything cold, wrap placeholders ------------------
+    def adopt(self, state, step: Optional[int] = None):
+        """Bring a fully-materialized TrainState under tier management:
+        write every group's segments to the store, then demote the
+        coldest row tail per the host budget (placeholders replace the
+        demoted rows, so the host actually frees them)."""
+        params, opt = state.params, state.opt_state
+        self._step = int(state.step if step is None else step)
+        groups = params["groups"]
+        n_layers, per_layer = [], []
+        for g_w, g_o in zip(groups, opt["groups"]):
+            assert not (is_demoted(g_w) or is_demoted(g_o)), \
+                "adopt/stage_out need a fully-materialized state"
+            leaves = jax.tree.leaves(g_w)
+            n = int(leaves[0].shape[0])
+            gb = sum(a.nbytes for a in leaves) \
+                + sum(a.nbytes for a in jax.tree.leaves(g_o))
+            n_layers.append(n)
+            per_layer.append(gb // max(n, 1))
+        hot = demote_plan(per_layer, n_layers, self.host_budget)
+        new_w, new_o = [], []
+        for gi, (g_w, g_o) in enumerate(zip(groups, opt["groups"])):
+            if hot[gi] >= n_layers[gi]:
+                new_w.append(g_w)
+                new_o.append(g_o)
+                continue
+            w_segs = self._group_segments(gi, g_w)
+            o_segs = self._opt_segments(gi, g_o)
+            self.store.put(self._key(gi, "w"), w_segs, self._step)
+            if o_segs:
+                self.store.put(self._key(gi, "opt"), o_segs, self._step)
+            new_w.append(Demoted(_rows(g_w, 0, hot[gi]), gi, "w",
+                                 n_layers[gi], hot[gi]))
+            new_o.append(Demoted(_rows(g_o, 0, hot[gi]), gi, "opt",
+                                 n_layers[gi], hot[gi])
+                         if o_segs else g_o)
+        self._mat_cache = None
+        self._demoted_layers = sum(n - h for n, h in zip(n_layers, hot))
+        self._resident_bytes = sum(b * h
+                                   for b, h in zip(per_layer, hot))
+        return state.replace(
+            params={**params, "groups": tuple(new_w)},
+            opt_state={**opt, "groups": tuple(new_o)})
+
+    # -- stage in: disk -> host ----------------------------------------------
+    def _fetch_cold(self, d: Demoted) -> Dict[str, np.ndarray]:
+        """Read a placeholder's cold rows chunk-by-chunk with the
+        prefetch ring: chunks are ``layers_per_relay`` rows (the relay's
+        own stop schedule), up to ``effective_depth`` reads in flight.
+        The watchdog shrinks the depth when the budget slack cannot hold
+        the in-flight chunks — degrade, don't OOM."""
+        key = self._key(d.group_index, d.role)
+        manifest = self.store.open(key)
+        bounds = stop_bounds(d.n_total - d.hot_rows, self.group,
+                             start=d.hot_rows)
+        row_bytes = sum(m["shape"][1] * _np_dtype(m["dtype"]).itemsize
+                        for m in manifest["segs"].values())
+        chunk_bytes = self.group * row_bytes
+        hot_bytes = sum(
+            a.nbytes for a in jax.tree.leaves(d.hot)) if d.hot_rows else 0
+        slack = max(self.host_budget - hot_bytes, 0)
+        eff = ring_depth(self.depth, chunk_bytes, slack,
+                         bounded=self.host_budget > 0)
+        if self.depth >= 1 and eff < self.depth:
+            self.store.metrics["prefetch_shrinks"] += 1
+        self.store.metrics["effective_depth"] = eff
+        if self.depth == 0 or len(bounds) <= 1:
+            chunks = [self.store.read_rows(key, lo, hi) for lo, hi in bounds]
+        else:
+            with ThreadPoolExecutor(max_workers=eff) as pool:
+                futs = [pool.submit(self.store.read_rows, key, lo, hi)
+                        for lo, hi in bounds]
+                chunks = [f.result() for f in futs]
+        return {name: np.concatenate([c[name] for c in chunks], axis=0)
+                for name in manifest["segs"]}
+
+    def _materialize_group(self, d: Demoted):
+        segs = self._fetch_cold(d)
+        cold = (self._cold_group(d.group_index, segs) if d.role == "w"
+                else self._cold_opt(d.group_index, segs))
+        return cold if d.hot_rows == 0 else _concat_rows(d.hot, cold)
+
+    def materialize_params(self, params):
+        """Params with every Demoted group re-materialized (read-only:
+        nothing is written back).  Cached by tuple identity so a serving
+        loop re-reads the disk tier once per staged-out state, not once
+        per decode token."""
+        groups = params["groups"]
+        if not any(is_demoted(g) for g in groups):
+            return params
+        if self._mat_cache is not None and self._mat_cache[0] is groups:
+            return self._mat_cache[1]
+        full = tuple(self._materialize_group(g) if is_demoted(g) else g
+                     for g in groups)
+        out = {**params, "groups": full}
+        self._mat_cache = (groups, out)
+        return out
+
+    def stage_in(self, state):
+        """Re-materialize every demoted group (weights + opt) — the
+        disk->host relay that runs before each jitted step."""
+        params = self.materialize_params(state.params)
+        opt = state.opt_state
+        o_groups = tuple(self._materialize_group(g) if is_demoted(g) else g
+                         for g in opt["groups"])
+        return state.replace(params=params,
+                             opt_state={**opt, "groups": o_groups})
+
+    # -- stage out: host -> disk ---------------------------------------------
+    def stage_out(self, state):
+        """Write the demoted groups' (updated) segments back to the
+        store — verified, crash-consistent — and drop the cold rows from
+        host memory again.  The store's ``step`` advances with the
+        state, so a later ``save`` at the same step is a valid rebuild
+        source."""
+        return self.adopt(state)
+
+    # -- checkpoint-backed self-healing --------------------------------------
+    def attach_checkpoints(self, directory: str, prefix: str,
+                           engine) -> None:
+        """Install the quarantine-rebuild source: the newest good
+        snapshot in ``directory``.  Its step must match the store's
+        (stage_out runs before save in the engine, so a save at step s
+        makes every segment at step s rebuildable)."""
+        self._ckpt = (directory, prefix, engine)
+        self.store.rebuilder = self._rebuild
+
+    def _rebuild(self, key: str) -> None:
+        from repro.checkpoint import io as ckpt_io
+        assert self._ckpt is not None
+        directory, prefix, engine = self._ckpt
+        m = re.fullmatch(r"g(\d+)_(w|opt)", key)
+        assert m, f"unrecognized segment key {key!r}"
+        gi, role = int(m.group(1)), m.group(2)
+        fp = engine.state_fingerprint()
+        step = ckpt_io.latest_good(directory, prefix, fingerprint=fp)
+        if step is None:
+            raise TierIntegrityError(
+                f"cannot rebuild {key!r}: no good checkpoint in "
+                f"{directory}")
+        if step != self._step:
+            raise TierIntegrityError(
+                f"cannot rebuild {key!r}: newest good checkpoint is step "
+                f"{step} but the store holds step {self._step} bytes")
+        like = engine.abstract_state()
+        like_p, like_o = like.params, like.legacy_opt()
+        if self._packed_groups:
+            like_o = jax.eval_shape(packing.unpack_opt_state, like_o, like_p)
+            like_p = jax.eval_shape(packing.unpack_params, like_p)
+        params, opt, _ = ckpt_io.restore_train_state(
+            directory, like_p, like_o, step=step, prefix=prefix,
+            fingerprint=fp)
+        if self._packed_groups:
+            params = packing.pack_params(params)
+            opt = packing.pack_opt_state(opt, params)
+        # weights first even for an opt rebuild: _opt_segments needs the
+        # group's PackSpec, which _group_segments records
+        segs = self._group_segments(gi, params["groups"][gi])
+        if role != "w":
+            segs = self._opt_segments(gi, opt["groups"][gi])
+        self.store.put(key, segs, step)

@@ -91,6 +91,39 @@ class Engine:
                 optimizer=self.optimizer)
         return self._placements
 
+    # -- storage tier (ExecutionConfig.tiers = 3) ---------------------------
+    @property
+    def tier(self):
+        """The live disk-tier adapter (``core.tierstore.TierChain``), or
+        None for the historical two-tier placement.  Built lazily from
+        ``placements.disk``; the segment store lives in
+        ``exec_cfg.tier_dir`` (a fresh temp dir when unset).  Around
+        every jitted call the chain re-materializes the demoted cold row
+        tail of each layer group and writes updated rows back through
+        verified, crash-consistent segment files — byte-identical to the
+        host-only relay (tests/test_tierstore.py)."""
+        spec = self.placements.disk
+        if spec is None:
+            return None
+        if "tier" not in self._fns:
+            import tempfile
+            from repro.core import tierstore
+            root = spec.directory or tempfile.mkdtemp(prefix="eps-tier-")
+            store = tierstore.SegmentStore(
+                root, retries=spec.retries, backoff_s=spec.backoff_s)
+            self._fns["tier"] = tierstore.TierChain(
+                store, host_budget=spec.host_budget,
+                layers_per_relay=self.exec_cfg.layers_per_relay,
+                prefetch_depth=self.exec_cfg.prefetch_depth)
+        return self._fns["tier"]
+
+    def _materialize(self, params):
+        """Params with demoted groups re-read from the segment store
+        (identity-cached inside the chain) — every read verified, retried
+        on transient errors, quarantined + rebuilt on checksum failure."""
+        tier = self.tier
+        return params if tier is None else tier.materialize_params(params)
+
     # -- packed relay (ExecutionConfig.pack_params) -------------------------
     def _relay_params(self, params):
         """Params in the layout the relay kernels expect: with
@@ -115,9 +148,14 @@ class Engine:
 
     # -- state lifecycle ----------------------------------------------------
     def init(self, rng) -> TrainState:
-        """Materialize parameters + optimizer state from a PRNG key."""
+        """Materialize parameters + optimizer state from a PRNG key.
+        With the storage tier enabled the fresh state is adopted by the
+        TierChain: segments written to the store, cold rows demoted."""
         params = self._relay_params(self.model.init_params(rng))
-        return TrainState.from_legacy(params, self._init_opt_legacy(params))
+        state = TrainState.from_legacy(params, self._init_opt_legacy(params))
+        if self.tier is not None:
+            state = self.tier.adopt(state, step=0)
+        return state
 
     def abstract_state(self) -> TrainState:
         """ShapeDtypeStruct TrainState (for lowering / restore targets)."""
@@ -145,6 +183,11 @@ class Engine:
         crash-consistent (staged + fsynced + atomically renamed, crc32
         per array in the manifest — ``checkpoint.io``); ``keep_last=N``
         prunes all but the N newest snapshots after the save."""
+        if self.tier is not None:
+            # checkpoints hold the FULL state; also make this directory
+            # the quarantine-rebuild source for the segment store
+            state = self.tier.stage_in(state)
+            self.tier.attach_checkpoints(directory, prefix, self)
         step = int(state.step) if step is None else int(step)
         params, opt = state.params, state.legacy_opt()
         if self.exec_cfg.pack_params:
@@ -172,7 +215,11 @@ class Engine:
         if self.exec_cfg.pack_params:
             params = packing.pack_params(params)
             opt = packing.pack_opt_state(opt, params)
-        return TrainState.from_legacy(params, opt), step
+        state = TrainState.from_legacy(params, opt)
+        if self.tier is not None:
+            state = self.tier.adopt(state, step=step)
+            self.tier.attach_checkpoints(directory, prefix, self)
+        return state, step
 
     # -- training -----------------------------------------------------------
     @property
@@ -191,12 +238,21 @@ class Engine:
         return self._fns["step_fn"]
 
     def train_step(self, state: TrainState, batch):
-        """One optimizer step: (state, batch) -> (state, metrics)."""
+        """One optimizer step: (state, batch) -> (state, metrics).  With
+        the storage tier the demoted cold rows are staged in from the
+        segment store before the jitted step and the updated rows staged
+        back out (verified, crash-consistent) after it."""
         if "train_step" not in self._fns:
             donate = (0,) if self._donate else ()
             self._fns["train_step"] = jax.jit(self.step_fn,
                                               donate_argnums=donate)
-        return self._fns["train_step"](state, batch)
+        tier = self.tier
+        if tier is not None:
+            state = tier.stage_in(state)
+        state, metrics = self._fns["train_step"](state, batch)
+        if tier is not None:
+            state = tier.stage_out(state)
+        return state, metrics
 
     # -- gradients (no update) ---------------------------------------------
     @property
@@ -210,7 +266,8 @@ class Engine:
         if "grads" not in self._fns:
             self._fns["grads"] = jax.jit(self.grads_fn)
         params = getattr(state_or_params, "params", state_or_params)
-        return self._fns["grads"](self._relay_params(params), batch)
+        return self._fns["grads"](
+            self._relay_params(self._materialize(params)), batch)
 
     # -- inference ----------------------------------------------------------
     @property
@@ -225,7 +282,8 @@ class Engine:
         if "prefill" not in self._fns:
             self._fns["prefill"] = jax.jit(self.prefill_fn)
         params = getattr(state_or_params, "params", state_or_params)
-        return self._fns["prefill"](self._relay_params(params), batch)
+        return self._fns["prefill"](
+            self._relay_params(self._materialize(params)), batch)
 
     @property
     def decode_step_fn(self):
@@ -240,7 +298,8 @@ class Engine:
         """Prefill the decode caches from a prompt.
         Returns (caches, last_logits)."""
         params = getattr(state_or_params, "params", state_or_params)
-        return _decode.prefill(self.model, self._relay_params(params),
+        return _decode.prefill(self.model,
+                               self._relay_params(self._materialize(params)),
                                tokens, live_seq,
                                exec_cfg=self.exec_cfg, frames=frames)
 
@@ -248,8 +307,9 @@ class Engine:
         if "decode_step" not in self._fns:
             self._fns["decode_step"] = jax.jit(self.decode_step_fn)
         params = getattr(state_or_params, "params", state_or_params)
-        return self._fns["decode_step"](self._relay_params(params), caches,
-                                        token, cur_pos)
+        return self._fns["decode_step"](
+            self._relay_params(self._materialize(params)), caches,
+            token, cur_pos)
 
     # -- continuous-batching serve ------------------------------------------
     def serve_session(self, state_or_params, serve_cfg=None, **kw):
@@ -263,7 +323,8 @@ class Engine:
             done = srv.run()
         """
         from repro.serve.engine import ServeConfig, ServeEngine
-        params = getattr(state_or_params, "params", state_or_params)
+        params = self._materialize(
+            getattr(state_or_params, "params", state_or_params))
         if serve_cfg is None:
             serve_cfg = ServeConfig(**kw)
         return ServeEngine(self, params, serve_cfg)
@@ -293,6 +354,8 @@ class Engine:
         kw.setdefault("prefetch_depth", self.exec_cfg.prefetch_depth)
         kw.setdefault("pack_params", self.exec_cfg.pack_params)
         kw.setdefault("layers_per_relay", self.exec_cfg.layers_per_relay)
+        kw.setdefault("tiers", self.exec_cfg.tiers)
+        kw.setdefault("host_budget", self.exec_cfg.host_budget_bytes)
         return estimate(self.model, batch=batch, seq=seq,
                         mode=self.memory_mode, **kw)
 

@@ -56,8 +56,12 @@ def create(name: str, model, exec_cfg=None, *,
     slots), or ``{"stash_every": 4}`` for the constant-memory stash
     (checkpoint every 4th layer boundary — ceil(N/4) stashed boundaries
     instead of N — and recompute the rest during the reverse relay by
-    re-streaming each segment forward).  Remaining keyword args are
-    forwarded
+    re-streaming each segment forward), or
+    ``{"tiers": 3, "host_budget_bytes": B}`` for the storage-tier EPS
+    (the cold stacked-state tail beyond B bytes lives in a verified
+    on-disk SegmentStore and is staged around every jitted call —
+    bit-identical, self-healing from checkpoints).  Remaining keyword
+    args are forwarded
     to the engine constructor (``optimizer=``, ``mesh=``, ``rules=``,
     ``placements=``, ``donate=``).
     """

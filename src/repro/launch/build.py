@@ -149,6 +149,12 @@ def make_exec_cfg(shape: InputShape, cfg: ModelConfig, mesh,
         # tensor-parallel meshes it trades sharded weight residency for
         # one-DMA-per-layer relays
         pack_params=False,
+        # two-tier placement by default; {"tiers": 3} / dryrun --tiers 3
+        # extends the chain below host DRAM (verified on-disk
+        # SegmentStore, staged around the jit boundary) — the COMPILED
+        # program is unchanged, so dry-run A/Bs only differ in metadata
+        # and the memory model's host/disk split
+        tiers=2,
         decode_window=decode_window(cfg, shape),
     )
     if overrides:

@@ -289,6 +289,15 @@ def main():
                          "reverse relay recomputes the rest by "
                          "re-streaming each K-segment forward — for A/B "
                          "host/device byte comparison")
+    ap.add_argument("--tiers", type=int, default=None, choices=[2, 3],
+                    help="override ExecutionConfig.tiers (build default "
+                         "2): 3 enables the storage-tier EPS — the cold "
+                         "stacked-state tail lives in the on-disk "
+                         "SegmentStore and is staged around each jitted "
+                         "call.  The compiled program is identical (the "
+                         "disk tier sits OUTSIDE jit); the A/B is over "
+                         "the recorded exec metadata + the memory "
+                         "model's host/disk byte split")
     args = ap.parse_args()
     cfg_patch = ({"grouped_decode_attn": True, "moe_ep_constraint": True}
                  if args.optimized else None)
@@ -301,6 +310,8 @@ def main():
         exec_overrides["pack_params"] = bool(args.pack)
     if args.stash_every is not None:
         exec_overrides["stash_every"] = args.stash_every
+    if args.tiers is not None:
+        exec_overrides["tiers"] = args.tiers
     exec_overrides = exec_overrides or None
     if args.optimized and args.tag == "baseline":
         args.tag = "optimized"
@@ -317,6 +328,8 @@ def main():
         args.tag += "-packed"
     if args.stash_every is not None and args.stash_every != 1:
         args.tag += f"-s{args.stash_every}"
+    if args.tiers is not None and args.tiers != 2:
+        args.tag += f"-t{args.tiers}"
 
     archs = list_archs() if args.arch == "all" else args.arch.split(",")
     archs = [a for a in archs if a != "bert-large"]

@@ -86,6 +86,20 @@ def main(argv=None):
                          "flat buffer per dtype (one DMA per layer per "
                          "direction) and run the eager optimizer fused "
                          "on the flat segments")
+    ap.add_argument("--tiers", type=int, default=2, choices=[2, 3],
+                    help="memory tier chain: 2 = HBM <- pinned host "
+                         "(historical), 3 = + verified on-disk "
+                         "SegmentStore — the cold stacked-state tail "
+                         "lives on NVMe and is staged around every step "
+                         "(bit-identical; self-healing from checkpoints)")
+    ap.add_argument("--host-budget", type=int, default=0,
+                    help="with --tiers 3: resident stacked-state byte "
+                         "budget — layer rows beyond it demote to disk "
+                         "coldest-first (0 = demote everything, the "
+                         "fully-streamed mode)")
+    ap.add_argument("--tier-dir", default="",
+                    help="with --tiers 3: segment-store root directory "
+                         "(default: a fresh temp dir)")
     ap.add_argument("--host-optimizer", action="store_true",
                     help="run the optimizer on the EPS host "
                          "(compute_on 'device_host')")
@@ -148,6 +162,9 @@ def main(argv=None):
         prefetch_depth=args.prefetch,
         layers_per_relay=args.group,
         pack_params=args.pack,
+        tiers=args.tiers,
+        host_budget_bytes=args.host_budget,
+        tier_dir=args.tier_dir,
         host_optimizer=args.host_optimizer,
         skip_nonfinite=args.skip_nonfinite,
         clip_mode="per_layer" if args.clip > 0 else "none",
@@ -264,7 +281,9 @@ def main(argv=None):
                       "final_step": int(state.step),
                       "resumed_from": resumed_from,
                       "preempted": preempted,
-                      "skipped_steps": skipped}))
+                      "skipped_steps": skipped,
+                      "tier_metrics": (eng.tier.metrics
+                                       if eng.tier is not None else None)}))
     return losses
 
 

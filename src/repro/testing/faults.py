@@ -16,14 +16,22 @@ suite (tests/test_faults.py) can reproduce a failure byte-for-byte:
   admission blocks and pending deadlines fire.
 * ``snapshot_checksums`` — a snapshot's per-array crc32 list; two
   training runs whose final snapshots share it are bit-identical.
+* ``inject_io_error`` / ``inject_io_latency`` / ``corrupt_segment`` —
+  the storage-tier chaos: seeded EIO/latency injectors installed into a
+  ``SegmentStore``'s read-path ``fault_hook`` (transient-retry and
+  retry-budget-exhaustion paths) and in-place segment bit rot (the
+  quarantine-and-rebuild path).
 """
 from __future__ import annotations
 
+import errno
 import os
 import re
 import signal
 import subprocess
 import sys
+import threading
+import time
 from typing import List, Optional, Tuple
 
 import numpy as np
@@ -81,6 +89,89 @@ def snapshot_checksums(directory: str, step: Optional[int] = None,
         ckpt_io.snapshot_path(directory, step, prefix))
     assert manifest is not None
     return list(manifest["crc32"])
+
+
+# ===========================================================================
+# Storage-tier (SegmentStore) fault injection
+# ===========================================================================
+class _IOFault:
+    """Install-state of one read-path injector (thread-safe: the store's
+    prefetch ring issues reads from a pool).  ``raised``/``delayed``
+    count the reads the injector actually touched."""
+
+    def __init__(self):
+        self.lock = threading.Lock()
+        self.raised = 0
+        self.delayed = 0
+        self.seen = 0
+
+
+def inject_io_error(store, *, fail_reads: int = 1,
+                    err: int = errno.EIO, match: str = "",
+                    persistent: bool = False) -> _IOFault:
+    """Make the store's next ``fail_reads`` physical segment reads (those
+    whose path contains ``match``) raise ``OSError(err)``.  EIO is in the
+    store's transient set, so ``fail_reads <= retries`` exercises the
+    backoff-retry-recover path and ``persistent=True`` (every matching
+    read fails forever) the budget-exhausted hard ``TierReadError``.
+    Chains with any previously installed hook; returns the counter."""
+    fault = _IOFault()
+    prev = store.fault_hook
+
+    def hook(path: str, offset: int, length: int) -> None:
+        if prev is not None:
+            prev(path, offset, length)
+        with fault.lock:
+            if match not in path:
+                return
+            fault.seen += 1
+            if persistent or fault.raised < fail_reads:
+                fault.raised += 1
+                raise OSError(err, f"injected {errno.errorcode.get(err)}")
+
+    store.fault_hook = hook
+    return fault
+
+
+def inject_io_latency(store, *, delay_s: float, jitter_s: float = 0.0,
+                      seed: int = 0, match: str = "") -> _IOFault:
+    """Add ``delay_s`` (+ seeded uniform jitter up to ``jitter_s``) of
+    sleep before every matching physical segment read — a congested or
+    throttled NVMe.  Reads still succeed; this widens the window in
+    which the prefetch ring, watchdog and retry paths interleave."""
+    fault = _IOFault()
+    rng = np.random.default_rng(seed)
+    prev = store.fault_hook
+
+    def hook(path: str, offset: int, length: int) -> None:
+        if prev is not None:
+            prev(path, offset, length)
+        if match not in path:
+            return
+        with fault.lock:
+            fault.delayed += 1
+            extra = float(rng.uniform(0.0, jitter_s)) if jitter_s else 0.0
+        time.sleep(delay_s + extra)
+
+    store.fault_hook = hook
+    return fault
+
+
+def corrupt_segment(store, key: str, seg: Optional[str] = None,
+                    seed: int = 0) -> str:
+    """Bit-flip one seeded byte of a stored segment file IN PLACE (disk
+    rot under the store's nose: the manifest stays intact, so the rot is
+    only observable through crc verification — at open by a fresh store,
+    or at the read that returns the rotten row).  ``seg`` defaults to
+    the first segment name in the key's manifest; returns the damaged
+    path."""
+    manifest = store._read_manifest(key)
+    assert manifest is not None, f"no manifest for segment key {key!r}"
+    if seg is None:
+        seg = sorted(manifest["segs"])[0]
+    path = store.seg_path(key, seg)
+    corrupt_file(path, mode="bitflip", seed=seed)
+    return path
 
 
 # ===========================================================================

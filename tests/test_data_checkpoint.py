@@ -93,3 +93,42 @@ def test_checkpoint_structure_mismatch_rejected(tmp_path):
     ckpt.save(path, {"a": jnp.ones(3)})
     with pytest.raises(AssertionError):
         ckpt.restore(path, {"a": jnp.ones(3), "b": jnp.ones(2)})
+
+
+def test_verify_memoizes_heavy_pass_until_files_change(tmp_path,
+                                                       monkeypatch):
+    """Repeated verify() of an unchanged snapshot runs the byte pass
+    ONCE (then costs two stat calls); touching arrays.npz — the file the
+    manifest does NOT protect against in-place rot — invalidates the
+    memo, as does rewriting the snapshot.  A cached good verdict never
+    shadows a fingerprint mismatch (that check is per-caller, uncached)."""
+    import os
+    path = str(tmp_path / "ck")
+    ckpt.save(path, {"a": jnp.arange(8, dtype=jnp.float32)}, step=1,
+              fingerprint="arch:L2:v1")
+
+    calls = {"n": 0}
+    real = ckpt._verify_bytes
+
+    def counting(p, manifest):
+        calls["n"] += 1
+        return real(p, manifest)
+
+    monkeypatch.setattr(ckpt, "_verify_bytes", counting)
+    assert ckpt.verify(path) and ckpt.verify(path) and ckpt.verify(path)
+    assert calls["n"] == 1
+
+    # cheap structural checks stay live on the cached verdict
+    assert not ckpt.verify(path, fingerprint="other:L9:v1")
+    assert calls["n"] == 1
+
+    # in-place damage to arrays.npz moves its mtime_ns -> fresh pass
+    arrays = os.path.join(path, ckpt.ARRAYS)
+    os.utime(arrays, ns=(0, os.stat(arrays).st_mtime_ns + 1))
+    assert ckpt.verify(path)
+    assert calls["n"] == 2
+
+    # a rewrite (new bytes, new manifest) re-verifies too
+    ckpt.save(path, {"a": jnp.zeros(8, jnp.float32)}, step=1)
+    assert ckpt.verify(path)
+    assert calls["n"] == 3
