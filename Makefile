@@ -1,7 +1,7 @@
 PY ?= python
 
 .PHONY: verify test chaos bench bench-relay bench-pack bench-group \
-	bench-stash bench-serve bench-tier quickstart
+	bench-stash bench-serve bench-tier bench-transport quickstart
 
 # tier-1 verification (quick: slow multi-device subprocess tests deselected)
 verify:
@@ -55,6 +55,13 @@ bench-tier:
 # root and fails when throughput stops scaling with concurrency
 bench-serve:
 	PYTHONPATH=src $(PY) benchmarks/fig_serve.py --tiny
+
+# relay transport A/B (xla device_put vs pallas double-buffered DMA
+# copy kernel, across prefetch depths) with achieved copy/compute
+# overlap; writes BENCH_transport.json at the repo root and fails on a
+# >10% geometric-mean pallas-vs-xla slowdown
+bench-transport:
+	PYTHONPATH=src $(PY) benchmarks/fig_transport.py --tiny
 
 quickstart:
 	PYTHONPATH=src $(PY) examples/quickstart.py

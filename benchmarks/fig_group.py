@@ -35,6 +35,7 @@ if __package__ in (None, ""):                       # `python benchmarks/...`
 
 import jax
 
+from benchmarks import gate
 from benchmarks.common import lm_batch, time_train_step
 from repro import engine as engines
 from repro.configs.base import get_config
@@ -94,10 +95,8 @@ def run(quick=False, *, arch="bert-large", steps=None, batch=None,
                for g, k, pk in itertools.product(GROUPS, prefetches, PACKS)]
 
     def rate(g, k, pk):
-        return next(r["steps_per_s"] for r in results
-                    if r["layers_per_relay"] == g
-                    and r["prefetch_depth"] == k
-                    and r["pack_params"] == pk)
+        return gate.rate_lookup(results, layers_per_relay=g,
+                                prefetch_depth=k, pack_params=pk)
 
     # grouping speedup at each (prefetch, pack) point: G vs G=1 — the
     # throughput side of the footprint-vs-throughput curve
@@ -112,6 +111,7 @@ def run(quick=False, *, arch="bert-large", steps=None, batch=None,
         "batch": B, "seq": S, "n_microbatches": UB, "timed_steps": iters,
         "results": results,
         "speedup_group_vs_single": speedup_group,
+        "speedup_group_geomean": gate.geomean(speedup_group.values()),
         "notes": (
             "Each row pairs measured steps/s with the analytic "
             "G*(1+prefetch) device footprint and ceil(N/G) relay-stop "

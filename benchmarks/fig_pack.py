@@ -38,6 +38,7 @@ if __package__ in (None, ""):                       # `python benchmarks/...`
 
 import jax
 
+from benchmarks import gate
 from benchmarks.common import lm_batch, time_train_step
 from repro import engine as engines
 from repro.configs.base import get_config
@@ -97,10 +98,8 @@ def run(quick=False, *, arch="bert-large", steps=None, batch=None,
                for pk, ws, pf in COMBOS]
 
     def rate(pk, ws, pf):
-        return next(r["steps_per_s"] for r in results
-                    if r["pack_params"] == pk
-                    and r["weight_stream"] == ws
-                    and r["prefetch_depth"] == pf)
+        return gate.rate_lookup(results, pack_params=pk, weight_stream=ws,
+                                prefetch_depth=pf)
 
     # packed vs unpacked at each (weight_stream, prefetch) point — the CI
     # regression gate reads these
@@ -138,17 +137,12 @@ def run(quick=False, *, arch="bert-large", steps=None, batch=None,
         print(f"{int(r['pack_params'])},{int(r['weight_stream'])},"
               f"{r['prefetch_depth']},{r['s_per_step']:.4f},"
               f"{r['steps_per_s']:.2f},{r['compile_s']}")
-    geomean = 1.0
-    for v in speedup_pack.values():
-        geomean *= v
-    geomean **= 1.0 / len(speedup_pack)
+    geomean = gate.geomean(speedup_pack.values())
     record["speedup_packed_geomean"] = geomean
     with open(out_path, "w") as f:
         json.dump(record, f, indent=1)
     for k, v in speedup_pack.items():
         print(f"# packed/unpacked steps/s ({k}): {v:.3f}")
-    gate = "ok" if geomean >= REGRESSION_FLOOR else "REGRESSION"
-    print(f"# packed/unpacked geomean: {geomean:.3f} [{gate}]")
     for k, v in speedup_prefetch.items():
         print(f"# prefetch-on/off steps/s ({k}): {v:.3f}")
     if not memories_supported():
@@ -156,13 +150,9 @@ def run(quick=False, *, arch="bert-large", steps=None, batch=None,
               "bounds schedule/layout overhead; the one-DMA-per-layer "
               "win needs TPU")
     print(f"# wrote {out_path}")
-    if geomean < REGRESSION_FLOOR:
-        # RuntimeError (not SystemExit) so benchmarks/run.py's
-        # collect-and-continue harness records the failure and keeps going
-        raise RuntimeError(
-            f"pack_params regressed beyond the 10% gate "
-            f"(geomean {geomean:.3f} < floor {REGRESSION_FLOOR}): "
-            f"{ {k: round(v, 3) for k, v in speedup_pack.items()} }")
+    gate.floor_gate(speedup_pack, REGRESSION_FLOOR,
+                    what="packed/unpacked",
+                    failure="pack_params regressed beyond the 10% gate")
     return record
 
 

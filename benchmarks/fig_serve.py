@@ -37,6 +37,7 @@ import time
 import jax
 import numpy as np
 
+from benchmarks import gate
 from repro import engine as engines
 from repro.configs.base import get_config
 from repro.core.eps import memories_supported
@@ -151,17 +152,12 @@ def run(quick=False, *, arch="granite-3-8b", conc=None, requests=None,
     print(f"# wrote {out_path}")
 
     # regression gate: concurrency must BUY throughput
-    for prev, cur in zip(results, results[1:]):
-        if cur["tok_per_s"] < 0.9 * prev["tok_per_s"]:
-            raise SystemExit(
-                f"REGRESSION: tok/s fell from {prev['tok_per_s']:.1f} "
-                f"(conc={prev['concurrency']}) to {cur['tok_per_s']:.1f} "
-                f"(conc={cur['concurrency']}) — continuous batching is "
-                f"not scaling")
-    if scaling < 1.1:
-        raise SystemExit(
-            f"REGRESSION: top concurrency only {scaling:.2f}x the "
-            f"single-slot rate (>= 1.1x required)")
+    gate.scaling_gate(
+        results, rate_key="tok_per_s", label_key="concurrency",
+        label_name="conc", reason="continuous batching is not scaling",
+        min_scaling=1.1,
+        scaling_failure="top concurrency only {scaling:.2f}x the "
+                        "single-slot rate")
     return record
 
 

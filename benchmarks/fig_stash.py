@@ -38,6 +38,7 @@ if __package__ in (None, ""):                       # `python benchmarks/...`
 
 import jax
 
+from benchmarks import gate
 from benchmarks.common import lm_batch, time_train_step
 from repro import engine as engines
 from repro.configs.base import get_config
@@ -98,10 +99,8 @@ def run(quick=False, *, arch="bert-large", steps=None, batch=None,
                for K, g, k in itertools.product(STASH, groups, prefetches)]
 
     def rate(K, g, k):
-        return next(r["steps_per_s"] for r in results
-                    if r["stash_every"] == K
-                    and r["layers_per_relay"] == g
-                    and r["prefetch_depth"] == k)
+        return gate.rate_lookup(results, stash_every=K,
+                                layers_per_relay=g, prefetch_depth=k)
 
     # recompute slowdown at each (group, prefetch) point: K vs K=1 — the
     # throughput cost of shrinking the stash to ceil(N/K) boundaries
@@ -116,6 +115,7 @@ def run(quick=False, *, arch="bert-large", steps=None, batch=None,
         "batch": B, "seq": S, "n_microbatches": UB, "timed_steps": iters,
         "results": results,
         "slowdown_stash_vs_every_layer": slowdown_stash,
+        "slowdown_stash_geomean": gate.geomean(slowdown_stash.values()),
         "notes": (
             "Each row pairs measured steps/s with the analytic "
             "ceil(N/K)*mb*A stash footprint and the recompute price "

@@ -1,0 +1,86 @@
+"""Shared regression-gate helpers for the fig_* benchmarks.
+
+Every fig that backs a CI gate reduces a dict of paired throughput
+ratios to a geometric mean (per-combo ratios carry ~5pp of paired
+measurement noise on shared runners; a REAL regression moves every
+combo at once) and then fails the run one of two ways:
+
+* ``floor_gate`` — a speedup geomean must stay ABOVE a floor; raises
+  ``RuntimeError`` so ``benchmarks/run.py``'s collect-and-continue
+  harness records the failure and keeps going (fig_pack idiom).
+* ``ceiling_gate`` — a slowdown geomean must stay BELOW a ceiling;
+  raises ``SystemExit`` (fig_tier idiom).
+* ``scaling_gate`` — a rate must grow along a sweep axis: no >10%
+  step-to-step drop and a minimum top-vs-first ratio (fig_serve idiom).
+
+``geomean`` is the plain left-fold product (bit-identical to the
+``np.prod`` the figs used before the factor-out), and ``rate_lookup``
+replaces the per-fig ``next(...)`` result filters.
+"""
+from __future__ import annotations
+
+
+def geomean(values) -> float:
+    """Left-fold geometric mean of an iterable of ratios."""
+    vals = [float(v) for v in values]
+    assert vals, "geomean of nothing"
+    g = 1.0
+    for v in vals:
+        g *= v
+    return g ** (1.0 / len(vals))
+
+
+def rate_lookup(results, key="steps_per_s", **match):
+    """First ``result[key]`` whose row matches every ``field=value``."""
+    return next(r[key] for r in results
+                if all(r[f] == v for f, v in match.items()))
+
+
+def floor_gate(ratios: dict, floor: float, *, what: str,
+               failure: str) -> float:
+    """Speedup-geomean floor: print the verdict line, raise
+    ``RuntimeError`` (collect-and-continue in benchmarks/run.py) when
+    the geomean drops below ``floor``.  Returns the geomean."""
+    g = geomean(ratios.values())
+    status = "ok" if g >= floor else "REGRESSION"
+    print(f"# {what} geomean: {g:.3f} [{status}]")
+    if g < floor:
+        raise RuntimeError(
+            f"{failure} (geomean {g:.3f} < floor {floor}): "
+            f"{ {k: round(v, 3) for k, v in ratios.items()} }")
+    return g
+
+
+def ceiling_gate(ratios: dict, ceiling: float, *, what: str,
+                 failure: str) -> float:
+    """Slowdown-geomean ceiling: print the verdict line, raise
+    ``SystemExit`` when the geomean exceeds ``ceiling``.  Returns the
+    geomean."""
+    g = geomean(ratios.values())
+    print(f"# geomean {what}: {g:.3f} (gate {ceiling})")
+    if g > ceiling:
+        raise SystemExit(f"{failure} {g:.3f} exceeds the {ceiling} gate")
+    return g
+
+
+def scaling_gate(points, *, rate_key: str, label_key: str,
+                 label_name: str, reason: str, tol: float = 0.9,
+                 min_scaling: float = 1.1,
+                 scaling_failure: str = "") -> float:
+    """Monotone-scaling gate along a sweep: every step may drop at most
+    ``1 - tol`` vs its predecessor, and the last point must be at least
+    ``min_scaling``x the first.  Raises ``SystemExit``; returns the
+    top-vs-first scaling ratio."""
+    for prev, cur in zip(points, points[1:]):
+        if cur[rate_key] < tol * prev[rate_key]:
+            raise SystemExit(
+                f"REGRESSION: tok/s fell from {prev[rate_key]:.1f} "
+                f"({label_name}={prev[label_key]}) to "
+                f"{cur[rate_key]:.1f} ({label_name}={cur[label_key]}) "
+                f"— {reason}")
+    scaling = points[-1][rate_key] / points[0][rate_key]
+    if scaling < min_scaling:
+        raise SystemExit(
+            f"REGRESSION: {scaling_failure.format(scaling=scaling)} "
+            f"(>= {min_scaling}x required)")
+    return scaling

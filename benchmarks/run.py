@@ -18,8 +18,9 @@ def main() -> None:
 
     from benchmarks import (cost_model, fig5_time_vs_batch, fig6_breakdown,
                             fig_group, fig_overlap, fig_pack, fig_stash,
-                            fig_tier, roofline, table2_memory,
-                            table3_convergence, table45_memory_batch)
+                            fig_tier, fig_transport, roofline,
+                            table2_memory, table3_convergence,
+                            table45_memory_batch)
     benches = [
         ("cost_model_eq5_7", cost_model.run),
         ("table2_memory_vs_depth", table2_memory.run),
@@ -32,6 +33,7 @@ def main() -> None:
         ("fig_group_relay", fig_group.run),
         ("fig_stash_recompute", fig_stash.run),
         ("fig_tier_storage", fig_tier.run),
+        ("fig_transport_relay", fig_transport.run),
         ("roofline_from_dryrun", roofline.run),
     ]
     failures = []

@@ -47,6 +47,7 @@ def make_serve_step(model, exec_cfg: ExecutionConfig,
     PF = exec_cfg.prefetch_depth
     PK = exec_cfg.pack_params
     G = exec_cfg.layers_per_relay
+    TR = exec_cfg.transport
 
     dgroups = model.decode_groups()
     # map decode-group index -> model group index (for placements)
@@ -70,7 +71,7 @@ def make_serve_step(model, exec_cfg: ExecutionConfig,
             x, nc = relay_scan(
                 body, x, (Stream(wp, params["groups"][gidx[di]]),),
                 xs=caches[di], group=G, prefetch=PF,
-                unroll=exec_cfg.unroll_layers)
+                unroll=exec_cfg.unroll_layers, transport=TR)
             new_caches.append(nc)
         logits = model.decode_logits(static, x)
         return logits, tuple(new_caches)

@@ -100,6 +100,23 @@ def _concat_segs(trees):
     return jax.tree.map(lambda *ls: jnp.concatenate(ls, axis=0), *trees)
 
 
+def _make_ship(transport: str) -> Callable:
+    """The write-back half of the relay transport: ``ship(place, tree)``
+    re-hosts a relay stop's products (boundary stash, shipped grads,
+    updated weights / optimizer slots).  Under ``transport="pallas"`` the
+    produced buffer first moves through the same double-buffered DMA
+    pipeline the stream-in uses (``kernels.relay_copy.writeback_slot`` —
+    an identity copy, so the math is untouched), pacing the outbound
+    transfer with semaphores exactly like the inbound one."""
+    if transport == "pallas":
+        from repro.kernels import relay_copy
+
+        def ship(place, tree):
+            return place(relay_copy.writeback_slot(tree))
+        return ship
+    return lambda place, tree: place(tree)
+
+
 def _make_packed_update(optimizer: Optimizer, exec_cfg: ExecutionConfig,
                         run_opt) -> Callable:
     """Per-layer optimizer step on ``Packed`` flat buffers.
@@ -151,7 +168,9 @@ def make_train_step(model, optimizer: Optimizer, exec_cfg: ExecutionConfig,
     PK = exec_cfg.pack_params
     G = exec_cfg.layers_per_relay
     SE = exec_cfg.stash_every
+    TR = exec_cfg.transport
     UNROLL = exec_cfg.unroll_layers
+    ship = _make_ship(TR)
 
     def run_opt(grads, opt_l, w, step_i):
         """Apply the optimizer — on the EPS host when host_optimizer (the
@@ -226,13 +245,13 @@ def make_train_step(model, optimizer: Optimizer, exec_cfg: ExecutionConfig,
                     return aux_c + aux.astype(jnp.float32), y
                 xs = x_c if _mem is None else (x_c, _mem)
                 aux_g, y_ub = jax.lax.scan(ub_body, jnp.float32(0.0), xs)
-                return y_ub, ((placements.stash.host(x_c), aux_g)
+                return y_ub, ((ship(placements.stash.host, x_c), aux_g)
                               if _stash else aux_g)
 
             if SE == 1:
                 x_ub, (stash_g, aux_per_layer) = relay_scan(
                     fwd_body, x_ub, (Stream(wp, params["groups"][gi]),),
-                    group=G, prefetch=PF, unroll=UNROLL)
+                    group=G, prefetch=PF, unroll=UNROLL, transport=TR)
                 stashes.append(stash_g)
                 aux_total = aux_total + aux_per_layer.sum() / UB
             else:
@@ -245,12 +264,12 @@ def make_train_step(model, optimizer: Optimizer, exec_cfg: ExecutionConfig,
 
                 stash_segs = []
                 for s0, s1 in segment_bounds(group.n_layers, SE):
-                    stash_segs.append(placements.stash.host(x_ub))
+                    stash_segs.append(ship(placements.stash.host, x_ub))
                     x_ub, aux_per_layer = relay_scan(
                         fwd_nostash, x_ub,
                         (Stream(wp, _seg_slice(params["groups"][gi],
                                                s0, s1)),),
-                        group=G, prefetch=PF, unroll=UNROLL)
+                        group=G, prefetch=PF, unroll=UNROLL, transport=TR)
                     aux_total = aux_total + aux_per_layer.sum() / UB
                 stashes.append(stash_segs)
 
@@ -356,15 +375,16 @@ def make_train_step(model, optimizer: Optimizer, exec_cfg: ExecutionConfig,
                         new_opt = jax.tree.map(
                             lambda n, o: jnp.where(finite_l, n, o),
                             new_opt, opt_l)
-                    out = (_wp.host(new_w), _op.host(new_opt))
+                    out = (ship(_wp.host, new_w), ship(_op.host, new_opt))
                 else:
                     # Alg 3: gradients are shipped to the EPS (host) and the
                     # update happens in a trailing layer loop — packed, the
                     # shipment is one flat f32 segment aligned to the
                     # weight layout instead of N leaf copies.
-                    out = _wp.host(packing.pack(dw, spec=w_dev.spec,
-                                                stacked=False)
-                                   if PK else dw)
+                    out = ship(_wp.host,
+                               packing.pack(dw, spec=w_dev.spec,
+                                            stacked=False)
+                               if PK else dw)
                 nf_c = nf_c + jnp.where(finite_l, 0, 1)
                 return (dxin_ub, dmem_c, gn_c, nf_c), out
 
@@ -379,7 +399,7 @@ def make_train_step(model, optimizer: Optimizer, exec_cfg: ExecutionConfig,
                     streams.append(Stream(op, opt_state["groups"][gi]))
                 core0, outs = relay_scan(
                     bwd_body, core0, streams, xs=stashes[gi], reverse=True,
-                    group=G, prefetch=PF, unroll=UNROLL)
+                    group=G, prefetch=PF, unroll=UNROLL, transport=TR)
             else:
                 # Constant-memory stash: walk the K-segments in reverse.
                 # Each segment first re-streams its weights FORWARD
@@ -410,7 +430,7 @@ def make_train_step(model, optimizer: Optimizer, exec_cfg: ExecutionConfig,
                         return None, y
                     xs_l = x_c if _mem is None else (x_c, _mem)
                     _, y_ub = jax.lax.scan(ub_body, None, xs_l)
-                    return y_ub, placements.stash.host(y_ub)
+                    return y_ub, ship(placements.stash.host, y_ub)
 
                 bounds = segment_bounds(group.n_layers, SE)
                 outs_segs = [None] * len(bounds)
@@ -422,7 +442,8 @@ def make_train_step(model, optimizer: Optimizer, exec_cfg: ExecutionConfig,
                             rec_body, placements.stash.dev(entry),
                             (Stream(wp, _seg_slice(params["groups"][gi],
                                                    s0, s1 - 1)),),
-                            group=G, prefetch=PF, unroll=UNROLL)
+                            group=G, prefetch=PF, unroll=UNROLL,
+                            transport=TR)
                         # entry + outputs of layers s0..s1-2
                         # == boundaries of layers s0..s1-1
                         seg_stash = jax.tree.map(
@@ -438,7 +459,8 @@ def make_train_step(model, optimizer: Optimizer, exec_cfg: ExecutionConfig,
                             opt_state["groups"][gi], s0, s1)))
                     core0, outs_segs[si] = relay_scan(
                         bwd_body, core0, seg_streams, xs=seg_stash,
-                        reverse=True, group=G, prefetch=PF, unroll=UNROLL)
+                        reverse=True, group=G, prefetch=PF, unroll=UNROLL,
+                        transport=TR)
                 # per-segment write-backs concatenate to the (N, ...)
                 # group tree; re-state the EPS placement on the result so
                 # it lands host-resident like the K=1 scan-stacked ys
@@ -536,11 +558,11 @@ def make_train_step(model, optimizer: Optimizer, exec_cfg: ExecutionConfig,
                     w, g, o = slots
                     nw, no = (packed_update if PK else run_opt)(
                         g, o, w, opt_step)
-                    return None, (_wp.host(nw), _op.host(no))
+                    return None, (ship(_wp.host, nw), ship(_op.host, no))
 
                 _, (nw_g, no_g) = relay_scan(
                     upd_body, None, streams,
-                    group=G, prefetch=PF, unroll=UNROLL)
+                    group=G, prefetch=PF, unroll=UNROLL, transport=TR)
                 new_group_params[gi] = nw_g
                 new_group_opt[gi] = no_g
 
@@ -604,6 +626,7 @@ def make_prefill_fn(model, exec_cfg: ExecutionConfig,
     PF = exec_cfg.prefetch_depth
     PK = exec_cfg.pack_params
     G = exec_cfg.layers_per_relay
+    TR = exec_cfg.transport
 
     def prefill(params, batch):
         static = {"embed": params["embed"], "head": params["head"]}
@@ -647,7 +670,8 @@ def make_prefill_fn(model, exec_cfg: ExecutionConfig,
 
             x_ub, _ = relay_scan(
                 fwd_body, x_ub, (Stream(wp, params["groups"][gi]),),
-                group=G, prefetch=PF, unroll=exec_cfg.unroll_layers)
+                group=G, prefetch=PF, unroll=exec_cfg.unroll_layers,
+                transport=TR)
 
         # last-position logits per microbatch
         def head_one(x_i):
@@ -679,6 +703,7 @@ def make_grads_fn(model, exec_cfg: ExecutionConfig,
         pack_params=exec_cfg.pack_params,
         layers_per_relay=exec_cfg.layers_per_relay,
         unroll_layers=exec_cfg.unroll_layers,
+        transport=exec_cfg.transport,
         eager_optimizer=False, clip_mode="none")
     return _make_loss_and_grads(model, cfg_noeager, placements)
 

@@ -100,10 +100,20 @@ class MemoryReport:
     kv_page_bytes: int = 0
     slot_state_bytes: int = 0
     relay_stops_per_tick: int = 0
+    # --- pallas relay transport (ExecutionConfig.transport) --------------
+    # With transport="pallas" each relay copy runs through the
+    # kernels/relay_copy double-buffered DMA pipeline: at most TWO chunks
+    # of the slot are in flight at once, so the kernel's working set
+    # beyond the (already-counted) destination slot is the 2-chunk DMA
+    # window — 2 * slot_bytes / chunks_per_slot (one chunk per stacked
+    # row for G >= 2, two half-row chunks for single-layer slots).  Zero
+    # under the historical "xla" transport.
+    transport_buffer: int = 0
 
     def finalize(self):
         self.total_device = (self.params_device + self.activations
                              + self.kv_page_bytes + self.slot_state_bytes
+                             + self.transport_buffer
                              + (0 if self.stash_on_host
                                 else self.stash + self.recompute_buffer))
         self.total_host = (self.params_host + self.opt_state
@@ -138,7 +148,8 @@ def estimate(model: LayeredModel, *, batch: int, seq: int,
              stash_every: int = 1,
              tiers: int = 2,
              host_budget: int = 0,
-             model_shards: int = 1) -> MemoryReport:
+             model_shards: int = 1,
+             transport: str = "xla") -> MemoryReport:
     """Modes:
       baseline      eq. (1): everything device-resident
       baseline_remat eq. (1) with the N*L*mb*X term reduced to boundaries
@@ -192,6 +203,13 @@ def estimate(model: LayeredModel, *, batch: int, seq: int,
     ``params_disk``/``opt_disk``; ``disk_reads`` counts the per-step
     stage-in segment reads and ``disk_read_ahead_cap`` the
     watchdog-shrunk effective prefetch depth (``tierstore.ring_depth``).
+
+    ``transport`` (l2l modes only) accounts the pallas copy kernel's
+    double-buffer window: ``"pallas"`` adds ``transport_buffer`` = two
+    in-flight DMA chunks of the relay slot (the semaphore-paced pipeline
+    of ``kernels/relay_copy`` — one chunk per stacked slot row when the
+    slot is grouped, two half-row chunks for a single-layer slot); the
+    historical ``"xla"`` transport adds nothing.
 
     ``model_shards`` divides the per-device/per-host BYTE terms (relay
     slot, host-resident stack, opt state, disk tier) for a program model-
@@ -295,6 +313,13 @@ def estimate(model: LayeredModel, *, batch: int, seq: int,
             cap = ring_depth(prefetch_depth, chunk,
                              max(0, host_budget - resident),
                              bounded=host_budget > 0)
+    # pallas transport: the copy kernel keeps two DMA chunks of a slot in
+    # flight (one chunk per stacked row of a grouped slot, two half-row
+    # chunks for a single-layer slot)
+    slot_rows = min(G, K) if K > 1 else G
+    chunks = slot_rows if slot_rows >= 2 else 2
+    trans_buf = (-(-2 * shard(slot) // chunks)
+                 if transport == "pallas" else 0)
     return MemoryReport(
         params_device=transit * shard(slot),
         params_host=params_host,
@@ -313,7 +338,8 @@ def estimate(model: LayeredModel, *, batch: int, seq: int,
         opt_disk=opt_disk,
         demoted_layers=demoted,
         disk_reads=reads,
-        disk_read_ahead_cap=cap).finalize()
+        disk_read_ahead_cap=cap,
+        transport_buffer=trans_buf).finalize()
 
 
 def estimate_serve(model: LayeredModel, *, max_batch: int, page_size: int,
@@ -321,7 +347,8 @@ def estimate_serve(model: LayeredModel, *, max_batch: int, page_size: int,
                    weight_stream: bool = True, prefetch_depth: int = 0,
                    pack_params: bool = False, layers_per_relay: int = 1,
                    act_dtype_bytes: int = 2, cache_dtype_bytes: int = 2,
-                   param_dtype_bytes: int = 4) -> MemoryReport:
+                   param_dtype_bytes: int = 4,
+                   transport: str = "xla") -> MemoryReport:
     """Serve-mode byte split for the continuous-batching engine
     (``repro.serve``): no optimizer / stash terms; instead the device
     holds the paged KV pool, the per-slot recurrent state and — with
@@ -350,7 +377,9 @@ def estimate_serve(model: LayeredModel, *, max_batch: int, page_size: int,
         params_device = (1 + prefetch_depth) * slot
         params_host = L_total
     else:
-        params_device, params_host = L_total, 0
+        params_device, params_host, slot = L_total, 0, 0
+    trans_buf = (-(-2 * slot // (G if G >= 2 else 2))
+                 if transport == "pallas" and weight_stream else 0)
     n_leaves = max(len(jax.tree.leaves(g.spec, is_leaf=is_spec))
                    for g in model.groups)
     stops = sum(n_stops(g.n_layers, G) for g in model.decode_groups())
@@ -364,7 +393,8 @@ def estimate_serve(model: LayeredModel, *, max_batch: int, page_size: int,
         relay_stops=stops,
         kv_page_bytes=kv,
         slot_state_bytes=slot_state,
-        relay_stops_per_tick=stops if weight_stream else 0).finalize()
+        relay_stops_per_tick=stops if weight_stream else 0,
+        transport_buffer=trans_buf).finalize()
 
 
 # ---------------------------------------------------------------------------

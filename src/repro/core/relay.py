@@ -114,7 +114,7 @@ def segment_bounds(n_layers: int, every: int) -> tuple:
 
 def relay_scan(body: Callable, init, streams: Sequence[Stream], *,
                xs=None, reverse: bool = False, group: int = 1,
-               prefetch: int = 0, unroll=False):
+               prefetch: int = 0, unroll=False, transport: str = "xla"):
     """Run ``body`` once per layer under the unified relay schedule.
 
     ``body(carry, slots, x) -> (carry, ys)`` is PER LAYER:
@@ -127,6 +127,13 @@ def relay_scan(body: Callable, init, streams: Sequence[Stream], *,
 
     Returns ``(carry, ys)`` like ``lax.scan``; ``reverse=True`` walks
     layers N-1..0 but still stacks ``ys`` in forward order.
+
+    ``transport`` picks the slot mover: ``"xla"`` (historical) slices +
+    ``device_put``s and lets XLA schedule the copies; ``"pallas"`` moves
+    every slot through ``kernels.relay_copy``'s double-buffered
+    ``make_async_copy`` pipeline, so the ring's overlap is enforced by
+    DMA semaphores inside the emitted kernel.  Pure transport — results
+    are bit-identical (tests/test_transport.py).
     """
     streams = tuple(streams)
     assert streams, "relay_scan needs at least one stream"
@@ -139,6 +146,16 @@ def relay_scan(body: Callable, init, streams: Sequence[Stream], *,
     def fetch(start, size: int):
         """ONE host->HBM copy per stream (per leaf / dtype segment) for a
         ``size``-layer slot — the only DMA issue site in the repo."""
+        if transport == "pallas":
+            # the copy IS the transfer: rows [start, start+size) of every
+            # leaf/segment move through the double-buffered DMA kernel
+            # (squeezed to the single-layer layout when G == 1, matching
+            # layer_slice below)
+            from repro.kernels import relay_copy
+            return tuple(
+                relay_copy.fetch_slot(s.stacked, start, size,
+                                      squeeze=(G == 1))
+                for s in streams)
         if G == 1:
             return tuple(s.placement.dev(layer_slice(s.stacked, start))
                          for s in streams)
@@ -172,7 +189,7 @@ def relay_scan(body: Callable, init, streams: Sequence[Stream], *,
     ys_main = None
     if S > 0:
         idxs = jnp.arange(S)
-        if K == 0 and G == 1:
+        if K == 0 and G == 1 and transport == "xla":
             # historical per-layer scan, reproduced exactly: streams and
             # xs ride the scan's native xs slicing; the fetch happens at
             # the top of the consuming iteration
@@ -185,6 +202,17 @@ def relay_scan(body: Callable, init, streams: Sequence[Stream], *,
             carry, ys_main = jax.lax.scan(
                 stop_body, init, (tuple(s.stacked for s in streams), xs),
                 reverse=reverse, unroll=unroll)
+        elif K == 0 and G == 1:
+            # pallas transport can't ride the scan's native xs slicing —
+            # the DMA kernel must issue the copy itself, so the stop
+            # index drives an explicit per-layer fetch (same schedule:
+            # fetch at the top of the consuming iteration)
+            def stop_body(carry, scan_x):
+                i, x = scan_x
+                return body(carry, fetch(i, 1), x)
+
+            carry, ys_main = jax.lax.scan(stop_body, init, (idxs, xs),
+                                          reverse=reverse, unroll=unroll)
         elif K == 0:
             def stop_body(carry, i):
                 return run_stop(carry, fetch(i * G, G), i * G, G)

@@ -94,6 +94,17 @@ class ExecutionConfig:
     # footprint becomes G * (1 + prefetch_depth) layer slots — the
     # paper's "executing layer(s)" footprint traded against relay stops.
     layers_per_relay: int = 1
+    # --- relay transport --------------------------------------------------
+    # HOW a relay stop's slot physically moves between the EPS and HBM:
+    # "xla" (historical) slices + ``device_put``s at scan boundaries and
+    # trusts XLA's latency-hiding scheduler to overlap the copies;
+    # "pallas" routes every stream-in AND write-back through the
+    # double-buffered ``kernels/relay_copy`` DMA pipeline
+    # (``pltpu.make_async_copy`` paced by two rotating semaphores), so
+    # prefetch overlap is guaranteed by the kernel instead of scheduler
+    # luck.  A pure transport change: bit-identical to "xla" across the
+    # whole (G, prefetch, pack, K) grid (tests/test_transport.py).
+    transport: str = "xla"
     # --- packed relay -----------------------------------------------------
     # Coalesce each layer's weight pytree (and, with eager_optimizer, its
     # optimizer-slot pytree) into contiguous per-dtype flat buffers
@@ -147,6 +158,9 @@ class ExecutionConfig:
             "prefetch_depth: k in-flight relay slots (0 = no pipelining)"
         assert self.layers_per_relay >= 1, \
             "layers_per_relay: G >= 1 layers moved per relay stop"
+        assert self.transport in ("xla", "pallas"), \
+            "transport: 'xla' (device_put at scan boundaries) or " \
+            "'pallas' (double-buffered DMA copy kernel)"
         assert self.stash_every >= 1, \
             "stash_every: K >= 1 layers per stashed boundary " \
             "(1 = stash every layer boundary)"

@@ -37,6 +37,16 @@ shrinks the ring's effective depth when the budget slack cannot hold the
 in-flight chunks (``metrics["prefetch_shrinks"]``) rather than blowing
 the budget it exists to protect.
 
+Read-side fast paths: segment spans are served zero-copy from an mmap
+of the segment file where the platform supports it (crc verification
+and ``np.frombuffer`` run directly over the mapped view; ``pread`` is
+the fallback — ``metrics["mmap_reads"]``/``metrics["pread_reads"]``
+count the split), and with a read-ahead ring (``prefetch_depth >= 1``)
+``stage_out`` kicks off the NEXT relay window's cold-segment fetches in
+the background so the disk round-trip overlaps everything between steps
+instead of serializing before the jit
+(``metrics["async_stage_hits"]``/``metrics["async_stage_misses"]``).
+
 Bit-identity: the store round-trips raw array bytes (no re-encode), and
 packing/unpacking are lossless, so a tier-chain run is byte-identical to
 the host-only relay for every (G, prefetch, pack, K) point —
@@ -53,6 +63,11 @@ import time
 import zlib
 from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Callable, Dict, List, Optional, Tuple
+
+try:
+    import mmap as _mmap
+except ImportError:                                  # pragma: no cover
+    _mmap = None
 
 import jax
 import jax.numpy as jnp
@@ -97,8 +112,10 @@ def _safe(name: str) -> str:
 
 def fresh_metrics() -> Dict[str, int]:
     return {"reads": 0, "read_bytes": 0, "writes": 0, "write_bytes": 0,
+            "mmap_reads": 0, "pread_reads": 0,
             "retries": 0, "rebuilt_segments": 0, "quarantined": 0,
-            "prefetch_shrinks": 0, "effective_depth": 0}
+            "prefetch_shrinks": 0, "effective_depth": 0,
+            "async_stage_hits": 0, "async_stage_misses": 0}
 
 
 # ===========================================================================
@@ -119,15 +136,22 @@ class SegmentStore:
     """
 
     def __init__(self, root: str, *, retries: int = 3,
-                 backoff_s: float = 0.01):
+                 backoff_s: float = 0.01,
+                 use_mmap: Optional[bool] = None):
         self.root = root
         self.retries = max(0, int(retries))
         self.backoff_s = float(backoff_s)
         self.rebuilder: Optional[Callable[[str], None]] = None
         # test seam: called as fault_hook(path, offset, length) before
         # every physical segment read (repro.testing.faults installs
-        # seeded EIO / latency injectors here)
+        # seeded EIO / latency injectors here); fires on the mmap path
+        # too, so the chaos injectors see every read regardless of path
         self.fault_hook: Optional[Callable[[str, int, int], None]] = None
+        # zero-copy reads: crc + frombuffer run directly over the mapped
+        # view (the page cache IS the buffer); None = mmap if available
+        self.use_mmap = (_mmap is not None) if use_mmap is None \
+            else bool(use_mmap)
+        self._mmaps: Dict[str, Any] = {}        # path -> live mmap
         self.metrics = fresh_metrics()
         self._manifests: Dict[str, dict] = {}   # verified-at-open cache
         os.makedirs(root, exist_ok=True)
@@ -177,6 +201,7 @@ class SegmentStore:
                 f.flush()
                 os.fsync(f.fileno())
             _fsync_dir(tmp)
+            self._drop_mmaps(key)              # maps hold the OLD inode
             if os.path.exists(final):
                 shutil.rmtree(final)
             os.rename(tmp, final)              # the commit point
@@ -237,6 +262,7 @@ class SegmentStore:
         """Quarantine the damaged segment directory and rebuild it from
         the authoritative source (newest good checkpoint)."""
         self._manifests.pop(key, None)
+        self._drop_mmaps(key)
         kdir = self.key_dir(key)
         if os.path.isdir(kdir):
             qroot = os.path.join(self.root, QUARANTINE)
@@ -266,13 +292,47 @@ class SegmentStore:
                           f"{path}:{offset}")
         return data
 
-    def _pread_retry(self, path: str, offset: int, length: int) -> bytes:
+    def _ensure_mmap(self, path: str):
+        m = self._mmaps.get(path)
+        if m is None:
+            with open(path, "rb") as f:
+                m = _mmap.mmap(f.fileno(), 0, access=_mmap.ACCESS_READ)
+            self._mmaps[path] = m
+        return m
+
+    def _mread(self, path: str, offset: int, length: int):
+        """Zero-copy span over the mmapped segment file: no userspace
+        buffer — the returned memoryview windows the page cache, and crc
+        verification + np.frombuffer run directly over it."""
+        if self.fault_hook is not None:
+            self.fault_hook(path, offset, length)
+        m = self._ensure_mmap(path)
+        if offset + length > len(m):
+            raise OSError(errno.EIO,
+                          f"short map: {len(m)}/{offset + length} at {path}")
+        return memoryview(m)[offset:offset + length]
+
+    def _drop_mmaps(self, key: str) -> None:
+        """Invalidate cached maps under a key's directory: put/_heal
+        rename the directory, so a cached map holds the OLD inode's
+        bytes.  Maps still pinned by exported row views are dropped
+        without closing (the view keeps the old map alive until the
+        consumer lets go; it never aliases the new file)."""
+        prefix = self.key_dir(key) + os.sep
+        for path in [p for p in self._mmaps if p.startswith(prefix)]:
+            m = self._mmaps.pop(path)
+            try:
+                m.close()
+            except BufferError:
+                pass
+
+    def _retry(self, reader, path: str, offset: int, length: int):
         """Bounded retry with exponential backoff on transient errors;
         non-transient errnos and an exhausted budget raise TierReadError."""
         delay = self.backoff_s
         for attempt in range(self.retries + 1):
             try:
-                return self._pread(path, offset, length)
+                return reader(path, offset, length)
             except OSError as e:
                 if e.errno not in _TRANSIENT or attempt == self.retries:
                     raise TierReadError(
@@ -283,12 +343,38 @@ class SegmentStore:
                 delay *= 2
         raise AssertionError("unreachable")
 
-    def read_rows(self, key: str, lo: int, hi: int,
+    def _pread_retry(self, path: str, offset: int, length: int) -> bytes:
+        return self._retry(self._pread, path, offset, length)
+
+    def _read_span(self, path: str, offset: int, length: int):
+        """One verified-read span: the mmap view where available (with
+        the same transient-retry semantics — the fault seam fires on
+        both paths), pread bytes otherwise."""
+        if self.use_mmap:
+            try:
+                self._ensure_mmap(path)
+            except (OSError, ValueError):
+                pass   # mmap unavailable for this file: pread the span
+            else:
+                out = self._retry(self._mread, path, offset, length)
+                self.metrics["mmap_reads"] += 1
+                return out
+        data = self._pread_retry(path, offset, length)
+        self.metrics["pread_reads"] += 1
+        return data
+
+    def read_rows(self, key: str, lo: int, hi: int, *, copy: bool = True,
                   _healed: bool = False) -> Dict[str, np.ndarray]:
         """Rows [lo, hi) of every segment of ``key`` — one contiguous
-        pread per segment, each row's crc32 verified against the
-        manifest before the bytes are trusted.  A checksum failure
-        quarantines + rebuilds the segment and retries the read once."""
+        span per segment (a zero-copy mmap view where available, one
+        pread otherwise), each row's crc32 verified against the manifest
+        before the bytes are trusted.  A checksum failure quarantines +
+        rebuilds the segment and retries the read once.
+
+        ``copy=False`` returns read-only views over the mapped file on
+        the mmap path (no userspace copy at all) — for streaming
+        consumers that repack the rows immediately; the views alias the
+        file, so they must not be held across a later ``put``/rot."""
         manifest = self.open(key)
         out: Dict[str, np.ndarray] = {}
         for name, meta in manifest["segs"].items():
@@ -296,8 +382,8 @@ class SegmentStore:
             assert 0 <= lo <= hi <= n, f"rows [{lo}, {hi}) out of (0, {n})"
             dt = _np_dtype(meta["dtype"])
             row_bytes = w * dt.itemsize
-            data = self._pread_retry(self.seg_path(key, name),
-                                     lo * row_bytes, (hi - lo) * row_bytes)
+            data = self._read_span(self.seg_path(key, name),
+                                   lo * row_bytes, (hi - lo) * row_bytes)
             self.metrics["reads"] += 1
             self.metrics["read_bytes"] += len(data)
             for r in range(hi - lo):
@@ -309,8 +395,12 @@ class SegmentStore:
                             f"corrupt after rebuild")
                     self._heal(key, f"segment {key}/{name} row {lo + r} "
                                f"failed its crc32 at read time")
-                    return self.read_rows(key, lo, hi, _healed=True)
-            out[name] = np.frombuffer(data, dtype=dt).reshape(hi - lo, w)
+                    return self.read_rows(key, lo, hi, copy=copy,
+                                          _healed=True)
+            arr = np.frombuffer(data, dtype=dt).reshape(hi - lo, w)
+            if copy and isinstance(data, memoryview):
+                arr = arr.copy()       # detach from the mapped file
+            out[name] = arr
         return out
 
 
@@ -431,6 +521,10 @@ class TierChain:
         self._mat_cache: Optional[Tuple[int, Any]] = None
         self._demoted_layers = 0
         self._resident_bytes = 0
+        # async read-ahead: adopt/stage_out schedule the NEXT window's
+        # cold-segment fetches here; stage_in consumes them
+        self._async_pool: Optional[ThreadPoolExecutor] = None
+        self._prefetched: Dict[Tuple[str, int], Any] = {}
 
     # -- metrics ------------------------------------------------------------
     @property
@@ -525,6 +619,7 @@ class TierChain:
         self._demoted_layers = sum(n - h for n, h in zip(n_layers, hot))
         self._resident_bytes = sum(b * h
                                    for b, h in zip(per_layer, hot))
+        self._schedule_async(new_w + new_o)
         return state.replace(
             params={**params, "groups": tuple(new_w)},
             opt_state={**opt, "groups": tuple(new_o)})
@@ -551,18 +646,63 @@ class TierChain:
         if self.depth >= 1 and eff < self.depth:
             self.store.metrics["prefetch_shrinks"] += 1
         self.store.metrics["effective_depth"] = eff
+        # copy=False: the rows are concatenated (copied) right below, so
+        # the mmap views never outlive this call
         if self.depth == 0 or len(bounds) <= 1:
-            chunks = [self.store.read_rows(key, lo, hi) for lo, hi in bounds]
+            chunks = [self.store.read_rows(key, lo, hi, copy=False)
+                      for lo, hi in bounds]
         else:
             with ThreadPoolExecutor(max_workers=eff) as pool:
-                futs = [pool.submit(self.store.read_rows, key, lo, hi)
+                futs = [pool.submit(self.store.read_rows, key, lo, hi,
+                                    copy=False)
                         for lo, hi in bounds]
                 chunks = [f.result() for f in futs]
         return {name: np.concatenate([c[name] for c in chunks], axis=0)
                 for name in manifest["segs"]}
 
+    # -- async read-ahead: stage the next window before it is asked for ----
+    def _pool(self) -> ThreadPoolExecutor:
+        if self._async_pool is None:
+            # one background lane: _fetch_cold parallelizes its own
+            # chunk reads with the ring, so a second lane would only
+            # fight it for the budget slack the watchdog protects
+            self._async_pool = ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="tier-stage")
+        return self._async_pool
+
+    def _schedule_async(self, groups) -> None:
+        """Kick off the next relay window's cold-segment stage-in for
+        every freshly-demoted group, so the disk reads overlap whatever
+        runs between this stage_out and the next stage_in (the jitted
+        step's host-side tail included).  Ring-gated: depth 0 means the
+        caller asked for strictly synchronous staging."""
+        for fut in self._prefetched.values():
+            fut.cancel()
+        self._prefetched = {}
+        if self.depth < 1:
+            return
+        for d in groups:
+            if is_demoted(d) and d.hot_rows < d.n_total:
+                self._prefetched[
+                    (self._key(d.group_index, d.role), self._step)
+                ] = self._pool().submit(self._fetch_cold, d)
+
     def _materialize_group(self, d: Demoted):
-        segs = self._fetch_cold(d)
+        fut = self._prefetched.pop(
+            (self._key(d.group_index, d.role), self._step), None)
+        segs = None
+        if fut is not None:
+            try:
+                segs = fut.result()
+                self.store.metrics["async_stage_hits"] += 1
+            except TierError:
+                raise
+            except Exception:
+                segs = None            # stale future: fetch synchronously
+        elif self.depth >= 1:
+            self.store.metrics["async_stage_misses"] += 1
+        if segs is None:
+            segs = self._fetch_cold(d)
         cold = (self._cold_group(d.group_index, segs) if d.role == "w"
                 else self._cold_opt(d.group_index, segs))
         return cold if d.hot_rows == 0 else _concat_rows(d.hot, cold)

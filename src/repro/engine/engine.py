@@ -337,6 +337,7 @@ class Engine:
         kw.setdefault("prefetch_depth", self.exec_cfg.prefetch_depth)
         kw.setdefault("pack_params", self.exec_cfg.pack_params)
         kw.setdefault("layers_per_relay", self.exec_cfg.layers_per_relay)
+        kw.setdefault("transport", self.exec_cfg.transport)
         return estimate_serve(
             self.model, max_batch=serve_cfg.max_batch,
             page_size=serve_cfg.page_size, n_pages=serve_cfg.n_pages,
@@ -356,6 +357,7 @@ class Engine:
         kw.setdefault("layers_per_relay", self.exec_cfg.layers_per_relay)
         kw.setdefault("tiers", self.exec_cfg.tiers)
         kw.setdefault("host_budget", self.exec_cfg.host_budget_bytes)
+        kw.setdefault("transport", self.exec_cfg.transport)
         return estimate(self.model, batch=batch, seq=seq,
                         mode=self.memory_mode, **kw)
 
@@ -376,8 +378,10 @@ class BaselineEngine(Engine):
 
     def _normalize_cfg(self, exec_cfg):
         # conventional execution has no relay — the packed flat-buffer
-        # layout is an L2L concern and the baseline kernels speak pytrees
-        return dataclasses.replace(exec_cfg, pack_params=False)
+        # layout and the pallas copy transport are L2L concerns; the
+        # baseline kernels speak pytrees and never issue relay copies
+        return dataclasses.replace(exec_cfg, pack_params=False,
+                                   transport="xla")
 
     @property
     def memory_mode(self):

@@ -60,7 +60,11 @@ def create(name: str, model, exec_cfg=None, *,
     ``{"tiers": 3, "host_budget_bytes": B}`` for the storage-tier EPS
     (the cold stacked-state tail beyond B bytes lives in a verified
     on-disk SegmentStore and is staged around every jitted call —
-    bit-identical, self-healing from checkpoints).  Remaining keyword
+    bit-identical, self-healing from checkpoints), or
+    ``{"transport": "pallas"}`` to move every relay slot through the
+    double-buffered ``kernels/relay_copy`` DMA pipeline instead of
+    scan-boundary ``device_put``s (overlap enforced by kernel
+    semaphores; bit-identical).  Remaining keyword
     args are forwarded
     to the engine constructor (``optimizer=``, ``mesh=``, ``rules=``,
     ``placements=``, ``donate=``).

@@ -289,6 +289,15 @@ def main():
                          "reverse relay recomputes the rest by "
                          "re-streaming each K-segment forward — for A/B "
                          "host/device byte comparison")
+    ap.add_argument("--transport", default=None,
+                    choices=["xla", "pallas"],
+                    help="override ExecutionConfig.transport (build "
+                         "default 'xla'): 'pallas' lowers every relay "
+                         "slot move through the double-buffered "
+                         "make_async_copy DMA pipeline "
+                         "(kernels/relay_copy) instead of scan-boundary "
+                         "device_puts — for A/B of the emitted "
+                         "copy/compute overlap structure")
     ap.add_argument("--tiers", type=int, default=None, choices=[2, 3],
                     help="override ExecutionConfig.tiers (build default "
                          "2): 3 enables the storage-tier EPS — the cold "
@@ -312,6 +321,8 @@ def main():
         exec_overrides["stash_every"] = args.stash_every
     if args.tiers is not None:
         exec_overrides["tiers"] = args.tiers
+    if args.transport is not None:
+        exec_overrides["transport"] = args.transport
     exec_overrides = exec_overrides or None
     if args.optimized and args.tag == "baseline":
         args.tag = "optimized"
@@ -330,6 +341,8 @@ def main():
         args.tag += f"-s{args.stash_every}"
     if args.tiers is not None and args.tiers != 2:
         args.tag += f"-t{args.tiers}"
+    if args.transport == "pallas":
+        args.tag += "-xcopy"
 
     archs = list_archs() if args.arch == "all" else args.arch.split(",")
     archs = [a for a in archs if a != "bert-large"]

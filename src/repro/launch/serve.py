@@ -194,6 +194,10 @@ def main(argv=None):
     ap.add_argument("--pack", action="store_true",
                     help="packed decode relay: one flat buffer per layer "
                          "per dtype instead of per-leaf copies")
+    ap.add_argument("--transport", default="xla",
+                    choices=["xla", "pallas"],
+                    help="decode relay slot mover: 'xla' device_put vs "
+                         "'pallas' double-buffered DMA copy kernel")
     ap.add_argument("--window", type=int, default=0,
                     help="ring-buffer window (long-context mode)")
     ap.add_argument("--seed", type=int, default=0)
@@ -203,7 +207,7 @@ def main(argv=None):
     eng = engines.create("l2l", cfg, ExecutionConfig(
         weight_stream=args.weight_stream, prefetch_depth=args.prefetch,
         layers_per_relay=args.group, pack_params=args.pack,
-        decode_window=args.window))
+        transport=args.transport, decode_window=args.window))
     if args.mode == "oneshot" or cfg.family == "audio":
         return run_oneshot(eng, cfg, args)
     return run_continuous(eng, cfg, args)

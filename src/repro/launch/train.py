@@ -86,6 +86,13 @@ def main(argv=None):
                          "flat buffer per dtype (one DMA per layer per "
                          "direction) and run the eager optimizer fused "
                          "on the flat segments")
+    ap.add_argument("--transport", default="xla",
+                    choices=["xla", "pallas"],
+                    help="relay slot mover: 'xla' = device_put at scan "
+                         "boundaries (overlap by XLA's scheduler), "
+                         "'pallas' = double-buffered make_async_copy DMA "
+                         "pipeline (overlap enforced by kernel "
+                         "semaphores; bit-identical)")
     ap.add_argument("--tiers", type=int, default=2, choices=[2, 3],
                     help="memory tier chain: 2 = HBM <- pinned host "
                          "(historical), 3 = + verified on-disk "
@@ -162,6 +169,7 @@ def main(argv=None):
         prefetch_depth=args.prefetch,
         layers_per_relay=args.group,
         pack_params=args.pack,
+        transport=args.transport,
         tiers=args.tiers,
         host_budget_bytes=args.host_budget,
         tier_dir=args.tier_dir,

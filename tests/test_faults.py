@@ -504,3 +504,34 @@ def test_tier_budget_demotes_instead_of_oom(make_engine, tmp_path):
     assert 0 < m["demoted_layers"] < 4        # partial demotion, no OOM
     assert m["reads"] > 0
     assert bits_equal(eng.tier.stage_in(s_t), s_r)
+
+
+def test_tier_async_stage_in_under_forced_latency(make_engine, tmp_path):
+    """The read-ahead ring's async stage-in: stage_out schedules the
+    next window's cold-segment fetches in the background, so forced
+    per-read disk latency lands while the main thread is between steps;
+    the next stage_in consumes the finished futures (counted as
+    async_stage_hits) and every bit still matches a strictly
+    synchronous (depth 0, no latency) tier run."""
+    cfg = get_config("bert-large", "smoke").replace(dtype="float32",
+                                                    n_layers=3)
+    batch = make_batch(cfg, 4, 16)
+    eng = engines.create(
+        "l2l-p", cfg,
+        _tier_exec(tmp_path / "async", prefetch_depth=1), donate=False)
+    ref = engines.create(
+        "l2l-p", cfg,
+        _tier_exec(tmp_path / "sync"), donate=False)
+    fault = faults.inject_io_latency(eng.tier.store, delay_s=0.003,
+                                     jitter_s=0.002, seed=11)
+    s_a = eng.init(jax.random.PRNGKey(0))
+    s_r = ref.init(jax.random.PRNGKey(0))
+    for _ in range(3):
+        s_a, _ = eng.train_step(s_a, batch)
+        s_r, _ = ref.train_step(s_r, batch)
+    m = eng.tier.metrics
+    assert fault.delayed > 0                      # latency really fired
+    assert m["async_stage_hits"] > 0              # background fetches won
+    assert m["async_stage_misses"] == 0           # ...every single window
+    assert ref.tier.metrics["async_stage_hits"] == 0   # depth 0 = sync
+    assert bits_equal(eng.tier.stage_in(s_a), ref.tier.stage_in(s_r))

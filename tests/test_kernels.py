@@ -192,3 +192,86 @@ def test_apply_norm_pallas_gate_end_to_end_grads():
     err = max(jax.tree.leaves(jax.tree.map(
         lambda a, b: float(jnp.max(jnp.abs(a - b))), g0, g1)))
     assert err < 1e-3, err
+
+
+# ===========================================================================
+# interpret-mode parity: the CPU-interpret kernels ARE the jnp chains
+# ===========================================================================
+# The transport kernel's CI story rests on interpret mode being a faithful
+# stand-in for the compiled kernel math, so pin the two fused kernels to
+# the exact jnp op chains their bodies execute: bitwise where every op is
+# an elementwise f32 chain, tight tol anywhere an implementation is free
+# to reassociate.
+from functools import partial
+
+import numpy as np
+
+from repro.kernels.fused_adam import fused_adam_flat
+from repro.kernels.rmsnorm import rmsnorm_2d
+
+
+# both chains are jitted: interpret-mode pallas lowers the kernel body
+# through XLA, so the reference must too — eager jnp skips fusion
+# (no FMA contraction) and drifts by a few f32 ulps
+@partial(jax.jit, static_argnames=("b1", "b2", "eps", "wd", "wd_form"))
+def _adam_chain(p, g, m, v, a, clip, *, b1, b2, eps, wd, wd_form):
+    """The _adam_kernel body, written in plain jnp."""
+    g = g.astype(jnp.float32) * clip
+    m2 = b1 * m + (1.0 - b1) * g
+    v2 = b2 * v + (1.0 - b2) * g * g
+    p32 = p.astype(jnp.float32)
+    if wd_form:
+        p2 = p32 - a * (m2 / (jnp.sqrt(v2) + eps) + wd * p32)
+    else:
+        p2 = p32 - a * m2 / (jnp.sqrt(v2) + eps)
+    return p2.astype(p.dtype), m2, v2
+
+
+@pytest.mark.parametrize("n,block", [(128, 16384), (1024, 256),
+                                     (16384, 4096)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("wd_form", [False, True])
+def test_fused_adam_flat_interpret_bitwise(n, block, dtype, wd_form):
+    ks = jax.random.split(jax.random.PRNGKey(n + wd_form), 4)
+    p = jax.random.normal(ks[0], (n,), dtype)
+    g = jax.random.normal(ks[1], (n,), jnp.float32)
+    m = jax.random.normal(ks[2], (n,), jnp.float32) * 0.1
+    v = jnp.abs(jax.random.normal(ks[3], (n,), jnp.float32)) * 0.01
+    a, clip = jnp.float32(1e-3), jnp.float32(0.7)
+    wd = 0.01 if wd_form else 0.0
+    outs = fused_adam_flat(p, g, m, v, a, clip, wd=wd, wd_form=wd_form,
+                           block=block, interpret=True)
+    refs = _adam_chain(p, g, m, v, a, clip, b1=0.9, b2=0.999, eps=1e-8,
+                       wd=wd, wd_form=wd_form)
+    # pure elementwise f32 chain: interpret mode must be bit-exact in
+    # every dtype, including the final bf16 round of p'
+    for o, r in zip(outs, refs):
+        assert np.array_equal(np.asarray(o), np.asarray(r)), (n, dtype)
+
+
+@partial(jax.jit, static_argnames=("eps",))
+def _rmsnorm_chain(x, s, eps):
+    """The _rmsnorm_kernel body, written in plain jnp."""
+    x32 = x.astype(jnp.float32)
+    ms = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(ms + eps)
+            * s.astype(jnp.float32)).astype(x.dtype)
+
+
+@pytest.mark.parametrize("shape,block_rows", [((4, 128), 256),
+                                              ((64, 512), 16),
+                                              ((1024, 64), 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_2d_interpret_parity(shape, block_rows, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(0), shape, dtype)
+    s = jax.random.normal(jax.random.PRNGKey(1), (shape[-1],), jnp.float32)
+    o = rmsnorm_2d(x, s, block_rows=block_rows, interpret=True)
+    r = _rmsnorm_chain(x, s, 1e-6)
+    if np.array_equal(np.asarray(o), np.asarray(r)):
+        return
+    # the row-mean reduction may legally reassociate between the tiled
+    # kernel and the whole-array chain; anything beyond a few ulps of
+    # f32 accumulation is a real bug
+    err = float(jnp.max(jnp.abs(o.astype(jnp.float32)
+                                - r.astype(jnp.float32))))
+    assert err < (1e-6 if dtype == jnp.float32 else 1e-2), err

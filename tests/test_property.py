@@ -163,7 +163,8 @@ def test_adam_update_bounded(seed):
 
 # ---------------------------------------------------------------------------
 # SYSTEM-LEVEL invariant: a full L2L engine step computes baseline grads
-# for ANY (depth, stash_every, layers_per_relay, prefetch, pack) point
+# for ANY (depth, stash_every, layers_per_relay, prefetch, pack,
+# transport) point
 # ---------------------------------------------------------------------------
 # engines are rebuilt from scratch every example, so the function-scoped
 # make_engine fixture carries no state between draws
@@ -175,15 +176,19 @@ _FIXTURE_HC = [hc for hc in [getattr(HealthCheck, "function_scoped_fixture",
           suppress_health_check=[HealthCheck.too_slow] + _FIXTURE_HC)
 @given(depth=st.integers(2, 6), stash_every=st.integers(1, 8),
        group=st.integers(1, 4), prefetch=st.integers(0, 2),
-       pack=st.booleans(), seed=st.integers(0, 2 ** 31 - 1))
+       pack=st.booleans(), transport=st.sampled_from(["xla", "pallas"]),
+       seed=st.integers(0, 2 ** 31 - 1))
 def test_l2l_engine_matches_baseline_random_schedule(
-        make_engine, depth, stash_every, group, prefetch, pack, seed):
+        make_engine, depth, stash_every, group, prefetch, pack, transport,
+        seed):
     """The whole execution-schedule knob space is gradient-preserving:
-    for random (depth, K, G, prefetch_depth, pack_params) tuples — K and
-    G free to exceed the depth, depths free to leave remainder segments
-    and remainder relay stops — the l2l engine's grads on a random batch
-    match the baseline reference engine's.  Today's kernel/optimizer
-    invariants above never run a full engine step; this one does."""
+    for random (depth, K, G, prefetch_depth, pack_params, transport)
+    tuples — K and G free to exceed the depth, depths free to leave
+    remainder segments and remainder relay stops, slots free to move via
+    device_put or the Pallas DMA copy kernel — the l2l engine's grads on
+    a random batch match the baseline reference engine's.  Today's
+    kernel/optimizer invariants above never run a full engine step; this
+    one does."""
     from conftest import make_batch
     from repro.configs.base import get_config
     from repro.core.schedule import ExecutionConfig
@@ -193,7 +198,7 @@ def test_l2l_engine_matches_baseline_random_schedule(
                          exec_cfg=ExecutionConfig(n_microbatches=2))
     e_l2l = make_engine("l2l", cfg=cfg, exec_cfg=ExecutionConfig(
         n_microbatches=2, stash_every=stash_every, layers_per_relay=group,
-        prefetch_depth=prefetch, pack_params=pack))
+        prefetch_depth=prefetch, pack_params=pack, transport=transport))
     params = e_base.model.init_params(jax.random.PRNGKey(seed))
     batch = make_batch(cfg, 4, 8, seed=seed)
     loss_b, gb = e_base.grads(params, batch)
