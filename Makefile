@@ -1,7 +1,8 @@
 PY ?= python
 
 .PHONY: verify test chaos bench bench-relay bench-pack bench-group \
-	bench-stash bench-serve bench-tier bench-transport quickstart
+	bench-stash bench-serve bench-tier bench-transport bench-compile \
+	quickstart
 
 # tier-1 verification (quick: slow multi-device subprocess tests deselected)
 verify:
@@ -62,6 +63,13 @@ bench-serve:
 # >10% geometric-mean pallas-vs-xla slowdown
 bench-transport:
 	PYTHONPATH=src $(PY) benchmarks/fig_transport.py --tiny
+
+# compile-time-vs-depth sweep (segment-scan vs historical unrolled
+# driver): trace+lower+compile seconds per depth with the lowered
+# while-instance counts; writes BENCH_compile.json at the repo root and
+# fails when the segment-scan program's compile time grows with depth
+bench-compile:
+	PYTHONPATH=src $(PY) benchmarks/fig_compile.py --tiny
 
 quickstart:
 	PYTHONPATH=src $(PY) examples/quickstart.py

@@ -17,8 +17,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (cost_model, fig5_time_vs_batch, fig6_breakdown,
-                            fig_group, fig_overlap, fig_pack, fig_stash,
-                            fig_tier, fig_transport, roofline,
+                            fig_compile, fig_group, fig_overlap, fig_pack,
+                            fig_stash, fig_tier, fig_transport, roofline,
                             table2_memory, table3_convergence,
                             table45_memory_batch)
     benches = [
@@ -34,6 +34,7 @@ def main() -> None:
         ("fig_stash_recompute", fig_stash.run),
         ("fig_tier_storage", fig_tier.run),
         ("fig_transport_relay", fig_transport.run),
+        ("fig_compile_depth", fig_compile.run),
         ("roofline_from_dryrun", roofline.run),
     ]
     failures = []

@@ -1,13 +1,17 @@
-"""Dynamic depth growth — the paper's NAS enablement claim.
+"""Dynamic depth growth — the paper's NAS enablement claim, zero-recompile.
 
 "L2L scales to arbitrary depth without impacting memory or devices …
 It also enables dynamic approaches such as neural architecture search."
 
 Because the L2L engine executes a *stacked* layer axis (and the device
-only ever holds one layer), growing the network mid-training is just
-concatenating freshly-initialized layers (+ zero optimizer slots) onto
-the stacked pytrees in the TrainState — a new Engine for the deeper
-config picks the state up unchanged; no device-footprint change.
+only ever holds one layer), growing the network mid-training is cheap at
+the MEMORY level — but rebuilding the engine per depth still paid a full
+re-jit per growth step.  ``ExecutionConfig.dynamic_depth`` removes that
+too: the jitted step takes depth as a traced ``n_layers`` operand, so
+ONE engine at the capacity depth serves every growth stage from the same
+compiled program.  Layers past the runtime depth pass activations
+through untouched and keep their params/optimizer rows bit-frozen — the
+state IS the capacity state from step 0, growth just raises the bound.
 
     PYTHONPATH=src python examples/nas_depth_growth.py
 """
@@ -18,61 +22,62 @@ from repro import engine as engines
 from repro.configs.base import get_config
 from repro.core.schedule import ExecutionConfig
 from repro.data.synthetic import DataConfig, SyntheticLM
-from repro.models.common import materialize, stack_specs
 from repro.optim import adam
 
-
-def grow(eng, state, extra_layers, rng, opt):
-    """Append freshly-initialized layers to group 0 (identity-friendly:
-    new blocks start with near-zero residual contributions).  Returns the
-    deeper engine and the carried-over TrainState."""
-    cfg = eng.model.cfg.replace(
-        n_layers=eng.model.cfg.n_layers + extra_layers)
-    new_eng = engines.create(eng.name, cfg, eng.exec_cfg, optimizer=opt,
-                             donate=False)
-    fresh = materialize(stack_specs(eng.model.groups[0].spec, extra_layers),
-                        rng)
-    # scale down the fresh layers' output projections so growth is smooth
-    fresh = jax.tree.map(lambda a: a * 0.1, fresh)
-    cat = lambda old, new: jax.tree.map(
-        lambda a, b: jnp.concatenate([a, b.astype(a.dtype)], 0), old, new)
-    params = dict(state.params)
-    params["groups"] = (cat(params["groups"][0], fresh),)
-    opt_state = dict(state.opt_state)
-    opt_state["groups"] = (cat(opt_state["groups"][0], opt.init(fresh)),)
-    return new_eng, state.replace(params=params, opt_state=opt_state)
+CAPACITY = 8
+START_DEPTH = 2
+GROW_BY = 2          # 2 -> 4 -> 6 -> 8: three growth iterations
 
 
-def run_phase(eng, state, data, start, steps):
+def run_phase(eng, state, data, start, steps, depth):
     losses = []
     for i in range(start, start + steps):
         b = {k: jnp.asarray(v) for k, v in data.batch(i).items()}
-        state, m = eng.train_step(state, b)
+        state, m = eng.train_step(state, b, depth)
         losses.append(float(m["loss"]))
     return state, losses
 
 
 def main():
-    cfg = get_config("bert-large", "smoke")
+    cfg = get_config("bert-large", "smoke").replace(n_layers=CAPACITY)
     opt = adam(lr=1e-3)
-    eng = engines.create("l2l-p", cfg, ExecutionConfig(n_microbatches=2),
+    eng = engines.create("l2l-p", cfg,
+                         ExecutionConfig(n_microbatches=2,
+                                         dynamic_depth=True),
                          optimizer=opt, donate=False)
     state = eng.init(jax.random.PRNGKey(0))
+    # scale down the dormant tail layers' weights so each growth step
+    # starts from near-zero residual contributions (smooth growth) —
+    # they sit bit-frozen until the runtime depth reaches them
+    params = dict(state.params)
+    params["groups"] = tuple(
+        jax.tree.map(lambda a: a.at[START_DEPTH:].mul(0.1), g)
+        for g in params["groups"])
+    state = state.replace(params=params)
     data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=64,
                                   global_batch=8))
 
-    state, l1 = run_phase(eng, state, data, 0, 25)
-    print(f"phase 1 (depth {eng.model.cfg.n_layers}): "
-          f"loss {l1[0]:.3f} -> {l1[-1]:.3f}")
+    depth, step, prev = START_DEPTH, 0, None
+    while depth <= CAPACITY:
+        state, ls = run_phase(eng, state, data, step, 25, depth)
+        step += 25
+        compiles = eng._fns["train_step"]._cache_size()
+        print(f"depth {depth} (capacity {CAPACITY}): "
+              f"loss {ls[0]:.3f} -> {ls[-1]:.3f}   "
+              f"[compiled programs: {compiles}]")
+        if prev is not None:
+            assert abs(ls[0] - prev[-1]) < 0.5, \
+                "growth must not reset learning"
+        prev = ls
+        depth += GROW_BY
 
-    eng, state = grow(eng, state, 2, jax.random.PRNGKey(42), opt)
-    state, l2 = run_phase(eng, state, data, 25, 25)
-    print(f"phase 2 (depth {eng.model.cfg.n_layers}): "
-          f"loss {l2[0]:.3f} -> {l2[-1]:.3f}")
-    assert l2[-1] < l1[0], "grown model must keep improving"
-    assert abs(l2[0] - l1[-1]) < 0.5, "growth must not reset learning"
-    print("depth grew 2 -> 4 mid-training; device-resident footprint "
-          "unchanged (one layer at a time, regardless of N)")
+    compiles = eng._fns["train_step"]._cache_size()
+    assert compiles == 1, f"expected ONE compile, saw {compiles}"
+    n_growth = (CAPACITY - START_DEPTH) // GROW_BY
+    print(f"\ndepth grew {START_DEPTH} -> {CAPACITY} across {n_growth} "
+          f"growth iterations under EXACTLY ONE compiled program "
+          f"(jit cache size {compiles}); device-resident footprint "
+          f"unchanged (one layer at a time, regardless of N)")
 
 
 if __name__ == "__main__":

@@ -48,12 +48,24 @@ def make_serve_step(model, exec_cfg: ExecutionConfig,
     PK = exec_cfg.pack_params
     G = exec_cfg.layers_per_relay
     TR = exec_cfg.transport
+    DYN = exec_cfg.dynamic_depth
+    if DYN:
+        assert len(model.groups) == 1, \
+            "dynamic_depth supports single-group models"
 
     dgroups = model.decode_groups()
     # map decode-group index -> model group index (for placements)
     gidx = [i for i, g in enumerate(model.groups) if not g.is_encoder]
 
-    def serve_step(params, caches, token, cur_pos):
+    def serve_step(params, caches, token, cur_pos, n_active=None):
+        if DYN:
+            assert n_active is not None, \
+                "dynamic_depth: decode takes a traced n_layers operand"
+            act_win = (jnp.int32(0), jnp.asarray(n_active, jnp.int32))
+        else:
+            assert n_active is None, \
+                "n_layers operand needs ExecutionConfig.dynamic_depth"
+            act_win = None
         static = {"embed": params["embed"], "head": params["head"]}
         x = model.decode_embed(static, token, cur_pos)
         ctx = model.decode_ctx(cur_pos, window=exec_cfg.decode_window)
@@ -68,10 +80,17 @@ def make_serve_step(model, exec_cfg: ExecutionConfig,
                 x2, cache2 = _g.decode(w, x_c, cache_l, None, ctx)
                 return x2, cache2
 
+            idle = None
+            if DYN:
+                def idle(x_c, slots, cache_l):
+                    # inactive layer: hidden state AND cache untouched
+                    return x_c, cache_l
+
             x, nc = relay_scan(
                 body, x, (Stream(wp, params["groups"][gidx[di]]),),
                 xs=caches[di], group=G, prefetch=PF,
-                unroll=exec_cfg.unroll_layers, transport=TR)
+                unroll=exec_cfg.unroll_layers, transport=TR,
+                active=act_win, idle_body=idle)
             new_caches.append(nc)
         logits = model.decode_logits(static, x)
         return logits, tuple(new_caches)
@@ -121,13 +140,15 @@ def _fix_pos(tree, abstract_only):
 
 def prefill(model, params, tokens, live_seq: int,
             exec_cfg: Optional[ExecutionConfig] = None,
-            frames=None):
+            frames=None, n_layers=None):
     """Build caches by feeding the prompt one token at a time through
     ``serve_step`` (works uniformly for every family: KV, ring-buffer,
     MLA-compressed, SSM state).  Returns (caches, last_logits).
 
     For whisper, pass ``frames`` — the encoder runs once and its projected
     cross-attention K/V are written into the decoder caches first.
+    With ``exec_cfg.dynamic_depth``, ``n_layers`` (default capacity) is
+    the runtime depth forwarded to every serve step.
     """
     exec_cfg = exec_cfg or ExecutionConfig()
     B, S = tokens.shape
@@ -136,11 +157,19 @@ def prefill(model, params, tokens, live_seq: int,
         assert frames is not None
         caches = encode_cross_kv(model, params, frames, caches)
     serve = make_serve_step(model, exec_cfg)
+    n_op = None
+    if exec_cfg.dynamic_depth:
+        cap = sum(g.n_layers for g in model.groups)
+        n_op = jnp.asarray(cap if n_layers is None else n_layers,
+                           jnp.int32)
 
     def body(carry, i):
         caches = carry
         tok = jax.lax.dynamic_slice_in_dim(tokens, i, 1, axis=1)
-        logits, caches = serve(params, caches, tok, i)
+        if n_op is None:
+            logits, caches = serve(params, caches, tok, i)
+        else:
+            logits, caches = serve(params, caches, tok, i, n_op)
         return caches, logits[:, 0]
 
     caches, logits = jax.lax.scan(body, caches, jnp.arange(S, dtype=jnp.int32))

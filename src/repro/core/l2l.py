@@ -28,9 +28,17 @@ working set stays O(1) in both N and K.  Chen-style sublinear
 checkpointing composed into the relay: one extra layer-forward for K-1
 of every K layers, bit-identical gradients and updates for every (K, G,
 prefetch, pack) point (tests/test_stash.py).  K = 1 emits the historical
-single-scan schedule unchanged; K > 1 trades it for ~3·ceil(N/K)
-unrolled relay instances (fwd + recompute + bwd per segment), so K is
-meant to be chosen O(sqrt N) or larger.
+single-scan schedule unchanged.  K > 1 used to unroll ~3·ceil(N/K)
+relay instances (fwd + recompute + bwd per segment) — with
+``ExecutionConfig.segment_scan`` (default on) each phase is instead ONE
+outer ``segment_scan`` over the N//K full segments (traced segment
+start, static remainder epilogue), so the compiled program is O(1) in
+depth; ``segment_scan=False`` re-emits the historical unrolled program
+bit-identically.  ``dynamic_depth`` builds on that: the step takes the
+live layer count as a traced int32 operand (``n_active``), layers past
+it ride idle ``lax.cond`` branches that pass activations through and
+re-ship their param/optimizer rows bit-frozen, so ONE compiled program
+serves every depth up to the capacity the weights were sized at.
 With ``eager_optimizer`` (Alg 4 / L2L-p) the optimizer for layer l runs
 inside the same reverse step, overlapping the backward of layer l-1 —
 and because the body's dw is produced under pjit, the per-layer gradient
@@ -69,7 +77,8 @@ import jax.numpy as jnp
 
 from repro.core import packing
 from repro.core.eps import EPSPlacements, make_placements
-from repro.core.relay import Stream, relay_scan, segment_bounds
+from repro.core.relay import (Stream, flatten_segments, group_slice,
+                              relay_scan, segment_bounds, segment_scan)
 from repro.core.schedule import ExecutionConfig
 from repro.optim import Optimizer, clip_by_norm, tree_global_norm
 
@@ -170,6 +179,14 @@ def make_train_step(model, optimizer: Optimizer, exec_cfg: ExecutionConfig,
     SE = exec_cfg.stash_every
     TR = exec_cfg.transport
     UNROLL = exec_cfg.unroll_layers
+    SEG = exec_cfg.segment_scan
+    DYN = exec_cfg.dynamic_depth
+    if DYN:
+        assert len(model.groups) == 1, \
+            "dynamic_depth supports single-group models " \
+            "(one traced depth bound)"
+        assert model.groups[0].n_layers % SE == 0, \
+            "dynamic_depth needs stash_every to divide the capacity depth"
     ship = _make_ship(TR)
 
     def run_opt(grads, opt_l, w, step_i):
@@ -183,7 +200,16 @@ def make_train_step(model, optimizer: Optimizer, exec_cfg: ExecutionConfig,
 
     packed_update = _make_packed_update(optimizer, exec_cfg, run_opt)
 
-    def step(params, opt_state, batch):
+    def step(params, opt_state, batch, n_active=None):
+        if DYN:
+            assert n_active is not None, \
+                "dynamic_depth: the step takes a traced n_layers operand"
+            n_act = jnp.asarray(n_active, jnp.int32)
+            act_win = (jnp.int32(0), n_act)     # active layer-row window
+        else:
+            assert n_active is None, \
+                "n_layers operand needs ExecutionConfig.dynamic_depth"
+            n_act = act_win = None
         static = {"embed": params["embed"], "head": params["head"]}
         batch_ub = _reshape_ub(batch, UB)
         W_total = jnp.maximum(batch["mask"].sum(), 1.0)
@@ -249,9 +275,18 @@ def make_train_step(model, optimizer: Optimizer, exec_cfg: ExecutionConfig,
                               if _stash else aux_g)
 
             if SE == 1:
+                fwd_idle = None
+                if DYN:
+                    def fwd_idle(x_c, slots, _x):
+                        # inactive layer: activations pass through
+                        # untouched; the boundary ships anyway (the ys
+                        # avals must match the live branch)
+                        return x_c, (ship(placements.stash.host, x_c),
+                                     jnp.float32(0.0))
                 x_ub, (stash_g, aux_per_layer) = relay_scan(
                     fwd_body, x_ub, (Stream(wp, params["groups"][gi]),),
-                    group=G, prefetch=PF, unroll=UNROLL, transport=TR)
+                    group=G, prefetch=PF, unroll=UNROLL, transport=TR,
+                    active=act_win, idle_body=fwd_idle)
                 stashes.append(stash_g)
                 aux_total = aux_total + aux_per_layer.sum() / UB
             else:
@@ -262,16 +297,52 @@ def make_train_step(model, optimizer: Optimizer, exec_cfg: ExecutionConfig,
                 def fwd_nostash(x_c, slots, x, _b=fwd_body):
                     return _b(x_c, slots, x, _stash=False)
 
-                stash_segs = []
-                for s0, s1 in segment_bounds(group.n_layers, SE):
-                    stash_segs.append(ship(placements.stash.host, x_ub))
-                    x_ub, aux_per_layer = relay_scan(
-                        fwd_nostash, x_ub,
-                        (Stream(wp, _seg_slice(params["groups"][gi],
-                                               s0, s1)),),
-                        group=G, prefetch=PF, unroll=UNROLL, transport=TR)
-                    aux_total = aux_total + aux_per_layer.sum() / UB
-                stashes.append(stash_segs)
+                if not SEG:
+                    # historical unrolled per-segment relays — one
+                    # program instance per segment, kept as the
+                    # compile-time A/B baseline (segment_scan=False)
+                    stash_segs = []
+                    for s0, s1 in segment_bounds(group.n_layers, SE):
+                        stash_segs.append(ship(placements.stash.host, x_ub))
+                        x_ub, aux_per_layer = relay_scan(
+                            fwd_nostash, x_ub,
+                            (Stream(wp, _seg_slice(params["groups"][gi],
+                                                   s0, s1)),),
+                            group=G, prefetch=PF, unroll=UNROLL,
+                            transport=TR)
+                        aux_total = aux_total + aux_per_layer.sum() / UB
+                    stashes.append(stash_segs)
+                else:
+                    # segment-major: ONE outer scan walks the full
+                    # K-segments (traced start -> dynamic weight slices);
+                    # aux accumulation rides the carry so the float adds
+                    # keep the unrolled left-to-right order, and the
+                    # entry checkpoints become the outer scan's ys (the
+                    # same ship-into-stash-tier protocol K=1 uses).
+                    fwd_idle = None
+                    if DYN:
+                        def fwd_idle(x_c, slots, _x):
+                            return x_c, jnp.float32(0.0)
+
+                    w_g = params["groups"][gi]
+
+                    def seg_fwd(carry, s0, size, _x, win, _wp=wp,
+                                _w=w_g, _idle=fwd_idle):
+                        x_c, aux_c = carry
+                        entry = ship(placements.stash.host, x_c)
+                        x_c, aux_per_layer = relay_scan(
+                            fwd_nostash, x_c,
+                            (Stream(_wp, group_slice(_w, s0, size)),),
+                            group=G, prefetch=PF, unroll=UNROLL,
+                            transport=TR, active=win, idle_body=_idle)
+                        return (x_c, aux_c + aux_per_layer.sum() / UB), \
+                            entry
+
+                    (x_ub, aux_total), st_scan, st_rem = segment_scan(
+                        seg_fwd, (x_ub, aux_total),
+                        n_layers=group.n_layers, every=SE,
+                        n_active=n_act, unroll=UNROLL)
+                    stashes.append((st_scan, st_rem))
 
         # ------------------------------------------------------------
         # HEAD: loss + dL/dx per microbatch (also d_static from the head)
@@ -388,6 +459,24 @@ def make_train_step(model, optimizer: Optimizer, exec_cfg: ExecutionConfig,
                 nf_c = nf_c + jnp.where(finite_l, 0, 1)
                 return (dxin_ub, dmem_c, gn_c, nf_c), out
 
+            bwd_idle = None
+            if DYN:
+                def bwd_idle(core, slots, _stash, _wp=wp, _op=op):
+                    """Inactive layer: the carry (dx, dmem, gnorm,
+                    nonfinite) passes through untouched; the write-back
+                    ys re-ship the incoming rows (eager: the row's
+                    params/opt slots stay bit-identical) or a zero
+                    gradient (trailing-update mode)."""
+                    if exec_cfg.eager_optimizer:
+                        return core, (ship(_wp.host, slots[0]),
+                                      ship(_op.host, slots[1]))
+                    w_tree = packing.unpack(slots[0]) if PK else slots[0]
+                    dw0 = _tree_zeros_f32(w_tree)
+                    return core, ship(
+                        _wp.host,
+                        packing.pack(dw0, spec=slots[0].spec,
+                                     stacked=False) if PK else dw0)
+
             core0 = (dx_ub, dmem_ub, gnorm_sq, nonfinite)
             if SE == 1:
                 streams = [Stream(wp, params["groups"][gi])]
@@ -399,7 +488,8 @@ def make_train_step(model, optimizer: Optimizer, exec_cfg: ExecutionConfig,
                     streams.append(Stream(op, opt_state["groups"][gi]))
                 core0, outs = relay_scan(
                     bwd_body, core0, streams, xs=stashes[gi], reverse=True,
-                    group=G, prefetch=PF, unroll=UNROLL, transport=TR)
+                    group=G, prefetch=PF, unroll=UNROLL, transport=TR,
+                    active=act_win, idle_body=bwd_idle)
             else:
                 # Constant-memory stash: walk the K-segments in reverse.
                 # Each segment first re-streams its weights FORWARD
@@ -432,39 +522,106 @@ def make_train_step(model, optimizer: Optimizer, exec_cfg: ExecutionConfig,
                     _, y_ub = jax.lax.scan(ub_body, None, xs_l)
                     return y_ub, ship(placements.stash.host, y_ub)
 
-                bounds = segment_bounds(group.n_layers, SE)
-                outs_segs = [None] * len(bounds)
-                for si in reversed(range(len(bounds))):
-                    s0, s1 = bounds[si]
-                    entry = stashes[gi][si]          # host-placed
-                    if s1 - s0 > 1:
-                        _, rec_bounds = relay_scan(
-                            rec_body, placements.stash.dev(entry),
-                            (Stream(wp, _seg_slice(params["groups"][gi],
+                if not SEG:
+                    # historical unrolled per-segment relays
+                    # (segment_scan=False compile-time A/B baseline)
+                    bounds = segment_bounds(group.n_layers, SE)
+                    outs_segs = [None] * len(bounds)
+                    for si in reversed(range(len(bounds))):
+                        s0, s1 = bounds[si]
+                        entry = stashes[gi][si]          # host-placed
+                        if s1 - s0 > 1:
+                            _, rec_bounds = relay_scan(
+                                rec_body, placements.stash.dev(entry),
+                                (Stream(wp,
+                                        _seg_slice(params["groups"][gi],
                                                    s0, s1 - 1)),),
-                            group=G, prefetch=PF, unroll=UNROLL,
-                            transport=TR)
-                        # entry + outputs of layers s0..s1-2
-                        # == boundaries of layers s0..s1-1
-                        seg_stash = jax.tree.map(
-                            lambda e, bs: jnp.concatenate(
-                                [e[None], bs], axis=0),
-                            entry, rec_bounds)
-                    else:
-                        seg_stash = jax.tree.map(lambda a: a[None], entry)
-                    seg_streams = [Stream(
-                        wp, _seg_slice(params["groups"][gi], s0, s1))]
-                    if exec_cfg.eager_optimizer:
-                        seg_streams.append(Stream(op, _seg_slice(
-                            opt_state["groups"][gi], s0, s1)))
-                    core0, outs_segs[si] = relay_scan(
-                        bwd_body, core0, seg_streams, xs=seg_stash,
-                        reverse=True, group=G, prefetch=PF, unroll=UNROLL,
-                        transport=TR)
-                # per-segment write-backs concatenate to the (N, ...)
-                # group tree; re-state the EPS placement on the result so
-                # it lands host-resident like the K=1 scan-stacked ys
-                outs = _concat_segs(outs_segs)
+                                group=G, prefetch=PF, unroll=UNROLL,
+                                transport=TR)
+                            # entry + outputs of layers s0..s1-2
+                            # == boundaries of layers s0..s1-1
+                            seg_stash = jax.tree.map(
+                                lambda e, bs: jnp.concatenate(
+                                    [e[None], bs], axis=0),
+                                entry, rec_bounds)
+                        else:
+                            seg_stash = jax.tree.map(
+                                lambda a: a[None], entry)
+                        seg_streams = [Stream(
+                            wp, _seg_slice(params["groups"][gi], s0, s1))]
+                        if exec_cfg.eager_optimizer:
+                            seg_streams.append(Stream(op, _seg_slice(
+                                opt_state["groups"][gi], s0, s1)))
+                        core0, outs_segs[si] = relay_scan(
+                            bwd_body, core0, seg_streams, xs=seg_stash,
+                            reverse=True, group=G, prefetch=PF,
+                            unroll=UNROLL, transport=TR)
+                    # per-segment write-backs concatenate to the (N, ...)
+                    # group tree; re-state the EPS placement on the
+                    # result so it lands host-resident like the K=1
+                    # scan-stacked ys
+                    outs = _concat_segs(outs_segs)
+                else:
+                    # segment-major: the reverse walk over segments is
+                    # ONE outer scan (the entry checkpoints ride its xs);
+                    # each iteration re-streams its segment's weights
+                    # forward to recompute the missing boundaries, then
+                    # runs the recompute-vjp backward — exactly the
+                    # unrolled schedule, with a traced segment start
+                    # feeding dynamic weight/opt slices.
+                    rec_idle = None
+                    if DYN:
+                        def rec_idle(x_c, slots, _x):
+                            return x_c, ship(placements.stash.host, x_c)
+
+                    w_g = params["groups"][gi]
+                    o_g = (opt_state["groups"][gi]
+                           if exec_cfg.eager_optimizer else None)
+
+                    def seg_bwd(core, s0, size, entry, win, _wp=wp,
+                                _op=op, _w=w_g, _o=o_g, _ri=rec_idle):
+                        if size > 1:
+                            # active rows [0, hi): the recompute needs
+                            # boundaries 1..hi-1 = outputs of rows
+                            # 0..hi-2, so its window is (0, hi-1)
+                            rec_win = (None if win is None else
+                                       (win[0],
+                                        jnp.maximum(win[1] - 1, 0)))
+                            _, rec_bounds = relay_scan(
+                                rec_body, placements.stash.dev(entry),
+                                (Stream(_wp,
+                                        group_slice(_w, s0, size - 1)),),
+                                group=G, prefetch=PF, unroll=UNROLL,
+                                transport=TR, active=rec_win,
+                                idle_body=_ri)
+                            # entry + outputs of rows 0..size-2
+                            # == boundaries of rows 0..size-1
+                            seg_stash = jax.tree.map(
+                                lambda e, bs: jnp.concatenate(
+                                    [e[None], bs], axis=0),
+                                entry, rec_bounds)
+                        else:
+                            seg_stash = jax.tree.map(
+                                lambda a: a[None], entry)
+                        seg_streams = [Stream(
+                            _wp, group_slice(_w, s0, size))]
+                        if exec_cfg.eager_optimizer:
+                            seg_streams.append(Stream(
+                                _op, group_slice(_o, s0, size)))
+                        return relay_scan(
+                            bwd_body, core, seg_streams, xs=seg_stash,
+                            reverse=True, group=G, prefetch=PF,
+                            unroll=UNROLL, transport=TR, active=win,
+                            idle_body=bwd_idle)
+
+                    st_scan, st_rem = stashes[gi]
+                    core0, outs_scan, outs_rem = segment_scan(
+                        seg_bwd, core0, n_layers=group.n_layers,
+                        every=SE, xs=st_scan, xs_rem=st_rem,
+                        reverse=True, n_active=n_act, unroll=UNROLL)
+                    outs = flatten_segments(outs_scan, outs_rem)
+                # re-state the EPS placement on the stitched result so it
+                # lands host-resident like the K=1 scan-stacked ys
                 outs = ((wp.host(outs[0]), op.host(outs[1]))
                         if exec_cfg.eager_optimizer else wp.host(outs))
             dx_ub, dmem_ub, gnorm_sq, nonfinite = core0
@@ -560,9 +717,19 @@ def make_train_step(model, optimizer: Optimizer, exec_cfg: ExecutionConfig,
                         g, o, w, opt_step)
                     return None, (ship(_wp.host, nw), ship(_op.host, no))
 
+                upd_idle = None
+                if DYN:
+                    def upd_idle(_, slots, _x, _wp=wp, _op=op):
+                        # inactive row: no update — re-ship the incoming
+                        # rows so adam's moment decay never touches them
+                        w, g, o = slots
+                        return None, (ship(_wp.host, w),
+                                      ship(_op.host, o))
+
                 _, (nw_g, no_g) = relay_scan(
                     upd_body, None, streams,
-                    group=G, prefetch=PF, unroll=UNROLL, transport=TR)
+                    group=G, prefetch=PF, unroll=UNROLL, transport=TR,
+                    active=act_win, idle_body=upd_idle)
                 new_group_params[gi] = nw_g
                 new_group_opt[gi] = no_g
 
@@ -627,8 +794,20 @@ def make_prefill_fn(model, exec_cfg: ExecutionConfig,
     PK = exec_cfg.pack_params
     G = exec_cfg.layers_per_relay
     TR = exec_cfg.transport
+    DYN = exec_cfg.dynamic_depth
+    if DYN:
+        assert len(model.groups) == 1, \
+            "dynamic_depth supports single-group models"
 
-    def prefill(params, batch):
+    def prefill(params, batch, n_active=None):
+        if DYN:
+            assert n_active is not None, \
+                "dynamic_depth: prefill takes a traced n_layers operand"
+            act_win = (jnp.int32(0), jnp.asarray(n_active, jnp.int32))
+        else:
+            assert n_active is None, \
+                "n_layers operand needs ExecutionConfig.dynamic_depth"
+            act_win = None
         static = {"embed": params["embed"], "head": params["head"]}
         batch_ub = _reshape_ub(batch, UB)
         ub_slice = jax.tree.map(lambda a: a[0], batch_ub)
@@ -668,10 +847,15 @@ def make_prefill_fn(model, exec_cfg: ExecutionConfig,
                 _, y_ub = jax.lax.scan(ub_body, None, xs)
                 return y_ub, None
 
+            fwd_idle = None
+            if DYN:
+                def fwd_idle(x_c, slots, _x):
+                    return x_c, None
+
             x_ub, _ = relay_scan(
                 fwd_body, x_ub, (Stream(wp, params["groups"][gi]),),
                 group=G, prefetch=PF, unroll=exec_cfg.unroll_layers,
-                transport=TR)
+                transport=TR, active=act_win, idle_body=fwd_idle)
 
         # last-position logits per microbatch
         def head_one(x_i):
@@ -699,6 +883,8 @@ def make_grads_fn(model, exec_cfg: ExecutionConfig,
         offload_stash=exec_cfg.offload_stash,
         weight_stream=exec_cfg.weight_stream,
         stash_every=exec_cfg.stash_every,
+        segment_scan=exec_cfg.segment_scan,
+        dynamic_depth=exec_cfg.dynamic_depth,
         prefetch_depth=exec_cfg.prefetch_depth,
         pack_params=exec_cfg.pack_params,
         layers_per_relay=exec_cfg.layers_per_relay,
@@ -716,9 +902,10 @@ def _make_loss_and_grads(model, exec_cfg, placements=None):
     base_step = make_train_step(
         model, _grad_collector(), exec_cfg, placements)
 
-    def fn(params, batch):
+    def fn(params, batch, n_active=None):
         opt = init_opt_state(_grad_collector(), params)
-        new_params, new_opt, metrics = base_step(params, opt, batch)
+        new_params, new_opt, metrics = base_step(params, opt, batch,
+                                                 n_active)
         # _grad_collector stores grads in the "m" slot of the opt state
         # (packed groups hold it as one weight-aligned flat f32 segment —
         # unpack so callers always see the plain grad pytree)

@@ -70,6 +70,17 @@ class MemoryReport:
     recompute_layers: int = 0
     recompute_stops: int = 0
     recompute_buffer: int = 0
+    # --- program size (scan over segments) -------------------------------
+    # How many RELAY INSTANCES the lowered train step contains — distinct
+    # relay scans the compiler must lower, NOT trip counts (those are
+    # ``relay_stops``).  The historical K > 1 schedule unrolled one relay
+    # per segment per phase: ~3·ceil(N/K) instances (fwd + recompute +
+    # bwd), so trace/lower/compile time grew linearly with depth.  With
+    # ``segment_scan`` every phase drives its segments through ONE outer
+    # lax.scan, leaving an O(1)-in-depth count: the per-phase scans plus
+    # at most one extra set for the N mod K remainder that runs outside
+    # the scan.  K = 1 was never unrolled (one relay per phase).
+    relay_instances: int = 0
     # --- storage tier (tiers = 3: HBM <- pinned host <- mmap/NVMe) -------
     # The cold row tail of the stacked EPS state (weights + optimizer
     # slots; gradients are transit, never demoted) that lives in the
@@ -146,6 +157,7 @@ def estimate(model: LayeredModel, *, batch: int, seq: int,
              pack_params: bool = False,
              layers_per_relay: int = 1,
              stash_every: int = 1,
+             segment_scan: bool = True,
              tiers: int = 2,
              host_budget: int = 0,
              model_shards: int = 1,
@@ -183,6 +195,15 @@ def estimate(model: LayeredModel, *, batch: int, seq: int,
     one K-segment, the device relay slot is capped at min(G, K, depth)
     layers — K < G shrinks the weight-transit footprint too.  K = 1
     reproduces today's model byte-for-byte.
+
+    ``segment_scan`` (l2l modes, K > 1 only) changes no byte term — it is
+    purely a PROGRAM-SIZE knob, reported in ``relay_instances``: the
+    distinct relay scans the lowered train step contains.  True (the
+    runtime default) drives all of a phase's segments through one outer
+    lax.scan — O(1) instances in depth; False re-emits the historical
+    unrolled per-segment program — ~3·ceil(N/K) instances, the
+    depth-proportional compile-time blowup ``benchmarks/fig_compile.py``
+    measures.
 
     ``pack_params`` (l2l modes only) does NOT change any byte term — the
     transit buffers of eq. (2)/(3) hold the same elements whether they
@@ -281,6 +302,27 @@ def estimate(model: LayeredModel, *, batch: int, seq: int,
     # boundaries (the entry is one of the persistent checkpoints)
     rec_buffer = (max(max(s1 - s0 for s0, s1 in gsegs)
                       for gsegs in segs) - 1) * batch * A if K > 1 else 0
+    # program size: distinct relay instances the lowered step contains.
+    # K = 1 was never segmented: one fwd + one bwd relay (+ trailing
+    # update relay under the non-eager optimizer) per group.
+    upd = 1 if mode == "l2l" else 0
+    if K == 1:
+        instances = len(model.groups) * (2 + upd)
+    elif not segment_scan:
+        # unrolled: one fwd + one bwd relay per segment, one recompute
+        # relay per multi-layer segment — grows with ceil(N/K)
+        n_rec = sum(1 for gsegs in segs for s0, s1 in gsegs if s1 - s0 > 1)
+        instances = (sum(2 * len(gsegs) for gsegs in segs) + n_rec
+                     + len(model.groups) * upd)
+    else:
+        # one outer scan per phase (fwd relay; rec + bwd relays share the
+        # reverse scan body) plus the N mod K remainder's relays outside
+        instances = 0
+        for g in model.groups:
+            R = g.n_layers % K
+            instances += 3 + upd
+            if R:
+                instances += 2 + (1 if R > 1 else 0)
     # --- model sharding + storage tier -----------------------------------
     shards = max(1, int(model_shards))
     shard = lambda b: -(-b // shards)              # ceil: stay conservative
@@ -334,6 +376,7 @@ def estimate(model: LayeredModel, *, batch: int, seq: int,
         recompute_layers=rec_layers,
         recompute_stops=rec_stops,
         recompute_buffer=rec_buffer,
+        relay_instances=instances,
         params_disk=params_disk,
         opt_disk=opt_disk,
         demoted_layers=demoted,

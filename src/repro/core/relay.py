@@ -42,15 +42,40 @@ Mechanics worth knowing:
   forward index (matching ``lax.scan(reverse=True)`` semantics), and
   grouped stops stack their G per-layer outputs in forward order before
   the scan stacks the stops.
+* ``active=(lo, hi)`` + ``idle_body`` gate each stop with a traced layer
+  window: stops outside it run the idle body (pass activations through,
+  re-ship slots so inactive rows stay bit-frozen).  This is how
+  ``segment_scan`` runs a traced segment window inside one scan and how
+  ``dynamic_depth`` masks layers past the runtime depth.  ``active=None``
+  keeps the emitted program byte-identical to the historical one.
+* ``segment_scan`` (below) wraps ``relay_scan`` callers that used to
+  unroll one relay per K-segment: ONE outer ``lax.scan`` over the
+  ``N // K`` full segments with a traced segment start drives dynamic
+  slices of the stacked streams; the ``N mod K`` remainder is a static
+  epilogue outside the scan.  The compiled program becomes O(1) in
+  depth while staying bit-identical to the unrolled form.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, NamedTuple, Sequence
+from typing import Any, Callable, NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.eps import Placement
+
+# kernels.relay_copy, imported once per process.  The pallas transport's
+# ``fetch`` runs once per relay stop per trace — a module-level lazy
+# import keeps Python's import machinery out of every fetch.
+_RELAY_COPY = None
+
+
+def _relay_copy():
+    global _RELAY_COPY
+    if _RELAY_COPY is None:
+        from repro.kernels import relay_copy
+        _RELAY_COPY = relay_copy
+    return _RELAY_COPY
 
 
 class Stream(NamedTuple):
@@ -114,7 +139,9 @@ def segment_bounds(n_layers: int, every: int) -> tuple:
 
 def relay_scan(body: Callable, init, streams: Sequence[Stream], *,
                xs=None, reverse: bool = False, group: int = 1,
-               prefetch: int = 0, unroll=False, transport: str = "xla"):
+               prefetch: int = 0, unroll=False, transport: str = "xla",
+               active: Optional[tuple] = None,
+               idle_body: Optional[Callable] = None):
     """Run ``body`` once per layer under the unified relay schedule.
 
     ``body(carry, slots, x) -> (carry, ys)`` is PER LAYER:
@@ -134,6 +161,15 @@ def relay_scan(body: Callable, init, streams: Sequence[Stream], *,
     ``make_async_copy`` pipeline, so the ring's overlap is enforced by
     DMA semaphores inside the emitted kernel.  Pure transport — results
     are bit-identical (tests/test_transport.py).
+
+    ``active`` makes the trip count a RUNTIME value: a traced half-open
+    ``(lo, hi)`` window of local layer indices.  Rows inside the window
+    run ``body``; rows outside run ``idle_body`` (same signature, same
+    output avals — typically the carry passed through untouched and the
+    incoming slots re-shipped) under a per-layer ``lax.cond``, so ONE
+    compiled program serves every window value — the mechanism behind
+    ``ExecutionConfig.dynamic_depth``.  ``active=None`` (the default)
+    emits the historical ungated program unchanged.
     """
     streams = tuple(streams)
     assert streams, "relay_scan needs at least one stream"
@@ -143,6 +179,22 @@ def relay_scan(body: Callable, init, streams: Sequence[Stream], *,
     S = n // G                    # full stops covered by the main scan
     R = n - S * G                 # remainder stop (0 when G divides N)
 
+    if active is None:
+        def call_body(carry, slots, x, idx):
+            return body(carry, slots, x)
+    else:
+        assert idle_body is not None, \
+            "relay_scan(active=...) needs an idle_body with matching " \
+            "output structure"
+        lo, hi = active
+
+        def call_body(carry, slots, x, idx):
+            on = jnp.logical_and(idx >= lo, idx < hi)
+            return jax.lax.cond(on,
+                                lambda c: body(c, slots, x),
+                                lambda c: idle_body(c, slots, x),
+                                carry)
+
     def fetch(start, size: int):
         """ONE host->HBM copy per stream (per leaf / dtype segment) for a
         ``size``-layer slot — the only DMA issue site in the repo."""
@@ -151,7 +203,7 @@ def relay_scan(body: Callable, init, streams: Sequence[Stream], *,
             # leaf/segment move through the double-buffered DMA kernel
             # (squeezed to the single-layer layout when G == 1, matching
             # layer_slice below)
-            from repro.kernels import relay_copy
+            relay_copy = _relay_copy()
             return tuple(
                 relay_copy.fetch_slot(s.stacked, start, size,
                                       squeeze=(G == 1))
@@ -172,7 +224,7 @@ def relay_scan(body: Callable, init, streams: Sequence[Stream], *,
         for j in order:
             slot_j = tuple(_index(s, j) for s in slots)
             x_j = None if x_stop is None else _index(x_stop, j)
-            carry, ys[j] = body(carry, slot_j, x_j)
+            carry, ys[j] = call_body(carry, slot_j, x_j, start + j)
         if all(y is None for y in ys):
             return carry, None
         return carry, _stack(ys)
@@ -189,7 +241,7 @@ def relay_scan(body: Callable, init, streams: Sequence[Stream], *,
     ys_main = None
     if S > 0:
         idxs = jnp.arange(S)
-        if K == 0 and G == 1 and transport == "xla":
+        if K == 0 and G == 1 and transport == "xla" and active is None:
             # historical per-layer scan, reproduced exactly: streams and
             # xs ride the scan's native xs slicing; the fetch happens at
             # the top of the consuming iteration
@@ -206,10 +258,12 @@ def relay_scan(body: Callable, init, streams: Sequence[Stream], *,
             # pallas transport can't ride the scan's native xs slicing —
             # the DMA kernel must issue the copy itself, so the stop
             # index drives an explicit per-layer fetch (same schedule:
-            # fetch at the top of the consuming iteration)
+            # fetch at the top of the consuming iteration).  A gated
+            # (``active``) xla relay routes here too: the cond needs the
+            # layer index the native-xs path never sees.
             def stop_body(carry, scan_x):
                 i, x = scan_x
-                return body(carry, fetch(i, 1), x)
+                return call_body(carry, fetch(i, 1), x, i)
 
             carry, ys_main = jax.lax.scan(stop_body, init, (idxs, xs),
                                           reverse=reverse, unroll=unroll)
@@ -235,7 +289,7 @@ def relay_scan(body: Callable, init, streams: Sequence[Stream], *,
                     i, x = scan_x
                     carry, ring = carry_ring
                     fetched = fetch(nxt(i) * G, G)
-                    carry, ys = body(carry, ring[0], x)
+                    carry, ys = call_body(carry, ring[0], x, i)
                     return (carry, ring[1:] + (fetched,)), ys
 
                 scan_xs = (idxs, xs)
@@ -270,6 +324,93 @@ def _combine_ys(ys_main, ys_rem, n_full_stops: int, group: int):
         return ys_main if ys_rem is None else ys_rem
     flat = jax.tree.map(
         lambda a: a.reshape((n_full_stops * group,) + a.shape[2:]), ys_main)
+    if ys_rem is None:
+        return flat
+    return jax.tree.map(lambda a, b: jnp.concatenate([a, b], axis=0),
+                        flat, ys_rem)
+
+
+# ===========================================================================
+# Segment-major driver: ONE scan over the stash segments
+# ===========================================================================
+def segment_scan(seg_body: Callable, init, *, n_layers: int, every: int,
+                 xs=None, xs_rem=None, reverse: bool = False,
+                 n_active=None, unroll=False):
+    """Drive ``seg_body`` over the ``segment_bounds(n_layers, every)``
+    stash segments through ONE ``lax.scan`` — the program stops growing
+    with depth.
+
+    The historical constant-memory stash (``ExecutionConfig.stash_every``
+    = K > 1) unrolled one relay per segment per phase: ~3·ceil(N/K) scan
+    instances in the lowered train step, so trace/compile time and
+    program size grew linearly with depth.  Here the ``N // K`` full
+    segments ride one outer scan whose carry walks the segment schedule
+    (the segment start is ``si * K``, a traced index feeding
+    ``group_slice``'s dynamic slices), and the short remainder segment
+    (``N mod K`` layers — a different trip count, hence a different
+    program) runs OUTSIDE the scan: after it on a forward walk, before
+    it on a reverse walk, exactly where the unrolled schedule placed it.
+
+    ``seg_body(carry, start, size, x_seg, window) -> (carry, ys)``:
+
+    * ``start`` — traced index of the segment's first layer,
+    * ``size``  — STATIC segment length (K, or the remainder),
+    * ``x_seg`` — this segment's slice of ``xs`` (scanned segments) /
+      ``xs_rem`` (the remainder); None when not provided,
+    * ``window`` — None, or a traced ``(lo, hi)`` local active-row
+      window (``n_active`` mode) to forward to ``relay_scan(active=...)``.
+
+    ``n_active`` (a traced layer count) gates segments for runtime-
+    dynamic depth: every segment gets ``window = (0, clip(n_active -
+    start, 0, K))``.  Dynamic bounds cannot split a remainder out of the
+    scan (the split point would be value-dependent), so ``n_active``
+    requires ``every`` to divide ``n_layers`` — the CAPACITY depth;
+    the runtime depth may land anywhere inside a segment.
+
+    Returns ``(carry, ys_scan, ys_rem)``: the scanned segments' stacked
+    ys (leading axis = number of full segments) and the remainder's ys
+    (None when there is no remainder).  Per-layer ys flatten back to
+    layer order with ``flatten_segments``.
+    """
+    n = int(n_layers)
+    K = min(max(1, int(every)), n)
+    S = n // K                    # full segments covered by the scan
+    R = n - S * K                 # short remainder segment (< K layers)
+    if n_active is not None:
+        assert R == 0, \
+            f"dynamic depth needs stash_every ({K}) to divide the " \
+            f"capacity depth ({n})"
+
+    def window(si):
+        if n_active is None:
+            return None
+        return (jnp.int32(0), jnp.clip(n_active - si * K, 0, K))
+
+    def scan_body(carry, scan_x):
+        si, x_seg = scan_x
+        return seg_body(carry, si * K, K, x_seg, window(si))
+
+    carry, ys_rem = init, None
+    if reverse and R:
+        carry, ys_rem = seg_body(carry, S * K, R, xs_rem, None)
+    ys_scan = None
+    if S:
+        carry, ys_scan = jax.lax.scan(
+            scan_body, carry, (jnp.arange(S), xs), reverse=reverse,
+            unroll=unroll)
+    if not reverse and R:
+        carry, ys_rem = seg_body(carry, S * K, R, xs_rem, None)
+    return carry, ys_scan, ys_rem
+
+
+def flatten_segments(ys_scan, ys_rem):
+    """(S, K, ...) segment-scanned per-layer ys + (R, ...) remainder ys
+    -> (N, ...) in layer order (either side may be None)."""
+    if ys_scan is None:
+        return ys_rem
+    flat = jax.tree.map(
+        lambda a: a.reshape((a.shape[0] * a.shape[1],) + a.shape[2:]),
+        ys_scan)
     if ys_rem is None:
         return flat
     return jax.tree.map(lambda a, b: jnp.concatenate([a, b], axis=0),

@@ -77,6 +77,29 @@ class ExecutionConfig:
     # costing one extra layer-forward for K-1 of every K layers.  K = 1 is
     # the historical stash-every-boundary schedule, byte-for-byte.
     stash_every: int = 1
+    # --- scan over segments ----------------------------------------------
+    # How the K > 1 stash segments become a program: True (default) drives
+    # all of them through ONE outer lax.scan per phase (core/relay.py
+    # ``segment_scan`` — a traced segment start feeds dynamic slices, the
+    # short N-mod-K remainder runs outside the scan), so the lowered train
+    # step holds an O(1)-in-depth number of relay/scan instances; False
+    # re-emits the historical unrolled per-segment relays (~3·ceil(N/K)
+    # scan instances) for compile-time A/Bs (benchmarks/fig_compile.py).
+    # Bit-identical results either way (tests/test_stash.py runs the
+    # whole grid against both).
+    segment_scan: bool = True
+    # --- runtime-dynamic depth -------------------------------------------
+    # Depth as a RUNTIME value: the jitted step/grads/prefill/decode take
+    # an extra traced ``n_layers`` operand (<= the config's capacity
+    # depth); layers past it pass activations through untouched and keep
+    # their params/optimizer rows bit-identical, under per-layer
+    # ``lax.cond`` gating inside the relays (``relay_scan(active=...)``).
+    # ONE compiled program serves every depth — zero recompiles while a
+    # NAS loop grows the model (examples/nas_depth_growth.py) or a sweep
+    # walks depths (examples/depth_scaling.py).  Single-group models
+    # only; with stash_every = K > 1 the capacity depth must be a
+    # multiple of K (the remainder split would be value-dependent).
+    dynamic_depth: bool = False
     # --- relay pipelining -------------------------------------------------
     # 0 = fetch a relay stop's weights at the top of its own scan
     #     iteration (the copy is serialized with the stop's compute);
@@ -164,6 +187,9 @@ class ExecutionConfig:
         assert self.stash_every >= 1, \
             "stash_every: K >= 1 layers per stashed boundary " \
             "(1 = stash every layer boundary)"
+        assert self.segment_scan or not self.dynamic_depth, \
+            "dynamic_depth needs the segment-scan driver (a traced " \
+            "depth cannot gate unrolled per-segment programs)"
         assert self.tiers in (2, 3), \
             "tiers: 2 = HBM <- pinned host, 3 = + mmap/NVMe segment store"
         assert self.host_budget_bytes >= 0

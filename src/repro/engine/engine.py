@@ -222,26 +222,50 @@ class Engine:
         return state, step
 
     # -- training -----------------------------------------------------------
+    # -- runtime-dynamic depth ---------------------------------------------
+    def _depth_operand(self, n_layers):
+        """The traced int32 depth operand for a dynamic-depth call
+        (defaults to the capacity depth); asserts the knob elsewhere."""
+        import jax.numpy as jnp
+        if not self.exec_cfg.dynamic_depth:
+            assert n_layers is None, \
+                "n_layers needs ExecutionConfig.dynamic_depth"
+            return None
+        cap = sum(g.n_layers for g in self.model.groups)
+        n = cap if n_layers is None else int(n_layers)
+        assert 0 <= n <= cap, f"n_layers {n} exceeds capacity {cap}"
+        return jnp.asarray(n, jnp.int32)
+
     @property
     def step_fn(self):
-        """Unjitted (state, batch) -> (state, metrics) — for callers that
-        manage jit/shardings themselves (dry-run lowering)."""
+        """Unjitted (state, batch[, n_layers]) -> (state, metrics) — for
+        callers that manage jit/shardings themselves (dry-run lowering).
+        With ``dynamic_depth`` the traced ``n_layers`` operand is part of
+        the signature: one compiled program serves every depth."""
         if "step_fn" not in self._fns:
             kernel = self._make_step_kernel()
 
-            def step(state: TrainState, batch):
-                new_p, new_o, metrics = kernel(state.params,
-                                               state.legacy_opt(), batch)
-                return TrainState.from_legacy(new_p, new_o), metrics
+            if self.exec_cfg.dynamic_depth:
+                def step(state: TrainState, batch, n_layers):
+                    new_p, new_o, metrics = kernel(
+                        state.params, state.legacy_opt(), batch, n_layers)
+                    return TrainState.from_legacy(new_p, new_o), metrics
+            else:
+                def step(state: TrainState, batch):
+                    new_p, new_o, metrics = kernel(
+                        state.params, state.legacy_opt(), batch)
+                    return TrainState.from_legacy(new_p, new_o), metrics
 
             self._fns["step_fn"] = step
         return self._fns["step_fn"]
 
-    def train_step(self, state: TrainState, batch):
+    def train_step(self, state: TrainState, batch, n_layers=None):
         """One optimizer step: (state, batch) -> (state, metrics).  With
         the storage tier the demoted cold rows are staged in from the
         segment store before the jitted step and the updated rows staged
-        back out (verified, crash-consistent) after it."""
+        back out (verified, crash-consistent) after it.  With
+        ``dynamic_depth``, ``n_layers`` (<= capacity, default capacity)
+        picks the runtime depth without retracing."""
         if "train_step" not in self._fns:
             donate = (0,) if self._donate else ()
             self._fns["train_step"] = jax.jit(self.step_fn,
@@ -249,7 +273,9 @@ class Engine:
         tier = self.tier
         if tier is not None:
             state = tier.stage_in(state)
-        state, metrics = self._fns["train_step"](state, batch)
+        n_op = self._depth_operand(n_layers)
+        args = (state, batch) if n_op is None else (state, batch, n_op)
+        state, metrics = self._fns["train_step"](*args)
         if tier is not None:
             state = tier.stage_out(state)
         return state, metrics
@@ -262,12 +288,14 @@ class Engine:
             self._fns["grads_fn"] = self._make_grads_kernel()
         return self._fns["grads_fn"]
 
-    def grads(self, state_or_params, batch):
+    def grads(self, state_or_params, batch, n_layers=None):
         if "grads" not in self._fns:
             self._fns["grads"] = jax.jit(self.grads_fn)
         params = getattr(state_or_params, "params", state_or_params)
+        n_op = self._depth_operand(n_layers)
+        args = () if n_op is None else (n_op,)
         return self._fns["grads"](
-            self._relay_params(self._materialize(params)), batch)
+            self._relay_params(self._materialize(params)), batch, *args)
 
     # -- inference ----------------------------------------------------------
     @property
@@ -278,12 +306,14 @@ class Engine:
                 self.model, self.exec_cfg, self.placements)
         return self._fns["prefill_fn"]
 
-    def prefill(self, state_or_params, batch):
+    def prefill(self, state_or_params, batch, n_layers=None):
         if "prefill" not in self._fns:
             self._fns["prefill"] = jax.jit(self.prefill_fn)
         params = getattr(state_or_params, "params", state_or_params)
+        n_op = self._depth_operand(n_layers)
+        args = () if n_op is None else (n_op,)
         return self._fns["prefill"](
-            self._relay_params(self._materialize(params)), batch)
+            self._relay_params(self._materialize(params)), batch, *args)
 
     @property
     def decode_step_fn(self):
@@ -294,22 +324,26 @@ class Engine:
         return self._fns["decode_step_fn"]
 
     def decode_init(self, state_or_params, tokens, live_seq: int,
-                    frames=None):
+                    frames=None, n_layers=None):
         """Prefill the decode caches from a prompt.
         Returns (caches, last_logits)."""
         params = getattr(state_or_params, "params", state_or_params)
         return _decode.prefill(self.model,
                                self._relay_params(self._materialize(params)),
                                tokens, live_seq,
-                               exec_cfg=self.exec_cfg, frames=frames)
+                               exec_cfg=self.exec_cfg, frames=frames,
+                               n_layers=n_layers)
 
-    def decode_step(self, state_or_params, caches, token, cur_pos):
+    def decode_step(self, state_or_params, caches, token, cur_pos,
+                    n_layers=None):
         if "decode_step" not in self._fns:
             self._fns["decode_step"] = jax.jit(self.decode_step_fn)
         params = getattr(state_or_params, "params", state_or_params)
+        n_op = self._depth_operand(n_layers)
+        args = () if n_op is None else (n_op,)
         return self._fns["decode_step"](
             self._relay_params(self._materialize(params)), caches,
-            token, cur_pos)
+            token, cur_pos, *args)
 
     # -- continuous-batching serve ------------------------------------------
     def serve_session(self, state_or_params, serve_cfg=None, **kw):
@@ -352,6 +386,7 @@ class Engine:
         kw.setdefault("n_microbatches", self.exec_cfg.n_microbatches)
         kw.setdefault("offload_stash", self.exec_cfg.offload_stash)
         kw.setdefault("stash_every", self.exec_cfg.stash_every)
+        kw.setdefault("segment_scan", self.exec_cfg.segment_scan)
         kw.setdefault("prefetch_depth", self.exec_cfg.prefetch_depth)
         kw.setdefault("pack_params", self.exec_cfg.pack_params)
         kw.setdefault("layers_per_relay", self.exec_cfg.layers_per_relay)
@@ -378,10 +413,11 @@ class BaselineEngine(Engine):
 
     def _normalize_cfg(self, exec_cfg):
         # conventional execution has no relay — the packed flat-buffer
-        # layout and the pallas copy transport are L2L concerns; the
-        # baseline kernels speak pytrees and never issue relay copies
+        # layout, the pallas copy transport and the relay's runtime-
+        # dynamic depth gating are L2L concerns; the baseline kernels
+        # speak pytrees and never issue relay copies
         return dataclasses.replace(exec_cfg, pack_params=False,
-                                   transport="xla")
+                                   transport="xla", dynamic_depth=False)
 
     @property
     def memory_mode(self):

@@ -211,6 +211,15 @@ def build(arch: str, shape_name: str, mesh, *, variant: str = "full",
             "exec": dataclasses.asdict(eng.exec_cfg),
             "mesh": dict(mesh.shape)}
 
+    # runtime-dynamic depth: the jitted programs take one extra traced
+    # n_layers operand (replicated i32 scalar) — append it to every
+    # abstract signature so the dry-run lowers the SAME program the
+    # NAS/depth-sweep loops call at every depth
+    dyn_args, dyn_sh = (), ()
+    if exec_cfg.dynamic_depth:
+        dyn_args = (jax.ShapeDtypeStruct((), jnp.int32),)
+        dyn_sh = (NamedSharding(mesh, P()),)
+
     if shape.kind == "train":
         state_abs = eng.abstract_state()
         opt_sh = _opt_shardings_legacy(param_sh,
@@ -218,15 +227,15 @@ def build(arch: str, shape_name: str, mesh, *, variant: str = "full",
         state_sh = TrainState.from_legacy(param_sh, opt_sh)
         batch_abs = _batch_abstract(cfg, shape)
         batch_sh = _batch_shardings(cfg, shape, mesh, rules)
-        return BuiltStep(eng.step_fn, (state_abs, batch_abs),
-                         (state_sh, batch_sh),
+        return BuiltStep(eng.step_fn, (state_abs, batch_abs) + dyn_args,
+                         (state_sh, batch_sh) + dyn_sh,
                          (state_sh, None), meta)
 
     if shape.kind == "prefill":
         batch_abs = _batch_abstract(cfg, shape)
         batch_sh = _batch_shardings(cfg, shape, mesh, rules)
-        return BuiltStep(eng.prefill_fn, (params_abs, batch_abs),
-                         (param_sh, batch_sh), None, meta)
+        return BuiltStep(eng.prefill_fn, (params_abs, batch_abs) + dyn_args,
+                         (param_sh, batch_sh) + dyn_sh, None, meta)
 
     # decode
     from repro.core import decode as dec
@@ -245,8 +254,8 @@ def build(arch: str, shape_name: str, mesh, *, variant: str = "full",
     token_sh = NamedSharding(mesh, P(rules.get("batch")))
     pos_sh = NamedSharding(mesh, P())
     return BuiltStep(eng.decode_step_fn,
-                     (params_abs, caches_abs, token_abs, pos_abs),
-                     (param_sh, cache_sh, token_sh, pos_sh),
+                     (params_abs, caches_abs, token_abs, pos_abs) + dyn_args,
+                     (param_sh, cache_sh, token_sh, pos_sh) + dyn_sh,
                      (None, cache_sh), meta)
 
 

@@ -63,7 +63,11 @@ def parse_collective_bytes(hlo_text: str) -> dict:
     return out
 
 
-def cost_get(ca: dict, key: str) -> float:
+def cost_get(ca, key: str) -> float:
+    # jax returns cost_analysis() as a dict on recent versions, a
+    # one-element list of dicts on older ones — accept both
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else None
     return float(ca.get(key, 0.0)) if ca else 0.0
 
 
@@ -118,7 +122,11 @@ def probe_costs(arch, shape_name, mesh, variant, exec_overrides,
     full = group_depths(cfg)
     G = len(full)
     probe_exec = dict(exec_overrides or {})
-    probe_exec.update(n_microbatches=1, unroll_layers=True)
+    # the probes compile tiny unrolled depths for cost extrapolation —
+    # depth gating is irrelevant there (and depth-1 probes violate the
+    # dynamic_depth capacity/K divisibility), so probe statically
+    probe_exec.update(n_microbatches=1, unroll_layers=True,
+                      dynamic_depth=False)
     base_depths = tuple(1 for _ in full)
     probes = [base_depths] + [
         tuple(2 if j == i else 1 for j in range(G)) for i in range(G)]
@@ -298,6 +306,25 @@ def main():
                          "(kernels/relay_copy) instead of scan-boundary "
                          "device_puts — for A/B of the emitted "
                          "copy/compute overlap structure")
+    ap.add_argument("--n-layers", type=int, default=None,
+                    help="override the arch's depth (layers of the main/"
+                         "decoder group) — for depth sweeps of the "
+                         "compiled program; the tag gains a -nN suffix "
+                         "so sweep records never collide")
+    ap.add_argument("--dynamic-depth", type=int, default=None,
+                    choices=[0, 1],
+                    help="override ExecutionConfig.dynamic_depth (build "
+                         "default 0): 1 compiles the runtime-depth "
+                         "program — the step takes a traced n_layers "
+                         "operand and ONE compile serves every depth <= "
+                         "capacity (single-group archs; tag suffix -dyn)")
+    ap.add_argument("--segment-scan", type=int, default=None,
+                    choices=[0, 1],
+                    help="override ExecutionConfig.segment_scan (build "
+                         "default 1): 0 compiles the historical unrolled "
+                         "per-segment program (~3*ceil(N/K) relay "
+                         "instances) for compile-time A/Bs against the "
+                         "O(1)-in-depth segment-scan driver")
     ap.add_argument("--tiers", type=int, default=None, choices=[2, 3],
                     help="override ExecutionConfig.tiers (build default "
                          "2): 3 enables the storage-tier EPS — the cold "
@@ -308,8 +335,11 @@ def main():
                          "the recorded exec metadata + the memory "
                          "model's host/disk byte split")
     args = ap.parse_args()
-    cfg_patch = ({"grouped_decode_attn": True, "moe_ep_constraint": True}
-                 if args.optimized else None)
+    cfg_patch = dict({"grouped_decode_attn": True, "moe_ep_constraint": True}
+                     if args.optimized else {})
+    if args.n_layers is not None:
+        cfg_patch["n_layers"] = args.n_layers
+    cfg_patch = cfg_patch or None
     exec_overrides = {}
     if args.prefetch is not None:
         exec_overrides["prefetch_depth"] = args.prefetch
@@ -323,6 +353,10 @@ def main():
         exec_overrides["tiers"] = args.tiers
     if args.transport is not None:
         exec_overrides["transport"] = args.transport
+    if args.dynamic_depth is not None:
+        exec_overrides["dynamic_depth"] = bool(args.dynamic_depth)
+    if args.segment_scan is not None:
+        exec_overrides["segment_scan"] = bool(args.segment_scan)
     exec_overrides = exec_overrides or None
     if args.optimized and args.tag == "baseline":
         args.tag = "optimized"
@@ -343,6 +377,15 @@ def main():
         args.tag += f"-t{args.tiers}"
     if args.transport == "pallas":
         args.tag += "-xcopy"
+    # depth sweeps and dynamic-depth / unrolled-program A/Bs get their own
+    # record directories too — two runs differing only in depth (or only
+    # in the program driver) must never overwrite each other
+    if args.n_layers is not None:
+        args.tag += f"-n{args.n_layers}"
+    if args.dynamic_depth == 1:
+        args.tag += "-dyn"
+    if args.segment_scan == 0:
+        args.tag += "-unrolled"
 
     archs = list_archs() if args.arch == "all" else args.arch.split(",")
     archs = [a for a in archs if a != "bert-large"]

@@ -134,6 +134,14 @@ def main(argv=None):
     ap.add_argument("--d-model", type=int, default=0,
                     help="override width (e.g. ~100M model)")
     ap.add_argument("--n-layers", type=int, default=0)
+    ap.add_argument("--dynamic-depth", action="store_true",
+                    help="depth as a RUNTIME value: the jitted step takes "
+                         "a traced n_layers operand (--run-layers, default "
+                         "the full capacity depth), so one compiled "
+                         "program serves every depth <= capacity")
+    ap.add_argument("--run-layers", type=int, default=0,
+                    help="with --dynamic-depth: the runtime depth operand "
+                         "(0 = the config's capacity depth)")
     args = ap.parse_args(argv)
 
     # historical CLI: "--engine l2l" means the eager L2L-p schedule unless
@@ -175,8 +183,13 @@ def main(argv=None):
         tier_dir=args.tier_dir,
         host_optimizer=args.host_optimizer,
         skip_nonfinite=args.skip_nonfinite,
+        dynamic_depth=args.dynamic_depth,
         clip_mode="per_layer" if args.clip > 0 else "none",
         clip_norm=args.clip)
+    if args.run_layers and not args.dynamic_depth:
+        ap.error("--run-layers needs --dynamic-depth")
+    run_layers = ((args.run_layers or cfg.n_layers)
+                  if args.dynamic_depth else None)
     eng = engines.create(engine_name, cfg, exec_cfg, optimizer=opt)
     print(f"arch={cfg.name} engine={eng.name} params="
           f"{cfg.param_count()/1e6:.1f}M layers={cfg.n_layers} "
@@ -234,14 +247,19 @@ def main(argv=None):
         rng = np.random.default_rng((args.seed, i))
         batch_np = add_modality_stubs(data.batch(i), cfg, rng)
         batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
-        state, metrics = eng.train_step(state, batch)
+        if run_layers is None:
+            state, metrics = eng.train_step(state, batch)
+        else:
+            state, metrics = eng.train_step(state, batch, run_layers)
         loss = float(metrics["loss"])
         losses.append(loss)
         skipped += int(metrics.get("skipped_steps", 0))
         if first:
-            # first step includes the jit compile: report it separately
-            # and restart the s/step clock so the average is steady-state
-            # only.
+            # the FIRST EXECUTED step includes the jit compile — on a
+            # fresh run and equally on a --resume run, whose new process
+            # re-jits on its first step: report it separately on both
+            # paths and restart the s/step clock so the average is
+            # steady-state only.
             first = False
             compile_s = time.time() - t0
             t0 = time.time()
@@ -270,6 +288,7 @@ def main(argv=None):
                     json.dump({"step": i + 1, "signal": int(stop["sig"]),
                                "total_steps": args.steps}, f)
             break
+    t_loop_end = time.time()
     for s, h in old_handlers.items():
         signal.signal(s, h)
     # final save — exactly once even when steps is divisible by
@@ -280,11 +299,17 @@ def main(argv=None):
         marker = os.path.join(args.ckpt_dir, PREEMPT_MARKER)
         if os.path.exists(marker):
             os.remove(marker)
+    # steady-state s/step over the post-compile steps THIS process ran
+    # (len(losses) counts executed steps: a resumed run starts empty)
+    steady = (round((t_loop_end - t0) / (len(losses) - 1), 4)
+              if len(losses) > 1 else None)
     print(json.dumps({"final_loss": losses[-1] if losses else None,
                       "mean_last10": (float(np.mean(losses[-10:]))
                                       if losses else None),
                       "initial_loss": losses[0] if losses else None,
                       "compile_s": round(compile_s, 2),
+                      "steady_s_per_step": steady,
+                      "run_layers": run_layers,
                       "steps": args.steps,
                       "final_step": int(state.step),
                       "resumed_from": resumed_from,

@@ -1,0 +1,130 @@
+"""Compile-shape regression tests for the scan-over-segments driver.
+
+The K > 1 stash schedule historically unrolled one relay per segment per
+phase, so the lowered train step held ~3*ceil(N/K) scan instances and
+trace/compile time grew linearly with depth.  ``segment_scan`` drives all
+of a phase's segments through ONE outer lax.scan; these tests pin the
+resulting invariant — the lowered program's while/scan instance count
+does not depend on depth — and the dynamic-depth identity built on it.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_batch
+from repro import engine as engines
+from repro.configs.base import get_config
+from repro.core.schedule import ExecutionConfig
+from repro.optim import adam
+
+
+def _cfg(n_layers):
+    return get_config("bert-large", "smoke").replace(dtype="float32",
+                                                     n_layers=n_layers)
+
+
+def _while_count(eng, cfg):
+    """Count while/scan instances in the lowered (uncompiled) step."""
+    state = eng.abstract_state()
+    batch = jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(np.shape(a), a.dtype),
+        make_batch(cfg, 4, 8))
+    hlo = jax.jit(eng.step_fn).lower(state, batch).as_text()
+    return hlo.count("stablehlo.while")
+
+
+@pytest.mark.parametrize("name", ["l2l", "l2l-p"])
+def test_while_count_is_depth_invariant(name):
+    """Depth 8 and depth 64 lower to the SAME number of scan instances
+    (K > 1, G > 1, prefetch on): the program is O(1) in depth.  The
+    constant depends only on N mod K — the short remainder runs as a
+    static program outside the outer scan — never on N itself."""
+    ec = ExecutionConfig(n_microbatches=2, stash_every=2,
+                         layers_per_relay=2, prefetch_depth=1)
+    counts = {}
+    for n in (8, 64):
+        cfg = _cfg(n)
+        eng = engines.create(name, cfg, ec, optimizer=adam(), donate=False)
+        counts[n] = _while_count(eng, cfg)
+    assert counts[8] == counts[64], counts
+
+
+def test_while_count_same_remainder_and_bounded():
+    """K = 3 leaves remainder segments: equal N mod K -> equal count
+    (8 vs 11), and a different remainder never lowers MORE instances at
+    the deeper depth (8 vs 64) — no depth-proportional growth."""
+    ec = ExecutionConfig(n_microbatches=2, stash_every=3,
+                         layers_per_relay=2, prefetch_depth=1)
+    counts = {}
+    for n in (8, 11, 64):
+        cfg = _cfg(n)
+        eng = engines.create("l2l-p", cfg, ec, optimizer=adam(),
+                             donate=False)
+        counts[n] = _while_count(eng, cfg)
+    assert counts[8] == counts[11], counts      # same remainder (2)
+    assert counts[64] <= counts[8], counts      # remainder 1: no growth
+
+
+def test_unrolled_program_grows_with_depth():
+    """The historical unrolled driver (segment_scan=False) emits more
+    scan instances at the deeper depth — the depth-proportional blowup
+    the segment scan removes (kept compilable as the A/B baseline)."""
+    ec = ExecutionConfig(n_microbatches=2, stash_every=3,
+                         layers_per_relay=2, segment_scan=False)
+    counts = {}
+    for n in (6, 12):
+        cfg = _cfg(n)
+        eng = engines.create("l2l-p", cfg, ec, optimizer=adam(),
+                             donate=False)
+        counts[n] = _while_count(eng, cfg)
+    assert counts[12] > counts[6], counts
+
+
+def test_dynamic_depth_grads_bitwise_vs_static():
+    """grads(params, batch, n) under dynamic_depth == the static depth-n
+    program's grads BITWISE on the active rows, zeros on the tail rows."""
+    CAP, n, K = 4, 3, 2
+    cfg_cap = _cfg(CAP)
+    batch = make_batch(cfg_cap, 4, 8)
+    dyn = ExecutionConfig(n_microbatches=2, stash_every=K,
+                          layers_per_relay=2, prefetch_depth=1,
+                          dynamic_depth=True)
+    e_dyn = engines.create("l2l-p", cfg_cap, dyn, optimizer=adam(),
+                           donate=False)
+    params = e_dyn.model.init_params(jax.random.PRNGKey(0))
+    loss_d, g_d = e_dyn.grads(params, batch, n)
+
+    stat = ExecutionConfig(n_microbatches=2, stash_every=K,
+                           layers_per_relay=2, prefetch_depth=1)
+    e_st = engines.create("l2l-p", _cfg(n), stat, optimizer=adam(),
+                          donate=False)
+    params_n = {"embed": params["embed"], "head": params["head"],
+                "groups": tuple(jax.tree.map(lambda a: a[:n], g)
+                                for g in params["groups"])}
+    loss_s, g_s = e_st.grads(params_n, batch)
+
+    assert float(loss_d) == float(loss_s)
+    act = {"embed": g_d["embed"], "head": g_d["head"],
+           "groups": tuple(jax.tree.map(lambda a: a[:n], g)
+                           for g in g_d["groups"])}
+    for a, b in zip(jax.tree.leaves(act), jax.tree.leaves(g_s)):
+        assert bool(jnp.all(a == b))
+    for t in jax.tree.leaves(tuple(jax.tree.map(lambda a: a[n:], g)
+                                   for g in g_d["groups"])):
+        assert bool(jnp.all(t == 0))
+
+
+def test_dynamic_depth_one_compile_many_depths():
+    """ONE jitted program serves every runtime depth: growing n_layers
+    across calls adds no cache entries (the zero-recompile NAS loop)."""
+    CAP = 4
+    cfg = _cfg(CAP)
+    batch = make_batch(cfg, 4, 8)
+    ec = ExecutionConfig(n_microbatches=2, stash_every=2,
+                         dynamic_depth=True)
+    eng = engines.create("l2l-p", cfg, ec, optimizer=adam(), donate=False)
+    params = eng.model.init_params(jax.random.PRNGKey(0))
+    losses = [float(eng.grads(params, batch, n)[0]) for n in (2, 3, 4)]
+    assert len(set(losses)) == 3          # depths really differ
+    assert eng._fns["grads"]._cache_size() == 1

@@ -177,35 +177,63 @@ _FIXTURE_HC = [hc for hc in [getattr(HealthCheck, "function_scoped_fixture",
 @given(depth=st.integers(2, 6), stash_every=st.integers(1, 8),
        group=st.integers(1, 4), prefetch=st.integers(0, 2),
        pack=st.booleans(), transport=st.sampled_from(["xla", "pallas"]),
-       seed=st.integers(0, 2 ** 31 - 1))
+       dynamic=st.booleans(), seed=st.integers(0, 2 ** 31 - 1))
 def test_l2l_engine_matches_baseline_random_schedule(
         make_engine, depth, stash_every, group, prefetch, pack, transport,
-        seed):
+        dynamic, seed):
     """The whole execution-schedule knob space is gradient-preserving:
     for random (depth, K, G, prefetch_depth, pack_params, transport)
     tuples — K and G free to exceed the depth, depths free to leave
     remainder segments and remainder relay stops, slots free to move via
     device_put or the Pallas DMA copy kernel — the l2l engine's grads on
-    a random batch match the baseline reference engine's.  Today's
-    kernel/optimizer invariants above never run a full engine step; this
-    one does."""
+    a random batch match the baseline reference engine's.  When
+    ``dynamic`` is drawn, a dynamic_depth engine at capacity
+    K*ceil(depth/K) additionally runs the SAME depth as a runtime operand
+    and must match the static-depth program BITWISE on the active rows
+    (zeros on the tail).  Today's kernel/optimizer invariants above never
+    run a full engine step; this one does."""
     from conftest import make_batch
     from repro.configs.base import get_config
     from repro.core.schedule import ExecutionConfig
-    cfg = get_config("bert-large", "smoke").replace(dtype="float32",
-                                                    n_layers=depth)
+    cfg_full = get_config("bert-large", "smoke").replace(dtype="float32")
+    cap = stash_every * -(-depth // stash_every)
+    params_cap = make_engine(
+        "l2l", cfg=cfg_full.replace(n_layers=cap),
+        exec_cfg=ExecutionConfig()).model.init_params(
+            jax.random.PRNGKey(seed))
+    cfg = cfg_full.replace(n_layers=depth)
+    params = {"embed": params_cap["embed"], "head": params_cap["head"],
+              "groups": tuple(jax.tree.map(lambda a: a[:depth], g)
+                              for g in params_cap["groups"])}
     e_base = make_engine("baseline", cfg=cfg,
                          exec_cfg=ExecutionConfig(n_microbatches=2))
     e_l2l = make_engine("l2l", cfg=cfg, exec_cfg=ExecutionConfig(
         n_microbatches=2, stash_every=stash_every, layers_per_relay=group,
         prefetch_depth=prefetch, pack_params=pack, transport=transport))
-    params = e_base.model.init_params(jax.random.PRNGKey(seed))
     batch = make_batch(cfg, 4, 8, seed=seed)
     loss_b, gb = e_base.grads(params, batch)
     loss_l, gl = e_l2l.grads(params, batch)
     assert abs(float(loss_b) - float(loss_l)) < 1e-4
     errs = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))), gb, gl)
     assert max(jax.tree.leaves(errs)) < 1e-4
+    if dynamic:
+        e_dyn = make_engine(
+            "l2l", cfg=cfg_full.replace(n_layers=cap),
+            exec_cfg=ExecutionConfig(
+                n_microbatches=2, stash_every=stash_every,
+                layers_per_relay=group, prefetch_depth=prefetch,
+                pack_params=pack, transport=transport,
+                dynamic_depth=True))
+        loss_d, gd = e_dyn.grads(params_cap, batch, depth)
+        assert float(loss_d) == float(loss_l)
+        act = {"embed": gd["embed"], "head": gd["head"],
+               "groups": tuple(jax.tree.map(lambda a: a[:depth], g)
+                               for g in gd["groups"])}
+        for a, b in zip(jax.tree.leaves(act), jax.tree.leaves(gl)):
+            assert bool(jnp.all(a == b))
+        for t in jax.tree.leaves(tuple(jax.tree.map(lambda a: a[depth:], g)
+                                       for g in gd["groups"])):
+            assert bool(jnp.all(t == 0))
 
 
 # ---------------------------------------------------------------------------
